@@ -1,0 +1,75 @@
+"""Shared benchmark harness: dataset prep, parameter scaling, exact-graph
+caching, timing.
+
+Scale rationale (documented in EXPERIMENTS.md): the paper's datasets run
+minutes on an 8-thread Xeon; this container has ONE core, so benchmarks
+default to user-count scales that keep the whole suite under ~20 min
+while preserving each dataset's item universe, profile statistics and
+density class. C² parameters are scaled to preserve the paper's
+*occupancy ratios*: b ≈ n/16 (paper: 70k/4096 ≈ 17 users/cluster) and
+N ≈ 3% of n (paper: 2000/70k). k defaults to 10 (paper: 30) — at these
+user counts k=30 would be ~1% of the whole dataset per neighborhood.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.params import C2Params, params_for
+from repro.data.synthetic import make_dataset
+from repro.knn.brute_force import brute_force_knn
+from repro.sketch.goldfinger import fingerprint_dataset, incidence_fingerprint
+from repro.types import KNNGraph
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+CACHE = ART / "bench_cache"
+
+# Per-dataset user-count scale (full item universes preserved).
+BENCH_SCALES = {
+    "ml1M": 0.35, "ml10M": 0.06, "ml20M": 0.02,
+    "AM": 0.055, "DBLP": 0.15, "GW": 0.15,
+}
+K_DEFAULT = 10
+
+
+def bench_params(name: str, n_users: int, k: int = K_DEFAULT,
+                 **overrides) -> C2Params:
+    base = params_for(name)
+    b = 1 << max(6, int(np.ceil(np.log2(max(n_users / 16, 1)))))
+    N = max(64, int(0.03 * n_users))
+    kw = dict(k=k, b=b, max_cluster=N)
+    kw.update(overrides)
+    return dataclasses.replace(base, **kw)
+
+
+def load(name: str, seed: int = 0):
+    ds = make_dataset(name, scale=BENCH_SCALES[name], seed=seed)
+    gf = fingerprint_dataset(ds)
+    return ds, gf
+
+
+def exact_graph(ds, gf=None, k: int = K_DEFAULT, tag: str = "gf"):
+    """Brute-force graph, cached on disk (the quality denominator)."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"exact_{ds.name.replace('@','_')}_{k}_{tag}.npz"
+    if f.exists():
+        z = np.load(f)
+        return KNNGraph(ids=z["ids"], sims=z["sims"]), float(z["t"])
+    gf = gf if gf is not None else (
+        incidence_fingerprint(ds) if tag == "raw" else fingerprint_dataset(ds))
+    t0 = time.perf_counter()
+    g = brute_force_knn(gf, k=k)
+    t = time.perf_counter() - t0
+    np.savez(f, ids=g.ids, sims=g.sims, t=t)
+    return g, t
+
+
+def emit(rows: list[dict], name: str):
+    """Write a benchmark table to artifacts + print CSV."""
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(rows, indent=2))
+    return rows

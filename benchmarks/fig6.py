@@ -1,0 +1,40 @@
+"""Fig. 6: sensitivity to the number of hash functions t and clusters b —
+time × quality curves on ml10M (dense) and AM (sparse)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import K_DEFAULT, bench_params, emit, exact_graph, load
+from repro.core.pipeline import cluster_and_conquer
+from repro.eval.metrics import quality
+
+DATASETS = ("ml10M", "AM")
+T_VALUES = (1, 2, 4, 8, 10)
+B_FACTORS = (0.25, 1.0, 4.0)  # × the scaled default b
+
+
+def run(datasets=DATASETS, k: int = K_DEFAULT):
+    rows = []
+    for name in datasets:
+        ds, gf = load(name)
+        exact, _ = exact_graph(ds, gf, k)
+        p0 = bench_params(name, ds.n_users, k)
+        for bf in B_FACTORS:
+            b = max(64, int(p0.b * bf))
+            for t in T_VALUES:
+                p = dataclasses.replace(p0, b=b, t=t)
+                t0 = time.perf_counter()
+                g, _ = cluster_and_conquer(ds, p, gf=gf)
+                el = time.perf_counter() - t0
+                q = quality(ds, g, exact)
+                rows.append({"dataset": ds.name, "b": b, "t": t,
+                             "time_s": round(el, 3), "quality": round(q, 4)})
+            print(f"[fig6] {name} b={b}: " + " ".join(
+                f"t={r['t']}:{r['time_s']:.1f}s/q{r['quality']:.3f}"
+                for r in rows[-len(T_VALUES):]))
+    return emit(rows, "fig6")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Fig. 7/8: recursive-splitting sensitivity — max cluster size N vs
+time/quality, plus the 100 biggest cluster sizes (ml10M strongly affected,
+AM nearly immune, per the paper's popularity-distribution argument)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import K_DEFAULT, bench_params, emit, exact_graph, load
+from repro.core.clustering import build_plan
+from repro.core.pipeline import cluster_and_conquer
+from repro.eval.metrics import quality
+
+DATASETS = ("ml10M", "AM")
+N_FACTORS = (0.25, 0.5, 1.0, 2.0, 4.0, 1e9)  # × scaled default N (∞ = off)
+
+
+def run(datasets=DATASETS, k: int = K_DEFAULT):
+    rows = []
+    for name in datasets:
+        ds, gf = load(name)
+        exact, _ = exact_graph(ds, gf, k)
+        p0 = bench_params(name, ds.n_users, k)
+        for nf in N_FACTORS:
+            N = int(min(p0.max_cluster * nf, 10**9))
+            p = dataclasses.replace(p0, max_cluster=N)
+            plan = build_plan(ds, p)
+            sizes = np.sort(plan.sizes)[::-1][:100]
+            t0 = time.perf_counter()
+            g, st = cluster_and_conquer(ds, p, gf=gf)
+            el = time.perf_counter() - t0
+            q = quality(ds, g, exact)
+            rows.append({
+                "dataset": ds.name, "N": N, "time_s": round(el, 3),
+                "quality": round(q, 4), "n_clusters": plan.n_clusters,
+                "max_cluster": int(sizes[0]),
+                "top100_sizes": sizes.tolist(),
+            })
+            print(f"[fig7_8] {name} N={N}: {el:.1f}s q={q:.3f} "
+                  f"max_cluster={sizes[0]} n_clusters={plan.n_clusters}")
+    return emit(rows, "fig7_8")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: the three GoldFinger-similarity paths on an
+all-pairs KNN tile (CPU wall time; the Pallas path runs in interpret mode
+here — its TPU performance is characterized structurally in §Roofline,
+this table establishes correctness-path overheads and the popcount-vs-MXU
+layout tradeoff on real data)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data.synthetic import make_dataset
+from repro.kernels.goldfinger_knn import ops as gk_ops
+from repro.kernels.goldfinger_knn import ref as gk_ref
+from repro.sketch.goldfinger import fingerprint_dataset
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n: int = 1024, k: int = 10):
+    ds = make_dataset("ml1M", scale=max(n / 6038, 0.01), seed=5)
+    gf = fingerprint_dataset(ds)
+    n = min(n, gf.n)
+    w = jnp.asarray(gf.words[:n])
+    c = jnp.asarray(gf.card[:n])
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    ref_j = jax.jit(lambda *a: gk_ref.knn_ref(*a, k=k))
+    t_ref = _time(ref_j, w, c, ids, w, c, ids)
+
+    from repro.sketch.goldfinger import jaccard_pairwise_mxu
+
+    def mxu_knn(w, c, ids):
+        sims = jaccard_pairwise_mxu(w, c, w, c)
+        sims = jnp.where(ids[None, :] == ids[:, None], -jnp.inf, sims)
+        return jax.lax.top_k(sims, k)
+
+    t_mxu = _time(jax.jit(mxu_knn), w, c, ids)
+    t_pal = _time(lambda *a: gk_ops.knn(*a, k=k), w, c, ids, w, c, ids)
+
+    rows = [
+        {"path": "jnp_popcount_ref", "n": n, "time_s": t_ref,
+         "us_per_pair": 1e6 * t_ref / (n * n)},
+        {"path": "jnp_mxu_bitplane", "n": n, "time_s": t_mxu,
+         "us_per_pair": 1e6 * t_mxu / (n * n)},
+        {"path": "pallas_interpret", "n": n, "time_s": t_pal,
+         "us_per_pair": 1e6 * t_pal / (n * n)},
+    ]
+    for r in rows:
+        print(f"[kernel] {r['path']:18s} n={n}: {r['time_s']*1e3:8.1f} ms "
+              f"({r['us_per_pair']:.4f} µs/pair)")
+    return emit(rows, "kernel_bench")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per table row) and
+writes full JSON tables to artifacts/.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small datasets only (CI-sized run)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table2,fig6")
+    args = ap.parse_args()
+
+    from benchmarks import fig6, fig7_8, kernel_bench, table2, table3, \
+        table4, table5
+
+    quick2 = ("ml1M", "DBLP") if args.quick else table2.DATASETS
+    quick3 = ("ml1M",) if args.quick else table3.DATASETS
+    quickp = ("ml10M",) if args.quick else ("ml10M", "AM")
+
+    jobs = {
+        "table2": lambda: table2.run(quick2),
+        "table3": lambda: table3.run(quick3),
+        "table4": lambda: table4.run(quickp),
+        "table5": lambda: table5.run(quickp),
+        "fig6": lambda: fig6.run(quickp),
+        "fig7_8": lambda: fig7_8.run(quickp),
+        "kernel": lambda: kernel_bench.run(512 if args.quick else 1024),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        jobs = {k: v for k, v in jobs.items() if k in keep}
+
+    csv = ["name,us_per_call,derived"]
+    for name, fn in jobs.items():
+        try:
+            rows = fn()
+        except Exception as e:  # keep the suite going; report the failure
+            print(f"[run] {name} FAILED: {e}", file=sys.stderr)
+            csv.append(f"{name},NaN,error:{type(e).__name__}")
+            continue
+        for r in rows:
+            t = r.get("time_s")
+            us = f"{t * 1e6:.0f}" if t is not None else ""
+            derived = r.get("quality", r.get("recall_c2",
+                            r.get("us_per_pair", r.get("delta", ""))))
+            label = "/".join(str(r.get(k)) for k in
+                             ("dataset", "algo", "mechanism", "path", "b",
+                              "t", "N") if r.get(k) is not None)
+            csv.append(f"{name}/{label},{us},{derived}")
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

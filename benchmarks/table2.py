@@ -1,0 +1,60 @@
+"""Table II: computation time + KNN quality, C² vs BruteForce / Hyrec /
+NNDescent / LSH on the six (statistics-matched synthetic) datasets.
+Speed-ups are reported against the best competing baseline, as in the
+paper."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (K_DEFAULT, bench_params, emit, exact_graph,
+                               load)
+from repro.core.pipeline import cluster_and_conquer
+from repro.eval.metrics import quality
+from repro.knn.greedy import hyrec, nndescent
+from repro.knn.lsh import lsh_knn
+
+DATASETS = ("ml1M", "ml10M", "ml20M", "AM", "DBLP", "GW")
+
+
+def run(datasets=DATASETS, k: int = K_DEFAULT):
+    rows = []
+    for name in datasets:
+        ds, gf = load(name)
+        exact, t_bf = exact_graph(ds, gf, k)
+        p = bench_params(name, ds.n_users, k)
+
+        def timed(fn):
+            t0 = time.perf_counter()
+            out = fn()
+            return out, time.perf_counter() - t0
+
+        (gh, _), th = timed(lambda: hyrec(gf, k=k))
+        (gn, _), tn = timed(lambda: nndescent(gf, k=k))
+        (gl, _), tl = timed(lambda: lsh_knn(ds, gf, k=k, t=min(p.t, 10)))
+        (gc, st), tc = timed(lambda: cluster_and_conquer(ds, p, gf=gf))
+
+        results = {
+            "BruteForce": (t_bf, 1.0),
+            "Hyrec": (th, quality(ds, gh, exact)),
+            "NNDescent": (tn, quality(ds, gn, exact)),
+            "LSH": (tl, quality(ds, gl, exact)),
+            "C2": (tc, quality(ds, gc, exact)),
+        }
+        best_baseline = min(th, tn, tl)
+        for algo, (t, q) in results.items():
+            rows.append({
+                "dataset": ds.name, "n_users": ds.n_users, "algo": algo,
+                "time_s": round(t, 3), "quality": round(q, 4),
+                "speedup_vs_best_baseline": round(best_baseline / t, 2)
+                if algo == "C2" else None,
+            })
+        print(f"[table2] {name}: BF {t_bf:.1f}s | Hyrec {th:.1f}s "
+              f"| NND {tn:.1f}s | LSH {tl:.1f}s | C2 {tc:.1f}s "
+              f"(x{best_baseline / tc:.2f}, q={results['C2'][1]:.3f})")
+    return emit(rows, "table2")
+
+
+if __name__ == "__main__":
+    run()

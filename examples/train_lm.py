@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-param llama-style LM for a few hundred
+steps on CPU with checkpointing and C² locality-aware data ordering.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch import train as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-param reduction of llama3.2-1b (same family/blocks).
+    T.main(["--arch", "llama3_2-1b", "--smoke",
+            "--steps", str(args.steps),
+            "--batch", "8", "--seq", "256",
+            "--data-order", "c2",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full published config;
+``repro.configs.shapes`` defines the per-arch input-shape set.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "olmoe-1b-7b",
+    "kimi-k2-1t-a32b",
+    "musicgen-medium",
+    "granite-34b",
+    "llama3_2-1b",
+    "gemma-2b",
+    "granite-20b",
+    "recurrentgemma-2b",
+    "phi-3-vision-4_2b",
+    "xlstm-125m",
+)
+
+# CLI ids (with dots) → module names.
+ALIASES = {
+    "llama3.2-1b": "llama3_2-1b",
+    "phi-3-vision-4.2b": "phi-3-vision-4_2b",
+}
+
+
+def get_config(arch_id: str):
+    arch_id = ALIASES.get(arch_id, arch_id)
+    assert arch_id in ARCH_IDS, f"unknown arch {arch_id!r}; have {ARCH_IDS}"
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.get_config()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,63 @@
+"""Step 1 of C²: FastRandomHash clustering into t configurations (Alg. 1).
+
+Produces a :class:`ClusterPlan` — a *static* description of every cluster
+(member lists, sizes, originating hash configuration) that downstream steps
+(local KNN, distributed shard_map scheduling) consume. Hash values are
+computed vectorized; the recursive split is host-side bookkeeping
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.params import C2Params
+from repro.core.splitting import SplitResult, split_config
+from repro.types import Dataset
+
+
+@dataclasses.dataclass
+class ClusterPlan:
+    """Static cluster plan: every cluster across all t configurations."""
+
+    members: list[np.ndarray]    # user ids per cluster
+    config_of: np.ndarray        # int32[n_clusters] — hash config index
+    n_users: int
+    t: int
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.members)
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.array([len(m) for m in self.members], dtype=np.int64)
+
+    def brute_force_sims(self) -> int:
+        """Σ |C|(|C|−1)/2 — the similarity budget of Step 2 (paper §II-F)."""
+        s = self.sizes
+        return int((s * (s - 1) // 2).sum())
+
+
+def build_plan(ds: Dataset, params: C2Params) -> ClusterPlan:
+    """Cluster all users under t FastRandomHash functions + recursive split."""
+    seeds = np.arange(params.t, dtype=np.int32) + np.int32(params.seed * 1009)
+    item_h = hashing.item_hashes(ds.items, seeds, params.b)  # [t, nnz]
+    cands = hashing.user_distinct_hashes_np(item_h, ds.offsets, params.split_depth)
+
+    members: list[np.ndarray] = []
+    config_of: list[int] = []
+    for i in range(params.t):
+        res: SplitResult = split_config(cands[i], params.max_cluster)
+        for mem in res.members:
+            if len(mem) >= 2:  # singleton clusters yield no edges
+                members.append(mem)
+                config_of.append(i)
+    return ClusterPlan(
+        members=members,
+        config_of=np.array(config_of, dtype=np.int32),
+        n_users=ds.n_users,
+        t=params.t,
+    )

@@ -1,0 +1,10 @@
+# Compute hot-spots the paper optimizes, as Pallas TPU kernels.
+#
+# goldfinger_knn/  — fused blocked GoldFinger-Jaccard + streaming top-k
+#                    (Step 2's similarity computations: the paper's
+#                    dominant cost, "most of the total computation time").
+# frh_minhash/     — fused multi-seed FastRandomHash min-reduce (Step 1).
+#
+# Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
+# interpret mode against the oracle.

@@ -1,0 +1,1 @@
+from repro.kernels.frh_minhash import ops, ref  # noqa: F401

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused FastRandomHash kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hashing import NO_HASH, fmix32
+from repro.types import PAD_ID
+
+
+def minhash_ref(padded_items, seeds, b: int):
+    """H_i(u) for every (user, seed): int32[n, t].
+
+    padded_items int32[n, P] (PAD_ID padded); seeds int32[t]; b the hash
+    space size. Empty profiles yield NO_HASH.
+    """
+    items = padded_items.astype(jnp.uint32)
+    s = seeds.astype(jnp.uint32)
+    x = items[:, :, None] ^ ((s[None, None, :] + jnp.uint32(1))
+                             * jnp.uint32(0x9E37_79B9))
+    h = (fmix32(x) % jnp.uint32(b)).astype(jnp.int32)  # [n, P, t]
+    h = jnp.where((padded_items == PAD_ID)[:, :, None], NO_HASH, h)
+    return jnp.min(h, axis=1)

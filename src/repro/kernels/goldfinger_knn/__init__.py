@@ -1,0 +1,1 @@
+from repro.kernels.goldfinger_knn import ops, ref  # noqa: F401

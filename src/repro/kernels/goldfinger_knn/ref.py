@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused GoldFinger-Jaccard + top-k kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch.goldfinger import jaccard_pairwise
+from repro.types import NEG_INF, PAD_ID
+
+
+def knn_ref(q_words, q_card, q_ids, d_words, d_card, d_ids, k: int):
+    """Top-k database neighbors per query row.
+
+    q_words uint32[nq, W], q_card int32[nq], q_ids int32[nq] (PAD_ID = dead
+    row); d_* likewise for the database side. Self-pairs (q_id == d_id) and
+    PAD rows are excluded. Returns (ids int32[nq, k], sims float32[nq, k]).
+    """
+    sims = jaccard_pairwise(q_words, q_card, d_words, d_card)
+    valid = ((d_ids[None, :] != PAD_ID)
+             & (q_ids[:, None] != PAD_ID)
+             & (q_ids[:, None] != d_ids[None, :]))
+    sims = jnp.where(valid, sims, NEG_INF)
+    top_sims, pos = jax.lax.top_k(sims, k)
+    top_ids = jnp.where(top_sims == NEG_INF, PAD_ID,
+                        d_ids[pos].astype(jnp.int32))
+    return top_ids, top_sims
+
+
+def cluster_knn_ref(words, card, member_ids, k: int):
+    """Per-cluster oracle: words uint32[m, cap, W] → ([m, cap, k] ids, sims)."""
+    def one(w, c, ids):
+        return knn_ref(w, c, ids, w, c, ids, k)
+
+    return jax.vmap(one)(words, card, member_ids)

@@ -1,0 +1,51 @@
+"""Brute-force KNN graph (paper §IV-B1) — the exact reference.
+
+Computes all n·(n−1)/2 similarities, blocked over rows so the similarity
+matrix never fully materializes. Used (a) as the exact-graph reference for
+the quality metric, and (b) inside C² for clusters below the ρk² switch,
+where it runs through the fused Pallas kernel instead (core/local_knn).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.knn.topk import graph_from_device
+from repro.sketch.goldfinger import GoldFinger, jaccard_pairwise
+from repro.types import NEG_INF, PAD_ID, KNNGraph
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _block_knn(words_blk, card_blk, row_ids, words_all, card_all, k: int):
+    sims = jaccard_pairwise(words_blk, card_blk, words_all, card_all)
+    n_all = words_all.shape[0]
+    cols = jnp.arange(n_all, dtype=jnp.int32)
+    sims = jnp.where(cols[None, :] == row_ids[:, None], NEG_INF, sims)
+    top_sims, top_ids = jax.lax.top_k(sims, k)
+    top_ids = jnp.where(top_sims == NEG_INF, PAD_ID, top_ids.astype(jnp.int32))
+    return top_ids, top_sims
+
+
+def brute_force_knn(gf: GoldFinger, k: int, block: int = 512) -> KNNGraph:
+    """Exact (under the GoldFinger estimator) KNN graph, row-blocked."""
+    n = gf.n
+    words = jnp.asarray(gf.words)
+    card = jnp.asarray(gf.card)
+    ids_out = np.full((n, k), PAD_ID, dtype=np.int32)
+    sims_out = np.full((n, k), NEG_INF, dtype=np.float32)
+    for start in range(0, n, block):
+        stop = min(start + block, n)
+        rows = jnp.arange(start, stop, dtype=jnp.int32)
+        ids, sims = _block_knn(words[start:stop], card[start:stop], rows,
+                               words, card, k)
+        ids_out[start:stop] = np.asarray(ids)
+        sims_out[start:stop] = np.asarray(sims)
+    return KNNGraph(ids=ids_out, sims=sims_out)
+
+
+def n_similarities(n: int) -> int:
+    """Similarity-computation count of brute force (paper: n(n−1)/2)."""
+    return n * (n - 1) // 2

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell on the production mesh and record memory/cost/collective
+analysis. This is the proof that the distribution config is coherent:
+sharding mismatches, compile-time OOMs, or unsupported collectives all
+fail here.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Results are cached as JSON under artifacts/dryrun/ (one file per cell);
+launch/roofline.py and EXPERIMENTS.md read from there.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import sharding as sh
+from repro.models.sharding import make_ctx
+from repro.serve.steps import decode_step, prefill_step
+from repro.train.optimizer import OptConfig
+from repro.train.steps import train_step
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device operand bytes of every collective op in the
+    partitioned HLO (shapes in post-SPMD HLO are per-device)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "fusion" in s.split("=")[0]:
+            continue
+        for c in _COLLECTIVES:
+            # Match the op name at the instruction position, e.g.
+            # "%ag = bf16[16,1024]{1,0} all-gather(...)".
+            if f" {c}(" in s or f" {c}-start(" in s:
+                lhs = s.split(f" {c}")[0]
+                nbytes = 0
+                for m in _SHAPE_RE.finditer(lhs):
+                    dt, dims = m.group(1), m.group(2)
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _DTYPE_BYTES[dt]
+                out[c] += nbytes
+                counts[c] += 1
+                break
+    out_total = int(sum(out.values()))
+    return {"per_op_bytes": out, "per_op_counts": counts,
+            "total_bytes_per_device": out_total}
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes", "host_temp_size_in_bytes")
+    d = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            d[k] = int(v)
+    return d
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, oc=None,
+               n_microbatches: int = 1, loss_chunk: int = 0,
+               donate: bool = False, grad_scatter: bool = False,
+               remat="full", cfg_overrides: dict | None = None):
+    """Returns (step_fn, args, in_shardings, out_shardings, donate)."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    oc = oc or OptConfig()
+    ctx = make_ctx(mesh)
+    specs = input_specs(cfg, shape, oc)
+    ba = sh.batch_axes_of(mesh)
+
+    pspec = sh.param_pspecs(cfg, specs["params"], mesh)
+    psh = sh.to_shardings(pspec, mesh)
+    rep = NamedSharding(mesh, P())
+
+    def bshard(tree):
+        return jax.tree.map(
+            lambda x: NamedSharding(mesh, P(ba, *([None] * (x.ndim - 1))))
+            if x.ndim >= 1 and x.shape[0] % _nbatch(mesh) == 0 else rep,
+            tree)
+
+    if shape.kind == "train":
+        opt_sh = jax.tree.map(
+            lambda path_leaf: None, specs["opt_state"])  # placeholder
+        opt_pspec = {
+            "step": P(),
+            "m": pspec, "v": pspec,
+        }
+        if "err" in specs["opt_state"]:
+            opt_pspec["err"] = pspec
+        opt_sh = sh.to_shardings(opt_pspec, mesh)
+
+        gsh = psh if grad_scatter else None  # opt-in: FSDP grad scatter
+
+        def step(params, opt_state, batch):
+            return train_step(params, opt_state, batch, cfg, ctx, oc,
+                              n_microbatches=n_microbatches, remat=remat,
+                              loss_chunk=loss_chunk, grad_shardings=gsh)
+
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+        in_sh = (psh, opt_sh, bshard(specs["batch"]))
+        metrics_sh = {"loss": rep, "ce": rep, "step": rep}
+        out_sh = (psh, opt_sh, metrics_sh)
+        dn = (0, 1) if donate else ()  # opt-in: donate params+opt state
+        return step, args, in_sh, out_sh, dn
+
+    if shape.kind == "prefill":
+        is_emb = cfg.frontend is not None
+
+        def step(params, batch):
+            x = batch["embeddings"] if is_emb else batch["tokens"]
+            return prefill_step(params, x, cfg, ctx,
+                                s_alloc=shape.seq_len, is_embeds=is_emb)
+
+        args = (specs["params"], specs["batch"])
+        cache_abs = jax.eval_shape(step, *args)[1]
+        cache_sh = sh.to_shardings(
+            sh.cache_pspecs(cfg, cache_abs, mesh), mesh)
+        logits_sh = NamedSharding(mesh, P(ba, None, "model"))
+        return step, args, (psh, bshard(specs["batch"])), \
+            (logits_sh, cache_sh), ()
+
+    # decode
+    cache_sh = sh.to_shardings(
+        sh.cache_pspecs(cfg, specs["cache"], mesh), mesh)
+
+    def step(params, cache, batch):
+        return decode_step(params, cache, batch["tokens"],
+                           batch["cur_index"], cfg, ctx)
+
+    args = (specs["params"], specs["cache"], specs["batch"])
+    B = shape.global_batch
+    bax = ba if B % _nbatch(mesh) == 0 else None  # long_500k: batch=1
+    bsh = {"tokens": NamedSharding(mesh, P(bax, None)), "cur_index": rep}
+    logits_sh = NamedSharding(mesh, P(bax, None, "model"))
+    dn = (1,) if donate else ()  # alias the decode cache in place
+    return step, args, (psh, cache_sh, bsh), (logits_sh, cache_sh), dn
+
+
+def _nbatch(mesh):
+    import numpy as np
+
+    return int(np.prod([mesh.shape[a] for a in sh.batch_axes_of(mesh)]))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, n_microbatches: int = 1,
+             loss_chunk: int = 0, donate: bool = False,
+             grad_scatter: bool = False, cfg_overrides: dict | None = None,
+             remat="full", tag: str = "") -> dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    ART.mkdir(parents=True, exist_ok=True)
+    out_path = ART / f"{arch}_{shape_name}_{mesh_name}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "status": "skipped"}
+    if not applicable(cfg, shape_name):
+        rec["reason"] = ("long_500k needs sub-quadratic attention; "
+                         f"{arch} is pure full-attention (DESIGN.md §6)")
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        step, args, in_sh, out_sh, donate_nums = build_cell(
+            arch, shape_name, mesh, n_microbatches=n_microbatches,
+            loss_chunk=loss_chunk, donate=donate,
+            grad_scatter=grad_scatter, cfg_overrides=cfg_overrides,
+            remat=remat)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh,
+                              donate_argnums=donate_nums).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        from repro.launch.hlo_analysis import analyze
+
+        analysis = analyze(hlo)
+        rec.update(
+            analysis=analysis,
+            status="ok",
+            t_lower_s=round(t_lower, 2),
+            t_compile_s=round(t_compile, 2),
+            n_devices=int(mesh.size),
+            memory=_mem_dict(mem),
+            cost={k: float(v) for k, v in (cost or {}).items()
+                  if isinstance(v, (int, float))},
+            collectives=collective_bytes(hlo),
+            hlo_bytes=len(hlo),
+        )
+        print(f"[dryrun] OK  {arch} × {shape_name} × {mesh_name}"
+              f"{tag}  lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops={rec['cost'].get('flops', 0):.3e} "
+              f"coll={rec['collectives']['total_bytes_per_device']:.3e}B")
+        print(f"         memory: {rec['memory']}")
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAIL {arch} × {shape_name} × {mesh_name}: {e}")
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--grad-scatter", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. mlstm_chunk=128")
+    ap.add_argument("--remat", default="full", choices=["full", "save_tp"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        "dry-run expects 512 host devices; do not import jax before this "
+        "module sets XLA_FLAGS")
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ([False, True] if args.mesh == "both"
+              else [args.mesh == "multipod"])
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shp, mp, force=args.force,
+                               n_microbatches=args.microbatches,
+                               loss_chunk=args.loss_chunk,
+                               donate=args.donate,
+                               grad_scatter=args.grad_scatter,
+                               cfg_overrides={
+                                   k: (int(v) if v.lstrip("-").isdigit()
+                                       else v) for k, v in
+                                   (o.split("=") for o in args.override)
+                               } or None,
+                               remat=args.remat,
+                               tag=args.tag)
+                if rec["status"] == "error":
+                    n_fail += 1
+                elif rec["status"] == "ok":
+                    n_ok += 1
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,134 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every (arch × shape × mesh) cell:
+
+    compute term    = HLO_matmul_FLOPs_per_device / 197 TFLOP/s
+    memory term     = HLO_bytes_per_device        / 819 GB/s
+    collective term = collective_bytes_per_device / 50 GB/s/link
+
+plus MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
+(prefill/decode), the MODEL/HLO ratio (remat & masked-attention waste
+show up here), the dominant term, and a what-would-move-it note.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ART = Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch  # decode: 1 token/sequence
+
+
+def _advice(bottleneck: str, kind: str, arch: str) -> str:
+    cfg = get_config(arch)
+    if bottleneck == "collective":
+        if cfg.n_experts:
+            return ("shrink TP all-reduce traffic: sequence-sharded "
+                    "norms/residual (SP) + keep expert psum in bf16")
+        return ("sequence parallelism on the model axis to turn per-layer "
+                "all-reduces into reduce-scatter/all-gather halves")
+    if bottleneck == "memory":
+        if kind == "decode":
+            return ("KV-cache traffic dominates: quantize cache to int8, "
+                    "grow per-chip batch, or shard heads wider")
+        return ("activation traffic dominates: fuse the f32 loss/softmax "
+                "pipeline, keep residuals bf16, reduce remat width")
+    return "compute-bound: raise per-chip utilization (larger tiles/batch)"
+
+
+def load_cells(mesh_name: str = "pod", tag: str = ""):
+    rows = []
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            f = ART / "dryrun" / f"{arch}_{shape_name}_{mesh_name}{tag}.json"
+            if not f.exists():
+                continue
+            rec = json.loads(f.read_text())
+            row = {"arch": arch, "shape": shape_name,
+                   "status": rec["status"]}
+            if rec["status"] == "skipped":
+                row["note"] = rec.get("reason", "")
+                rows.append(row)
+                continue
+            if rec["status"] != "ok":
+                row["note"] = rec.get("error", "")[:160]
+                rows.append(row)
+                continue
+            a = rec["analysis"]
+            n_dev = rec["n_devices"]
+            t_c = a["flops_per_device"] / PEAK_FLOPS_BF16
+            t_m = a["bytes_per_device"] / HBM_BW
+            t_x = a["collective_bytes_per_device"] / ICI_BW
+            terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+            bott = max(terms, key=terms.get)
+            mf = model_flops(arch, shape_name)
+            kind = SHAPES[shape_name].kind
+            row.update(
+                n_devices=n_dev,
+                compute_s=t_c, memory_s=t_m, collective_s=t_x,
+                bottleneck=bott,
+                model_flops_global=mf,
+                hlo_flops_per_device=a["flops_per_device"],
+                model_over_hlo=mf / n_dev / max(a["flops_per_device"], 1.0),
+                mfu_bound=(mf / n_dev / PEAK_FLOPS_BF16)
+                / max(terms[bott], 1e-12),
+                temp_bytes=rec["memory"].get("temp_size_in_bytes"),
+                advice=_advice(bott, kind, arch),
+            )
+            rows.append(row)
+    return rows
+
+
+def render(rows, title="Roofline (single-pod 16×16, v5e terms)"):
+    out = [f"### {title}", "",
+           "| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO | MFU-bound | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                       f"{r.get('note','')} | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {r['model_over_hlo']:.2f} | "
+            f"{r['mfu_bound']:.3f} | "
+            f"{(r['temp_bytes'] or 0) / 1e9:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = load_cells(args.mesh, args.tag)
+    (ART / f"roofline_{args.mesh}{args.tag}.json").write_text(
+        json.dumps(rows, indent=2))
+    print(render(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) for every
+(architecture × shape) dry-run cell — weak-type-correct, shardable, zero
+allocation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.model import abstract_cache, abstract_params
+from repro.train.optimizer import OptConfig, init_opt_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """The data batch for one step (train/prefill/decode)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        labels = SDS((B, S), jnp.int32)
+        if cfg.frontend:  # stub frontend: precomputed frame/patch embeddings
+            return {"embeddings": SDS((B, S, cfg.d_model), dt),
+                    "labels": labels}
+        return {"tokens": SDS((B, S), jnp.int32), "labels": labels}
+    if shape.kind == "prefill":
+        if cfg.frontend:
+            return {"embeddings": SDS((B, S, cfg.d_model), dt)}
+        return {"tokens": SDS((B, S), jnp.int32)}
+    # decode: one new token against a seq_len cache.
+    return {"tokens": SDS((B, 1), jnp.int32),
+            "cur_index": SDS((), jnp.int32)}
+
+
+def abstract_state(cfg: ModelConfig, oc: OptConfig):
+    """Abstract (params, opt_state) for train cells."""
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda p: init_opt_state(p, oc), params)
+    return params, opt
+
+
+def abstract_decode_cache(cfg: ModelConfig, shape: ShapeSpec):
+    return abstract_cache(cfg, shape.global_batch, shape.seq_len)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                oc: OptConfig | None = None):
+    """Everything the cell's step function consumes, abstract."""
+    oc = oc or OptConfig()
+    out = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "train":
+        out["params"], out["opt_state"] = abstract_state(cfg, oc)
+    else:
+        out["params"] = abstract_params(cfg)
+        if shape.kind == "decode":
+            out["cache"] = abstract_decode_cache(cfg, shape)
+    return out

@@ -1,0 +1,258 @@
+"""Decoder-only LM assembly: init / forward / prefill / decode.
+
+The layer stack is scanned over *pattern groups* (stacked params with a
+leading n_groups dim) so an 88-layer model lowers to one compact
+``lax.scan`` body — essential for keeping 512-device SPMD compiles fast.
+A remainder (n_layers % pattern period) is applied unrolled.
+
+Every block application is pre-norm + residual; MoE blocks additionally
+accumulate a load-balancing aux loss through the scan carry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx
+
+BLOCK_INIT = {
+    "attn": L.init_attn,
+    "local_attn": L.init_attn,
+    "mlp": L.init_mlp,
+    "moe": L.init_moe,
+    "rglru": L.init_rglru,
+    "mlstm": L.init_mlstm,
+    "slstm": L.init_slstm,
+}
+
+_STATEFUL = ("attn", "local_attn", "rglru", "mlstm", "slstm")
+
+
+def _flat_pattern(cfg: ModelConfig):
+    """[(key, kind), ...] across one pattern period; key is unique."""
+    out = []
+    for li, grp in enumerate(cfg.block_pattern):
+        for bi, kind in enumerate(grp):
+            out.append((f"l{li}b{bi}_{kind}", kind))
+    return out
+
+
+# ------------------------------------------------------------------ init
+
+def init_params(key, cfg: ModelConfig) -> Any:
+    """Materialize parameters (use under jax.eval_shape for the dry-run)."""
+    D, V = cfg.d_model, cfg.vocab_size
+    pd = jnp.dtype(cfg.param_dtype)
+    k_embed, k_head, k_groups, k_rem = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (V, D), jnp.float32)
+                  * 0.02).astype(pd),
+        "final_norm": L.init_rmsnorm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(k_head, (D, V), D, pd)
+
+    entries = _flat_pattern(cfg)
+
+    def init_group(gkey):
+        sub = {}
+        ks = jax.random.split(gkey, len(entries))
+        for (name, kind), kk in zip(entries, ks):
+            sub[name] = {"norm": L.init_rmsnorm(cfg),
+                         "block": BLOCK_INIT[kind](kk, cfg)}
+        return sub
+
+    n_groups = cfg.n_groups
+    params["groups"] = jax.vmap(init_group)(
+        jax.random.split(k_groups, n_groups))
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.key(0))
+
+
+# ------------------------------------------------------------------ cache
+
+def init_cache(cfg: ModelConfig, batch: int, s_alloc: int) -> Any:
+    """Decode cache pytree, leaves stacked over groups: [n_groups, ...]."""
+    def one_group():
+        sub = {}
+        for name, kind in _flat_pattern(cfg):
+            if kind in ("attn", "local_attn"):
+                window = cfg.window if kind == "local_attn" else 0
+                sub[name] = L.init_attn_cache(cfg, batch, s_alloc, window)
+            elif kind == "rglru":
+                sub[name] = L.init_rglru_cache(cfg, batch)
+            elif kind == "mlstm":
+                sub[name] = L.init_mlstm_cache(cfg, batch)
+            elif kind == "slstm":
+                sub[name] = L.init_slstm_cache(cfg, batch)
+        return sub
+
+    one = one_group()
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape).copy(), one)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_alloc: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, s_alloc))
+
+
+# ------------------------------------------------------------------ forward
+
+def _apply_block(kind, bp, x, cfg, ctx, *, cache, cur_index, positions,
+                 want_cache, s_alloc):
+    """Pre-norm + residual around one block; returns (x, cache, aux)."""
+    h = L.apply_rmsnorm(bp["norm"], x)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        y, new_cache = L.apply_attn(
+            bp["block"], h, cfg, ctx, window=window, cache=cache,
+            cur_index=cur_index, positions=positions,
+            want_cache=want_cache, s_alloc=s_alloc)
+    elif kind == "mlp":
+        y = L.apply_mlp(bp["block"], h, cfg, ctx)
+    elif kind == "moe":
+        y, (logits, gate_e) = L.apply_moe(bp["block"], h, cfg, ctx)
+        # Switch-style load-balance loss: E · Σ_e f_e·P_e.
+        E = cfg.n_experts
+        probs = jax.nn.softmax(logits, axis=-1)
+        P_e = probs.mean(axis=0)
+        f_e = jnp.zeros((E,), jnp.float32).at[gate_e.reshape(-1)].add(
+            1.0 / gate_e.size)
+        aux = E * jnp.sum(f_e * P_e)
+    elif kind == "rglru":
+        y, new_cache = L.apply_rglru(bp["block"], h, cfg, ctx, cache=cache,
+                                     cur_index=cur_index,
+                                     want_cache=want_cache)
+    elif kind == "mlstm":
+        y, new_cache = L.apply_mlstm(bp["block"], h, cfg, ctx, cache=cache,
+                                     cur_index=cur_index,
+                                     want_cache=want_cache)
+    elif kind == "slstm":
+        y, new_cache = L.apply_slstm(bp["block"], h, cfg, ctx, cache=cache,
+                                     cur_index=cur_index,
+                                     want_cache=want_cache)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return x + y, new_cache, aux
+
+
+def remat_policy(name):
+    """Named activation-checkpoint policies (§Perf knob).
+
+    ``full``     — recompute everything (baseline);
+    ``save_tp``  — keep post-all-reduce block outputs so the backward pass
+                   never re-runs TP collectives (cuts the collective term
+                   ~1/3 at the cost of one bf16 [B,S,D] per block).
+    """
+    if isinstance(name, str) and name == "save_tp":
+        return jax.checkpoint_policies.save_only_these_names("tp_out")
+    return None
+
+
+def forward(params, cfg: ModelConfig, ctx: ShardCtx, *,
+            tokens=None, input_embeds=None, positions=None,
+            cache=None, cur_index=None,
+            want_cache: bool = False, s_alloc: int = 0,
+            remat: bool = False):
+    """Returns (logits, new_cache, aux_loss).
+
+    Train: tokens [B,S] (or input_embeds [B,S,D] for stub frontends),
+    cache=None. Prefill: want_cache=True, s_alloc = cache allocation.
+    Decode: cache pytree + cur_index scalar; tokens [B,1].
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if input_embeds is not None:
+        x = input_embeds.astype(dt)
+    else:
+        x = params["embed"][tokens].astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    B, S, _ = x.shape
+    x = ctx.csp(x, ctx.batch_axes, None, None)
+    if positions is None:
+        if cur_index is not None:
+            positions = jnp.broadcast_to(
+                cur_index.astype(jnp.int32), (B, S))
+        else:
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    entries = _flat_pattern(cfg)
+
+    def group_fn(carry, xs):
+        x, aux = carry
+        gparams, gcache = xs
+        new_gcache = {}
+        for name, kind in entries:
+            bc = None if gcache is None else gcache.get(name)
+            x, nc, a = _apply_block(
+                kind, gparams[name], x, cfg, ctx,
+                cache=bc, cur_index=cur_index, positions=positions,
+                want_cache=want_cache, s_alloc=s_alloc)
+            if nc is not None:
+                new_gcache[name] = nc
+            aux = aux + a
+        return (x, aux), (new_gcache if new_gcache else None)
+
+    body = (jax.checkpoint(group_fn, policy=remat_policy(remat))
+            if remat else group_fn)
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, aux0), (params["groups"], cache))
+
+    x = L.apply_rmsnorm(params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dt),
+                        preferred_element_type=jnp.float32)
+    logits = ctx.csp(logits, ctx.batch_axes, None, ctx.model_axis)
+    return logits, new_cache, aux
+
+
+def forward_trunk(params, cfg: ModelConfig, ctx: ShardCtx, *,
+                  tokens=None, input_embeds=None, remat: bool = False):
+    """Forward without the unembedding head: returns (x_normed, aux).
+    Used by the chunked-loss path (§Perf) to avoid materializing the full
+    f32 logits tensor."""
+    dt = jnp.dtype(cfg.dtype)
+    if input_embeds is not None:
+        x = input_embeds.astype(dt)
+    else:
+        x = params["embed"][tokens].astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    B, S, _ = x.shape
+    x = ctx.csp(x, ctx.batch_axes, None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    entries = _flat_pattern(cfg)
+
+    def group_fn(carry, xs):
+        x, aux = carry
+        gparams, _ = xs
+        for name, kind in entries:
+            x, _, a = _apply_block(
+                kind, gparams[name], x, cfg, ctx,
+                cache=None, cur_index=None, positions=positions,
+                want_cache=False, s_alloc=0)
+            aux = aux + a
+        return (x, aux), None
+
+    body = (jax.checkpoint(group_fn, policy=remat_policy(remat))
+            if remat else group_fn)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["groups"], None))
+    return L.apply_rmsnorm(params["final_norm"], x), aux

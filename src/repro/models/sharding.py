@@ -1,0 +1,136 @@
+"""Sharding rules: FSDP on the data axis × tensor parallel on the model
+axis, with the pod axis (multi-pod mesh) as pure data parallelism.
+
+Rules are divisibility-guarded: a dimension is only sharded if the mesh
+axis divides it (e.g. MQA kv=1 heads replicate; gemma's 8 q-heads fall
+back from a 16-way model axis to replication). Parameters carry a leading
+n_groups (scan) dim which is never sharded.
+
+Param FSDP lives on "data" only — all-gathers for layer compute stay
+intra-pod; only gradient all-reduces cross the pod axis (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx
+
+
+def batch_axes_of(mesh: Mesh) -> tuple:
+    """Data-parallel axes: ("pod","data") on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_ctx(mesh: Mesh | None) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx(mesh=None)
+    return ShardCtx(mesh=mesh, batch_axes=batch_axes_of(mesh),
+                    model_axis="model")
+
+
+def _div(mesh: Mesh, axis: str, dim: int):
+    """axis name if it divides dim, else None (replicate)."""
+    return axis if (axis in mesh.axis_names and dim % mesh.shape[axis] == 0) else None
+
+
+def param_pspecs(cfg: ModelConfig, params_tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree mirroring the params (works on abstract trees)."""
+    dp = "data"
+    tp = "model"
+
+    def rule(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        shape = leaf.shape
+        name = keys[-1]
+        if keys[0] == "embed":
+            return P(_div(mesh, tp, shape[0]), _div(mesh, dp, shape[1]))
+        if keys[0] == "lm_head":
+            return P(_div(mesh, dp, shape[0]), _div(mesh, tp, shape[1]))
+        if name == "scale":  # norms
+            return P(*([None] * len(shape)))
+        # Block params: leading n_groups scan dim → None first.
+        s = shape[1:] if keys[0] == "groups" else shape
+        lead = (None,) if keys[0] == "groups" else ()
+
+        def spec(*rest):
+            return P(*(lead + rest))
+
+        if name == "wq":
+            return spec(_div(mesh, dp, s[0]), _div(mesh, tp, s[1]), None)
+        if name in ("wk", "wv"):
+            return spec(_div(mesh, dp, s[0]), _div(mesh, tp, s[1]),
+                        None if _div(mesh, tp, s[1]) else _div(mesh, tp, s[2]))
+        if name == "wo":
+            return spec(_div(mesh, tp, s[0]), None, _div(mesh, dp, s[2]))
+        if name in ("w_gate", "w_up"):
+            if len(s) == 3:  # MoE experts [E, D, F]
+                return spec(_div(mesh, tp, s[0]), _div(mesh, dp, s[1]), None)
+            return spec(_div(mesh, dp, s[0]), _div(mesh, tp, s[1]))
+        if name == "w_down":
+            if len(s) == 3:  # MoE [E, F, D]
+                return spec(_div(mesh, tp, s[0]), None, _div(mesh, dp, s[2]))
+            return spec(_div(mesh, tp, s[0]), _div(mesh, dp, s[1]))
+        if name == "router":
+            return spec(_div(mesh, dp, s[0]), None)
+        if name in ("w_x", "w_z", "w_i", "w_f", "w_o", "w_q", "w_k", "w_v",
+                    "w_rec_gate", "w_in_gate", "w_up"):
+            if len(s) == 2:
+                return spec(_div(mesh, dp, s[0]), _div(mesh, tp, s[1]))
+            return spec(*([None] * len(s)))
+        if name == "conv_w":
+            return spec(None, _div(mesh, tp, s[1]))
+        if name == "lam":
+            return spec(_div(mesh, tp, s[0]))
+        if name == "w_out":
+            return spec(_div(mesh, tp, s[0]), _div(mesh, dp, s[1]))
+        if name == "r_z":
+            return spec(*([None] * len(s)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree: Any, mesh: Mesh) -> Any:
+    """Decode-cache specs: batch on the data axes; heads on model when
+    divisible (MQA kv=1 replicates across model — batch carries it)."""
+    ba = batch_axes_of(mesh)
+    n_batch = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def rule(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        shape = leaf.shape
+        bax = ba if shape[1] % n_batch == 0 else None
+        if name in ("k", "v"):      # [G, B, alloc, KV, hd]
+            return P(None, bax, None, _div(mesh, "model", shape[3]), None)
+        if name == "pos":           # [G, alloc]
+            return P(None, None)
+        if name == "conv":          # [G, B, cw−1, w]
+            return P(None, bax, None, _div(mesh, "model", shape[3]))
+        if name == "C":             # [G, B, H, hd, hd]
+            return P(None, bax, _div(mesh, "model", shape[2]), None, None)
+        if name in ("n",):          # [G, B, H, hd] or [G, B, w]
+            if len(shape) == 4:
+                return P(None, bax, _div(mesh, "model", shape[2]), None)
+            return P(None, bax, _div(mesh, "model", shape[2]))
+        if name in ("h", "c"):      # [G, B, w]
+            return P(None, bax, _div(mesh, "model", shape[2]))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def to_shardings(tree_of_pspecs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh, rank: int) -> P:
+    """Token batches: batch dim on the data axes, rest replicated."""
+    ba = batch_axes_of(mesh)
+    return P(ba, *([None] * (rank - 1)))

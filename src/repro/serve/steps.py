@@ -1,0 +1,51 @@
+"""Serving steps: prefill (context → cache + first logits) and decode
+(one token against the cache). ``decode_*`` / ``long_*`` dry-run shapes
+lower ``decode_step``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx
+from repro.models.model import forward
+
+
+def prefill_step(params, tokens_or_embeds, cfg: ModelConfig, ctx: ShardCtx,
+                 *, s_alloc: int = 0, is_embeds: bool = False):
+    """Process the full prompt; returns (logits[B,S,V], cache)."""
+    kw = ({"input_embeds": tokens_or_embeds} if is_embeds
+          else {"tokens": tokens_or_embeds})
+    S = tokens_or_embeds.shape[1]
+    logits, cache, _ = forward(params, cfg, ctx, want_cache=True,
+                               s_alloc=s_alloc or S, **kw)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig,
+                ctx: ShardCtx):
+    """One decode step: tokens [B,1] + cache at position cur_index.
+
+    Returns (logits [B,1,V], new_cache). Sub-quadratic archs (RG-LRU,
+    xLSTM) carry O(1) state; attention archs carry the KV cache (ring
+    buffer for sliding-window layers)."""
+    logits, new_cache, _ = forward(
+        params, cfg, ctx, tokens=tokens, cache=cache,
+        cur_index=jnp.asarray(cur_index, jnp.int32))
+    return logits, new_cache
+
+
+def greedy_generate(params, prompt, cfg: ModelConfig, ctx: ShardCtx,
+                    max_new: int, s_alloc: int = 0):
+    """Host-driven greedy decoding (examples/serving demo)."""
+    B, S = prompt.shape
+    alloc = s_alloc or (S + max_new)
+    logits, cache = prefill_step(params, prompt, cfg, ctx, s_alloc=alloc)
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    out = [tok]
+    step = jax.jit(decode_step, static_argnames=("cfg", "ctx"))
+    for i in range(max_new - 1):
+        logits, cache = step(params, cache, tok, S + i, cfg=cfg, ctx=ctx)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,1 @@
+from repro.sketch.goldfinger import GoldFinger, fingerprint_dataset  # noqa: F401

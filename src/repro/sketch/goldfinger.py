@@ -1,0 +1,155 @@
+"""GoldFinger compact profile fingerprints (paper §II-F, refs [19]/[40]).
+
+GoldFinger summarizes each user's profile into a B-bit vector (64–8096 bits;
+the paper's experiments use 1024). Bit ``hash(item) mod B`` is set for every
+item in the profile. The Jaccard similarity of two profiles is then estimated
+from the fingerprints as::
+
+    J(u, v) ≈ |fp_u ∧ fp_v| / |fp_u ∨ fp_v|
+            = popcount(fp_u & fp_v) / (card_u + card_v − popcount(fp_u & fp_v))
+
+where ``card_u = popcount(fp_u)`` is precomputed once per user. Keeping the
+union in terms of precomputed cardinalities is what lets the TPU kernel turn
+the intersection into a single matmul (see kernels/goldfinger_knn).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import fmix32
+from repro.types import Dataset
+
+DEFAULT_BITS = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class GoldFinger:
+    """Fingerprints for a set of users: ``words`` uint32[n, W], ``card`` int32[n]."""
+
+    words: np.ndarray | jax.Array  # uint32[n, W]
+    card: np.ndarray | jax.Array   # int32[n]  (popcount of each row)
+
+    @property
+    def n(self) -> int:
+        return self.words.shape[0]
+
+    @property
+    def n_bits(self) -> int:
+        return self.words.shape[1] * 32
+
+    def take(self, idx) -> "GoldFinger":
+        return GoldFinger(words=self.words[idx], card=self.card[idx])
+
+
+def item_bit_positions(items: np.ndarray, n_bits: int, seed: int) -> np.ndarray:
+    """Map item ids to bit positions in [0, n_bits) with a mixed hash."""
+    x = (items.astype(np.uint32) + np.uint32(0x9E3779B9)) ^ np.uint32(seed * 0x85EBCA6B + 1)
+    return (fmix32(x) % np.uint32(n_bits)).astype(np.int64)
+
+
+def fingerprint_dataset(ds: Dataset, n_bits: int = DEFAULT_BITS, seed: int = 0) -> GoldFinger:
+    """Build GoldFinger fingerprints for every user of ``ds`` (host-side)."""
+    assert n_bits % 32 == 0, "n_bits must be a multiple of 32"
+    W = n_bits // 32
+    pos = item_bit_positions(ds.items, n_bits, seed)
+    word_idx = (pos // 32).astype(np.int64)
+    bit = np.uint32(1) << (pos % 32).astype(np.uint32)
+    words = np.zeros((ds.n_users, W), dtype=np.uint32)
+    # Scatter-OR each item's bit into its user's row.
+    user_of = np.repeat(np.arange(ds.n_users, dtype=np.int64), ds.profile_sizes)
+    np.bitwise_or.at(words, (user_of, word_idx), bit)
+    card = popcount_rows(words)
+    return GoldFinger(words=words, card=card)
+
+
+def popcount_rows(words: np.ndarray) -> np.ndarray:
+    """Row-wise popcount on host (numpy)."""
+    return np.unpackbits(words.view(np.uint8), axis=-1).sum(axis=-1).astype(np.int32)
+
+
+def incidence_fingerprint(ds: Dataset) -> GoldFinger:
+    """Full-universe incidence vectors ("raw data" mode, Table V).
+
+    One bit per item of the universe — popcount Jaccard over these is the
+    *exact* set Jaccard (no hashing collisions), at |I|/n_bits times the
+    memory and compute of a GoldFinger sketch. This is the paper's
+    raw-data baseline expressed in the same kernel-friendly layout.
+    """
+    W = (ds.n_items + 31) // 32
+    words = np.zeros((ds.n_users, W), dtype=np.uint32)
+    user_of = np.repeat(np.arange(ds.n_users, dtype=np.int64),
+                        ds.profile_sizes)
+    pos = ds.items.astype(np.int64)
+    np.bitwise_or.at(words, (user_of, pos // 32),
+                     np.uint32(1) << (pos % 32).astype(np.uint32))
+    return GoldFinger(words=words, card=popcount_rows(words))
+
+
+# --------------------------------------------------------------------------
+# Pure-jnp pairwise similarity (also the oracle for the Pallas kernel).
+# --------------------------------------------------------------------------
+
+def jaccard_pairwise(words_a: jax.Array, card_a: jax.Array,
+                     words_b: jax.Array, card_b: jax.Array,
+                     word_chunk: int = 64) -> jax.Array:
+    """Estimated Jaccard sims for all pairs: float32[n_a, n_b].
+
+    Pure-jnp reference: popcount of ANDed words, union from cardinalities.
+    Wide sketches (raw-incidence mode: W = |I|/32 can be thousands of
+    words) are scanned in word chunks so the [n_a, n_b, W] AND tensor is
+    never materialized.
+    """
+    W = words_a.shape[-1]
+    if W <= word_chunk:
+        inter = jnp.sum(
+            jax.lax.population_count(
+                words_a[:, None, :] & words_b[None, :, :]),
+            axis=-1,
+        ).astype(jnp.float32)
+    else:
+        pad = (-W) % word_chunk
+        wa = jnp.pad(words_a, ((0, 0), (0, pad)))
+        wb = jnp.pad(words_b, ((0, 0), (0, pad)))
+        nc = wa.shape[-1] // word_chunk
+        wa = jnp.moveaxis(wa.reshape(-1, nc, word_chunk), 1, 0)
+        wb = jnp.moveaxis(wb.reshape(-1, nc, word_chunk), 1, 0)
+
+        def body(acc, ab):
+            a, b = ab
+            p = jnp.sum(jax.lax.population_count(
+                a[:, None, :] & b[None, :, :]), axis=-1, dtype=jnp.int32)
+            return acc + p, None
+
+        acc0 = jnp.zeros((words_a.shape[0], words_b.shape[0]), jnp.int32)
+        inter, _ = jax.lax.scan(body, acc0, (wa, wb))
+        inter = inter.astype(jnp.float32)
+    union = card_a[:, None].astype(jnp.float32) + card_b[None, :].astype(jnp.float32) - inter
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1.0), 0.0)
+
+
+def unpack_bits_int8(words: jax.Array) -> jax.Array:
+    """uint32[n, W] → int8[n, W·32] {0,1} bit planes (LSB-first per word).
+
+    This is the MXU path: ``popcount(a & b) == unpack(a) @ unpack(b).T``,
+    turning bit intersection into an int8 matmul (DESIGN.md §3).
+    """
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(words.shape[0], -1).astype(jnp.int8)
+
+
+@jax.jit
+def jaccard_pairwise_mxu(words_a, card_a, words_b, card_b):
+    """MXU-friendly variant of :func:`jaccard_pairwise` (bit-plane matmul)."""
+    ba = unpack_bits_int8(words_a)
+    bb = unpack_bits_int8(words_b)
+    inter = jax.lax.dot_general(
+        ba, bb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    union = card_a[:, None].astype(jnp.float32) + card_b[None, :].astype(jnp.float32) - inter
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1.0), 0.0)

@@ -1,0 +1,20 @@
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_dataset
+from repro.sketch.goldfinger import fingerprint_dataset
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    return make_dataset("ml1M", scale=0.08, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_gf(small_ds):
+    return fingerprint_dataset(small_ds, n_bits=512)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

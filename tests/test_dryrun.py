@@ -1,0 +1,76 @@
+"""Dry-run integration: one real cell lowers + compiles on the production
+mesh with 512 emulated devices (subprocess so the device count and the
+XLA_FLAGS never leak into the test session). Uses a throwaway tag so the
+recorded baseline artifacts are untouched."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def test_dryrun_cell_compiles_on_512_devices(tmp_path):
+    code = r"""
+import repro.launch.dryrun as dr
+from pathlib import Path
+import sys
+dr.ART = Path(sys.argv[1])
+rec = dr.run_cell("xlstm-125m", "decode_32k", multi_pod=True,
+                  force=True, tag="_citest")
+assert rec["status"] == "ok", rec
+assert rec["n_devices"] == 512
+a = rec["analysis"]
+assert a["flops_per_device"] > 0
+assert a["collective_bytes_per_device"] >= 0
+assert rec["memory"]["temp_size_in_bytes"] > 0
+print("DRYRUN_OK", rec["collectives"]["total_bytes_per_device"])
+"""
+    r = subprocess.run([sys.executable, "-c", code, str(tmp_path)],
+                       env=ENV, capture_output=True, text=True, timeout=420)
+    assert "DRYRUN_OK" in r.stdout, r.stdout + r.stderr
+    rec = json.loads(
+        (tmp_path / "xlstm-125m_decode_32k_multipod_citest.json")
+        .read_text())
+    assert rec["status"] == "ok"
+
+
+def test_dryrun_records_long500k_skips(tmp_path):
+    code = r"""
+import repro.launch.dryrun as dr
+from pathlib import Path
+import sys
+dr.ART = Path(sys.argv[1])
+rec = dr.run_cell("gemma-2b", "long_500k", multi_pod=False,
+                  force=True, tag="_citest")
+assert rec["status"] == "skipped" and "sub-quadratic" in rec["reason"]
+print("SKIP_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code, str(tmp_path)],
+                       env=ENV, capture_output=True, text=True, timeout=180)
+    assert "SKIP_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_all_baseline_artifacts_green():
+    """The committed dry-run record: 40 cells × 2 meshes, zero failures."""
+    art = os.path.join(REPO, "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        import pytest
+
+        pytest.skip("dry-run artifacts not generated yet")
+    from repro.configs import ARCH_IDS
+    from repro.configs.shapes import SHAPES
+
+    n_ok = n_skip = 0
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("pod", "multipod"):
+                f = os.path.join(art, f"{arch}_{shape}_{mesh}.json")
+                assert os.path.exists(f), f"missing cell {f}"
+                rec = json.load(open(f))
+                assert rec["status"] in ("ok", "skipped"), (
+                    arch, shape, mesh, rec.get("error"))
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+    assert n_ok == 64 and n_skip == 16, (n_ok, n_skip)

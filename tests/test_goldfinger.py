@@ -1,0 +1,66 @@
+"""GoldFinger sketch unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.sketch.goldfinger import (
+    fingerprint_dataset,
+    jaccard_pairwise,
+    jaccard_pairwise_mxu,
+    popcount_rows,
+)
+from repro.types import dataset_from_profiles
+
+
+def test_fingerprint_shapes(small_ds, small_gf):
+    assert small_gf.words.shape == (small_ds.n_users, 512 // 32)
+    assert small_gf.card.shape == (small_ds.n_users,)
+    assert (small_gf.card <= np.minimum(small_ds.profile_sizes, 512)).all()
+    assert (small_gf.card >= 1).all()
+
+
+def test_mxu_path_matches_popcount(small_gf):
+    w = jnp.asarray(small_gf.words[:96])
+    c = jnp.asarray(small_gf.card[:96])
+    s_pop = jaccard_pairwise(w, c, w, c)
+    s_mxu = jaccard_pairwise_mxu(w, c, w, c)
+    np.testing.assert_allclose(np.asarray(s_pop), np.asarray(s_mxu), atol=0)
+
+
+def test_identical_profiles_sim_one(small_gf):
+    w = jnp.asarray(small_gf.words[:8])
+    c = jnp.asarray(small_gf.card[:8])
+    s = np.asarray(jaccard_pairwise(w, c, w, c))
+    np.testing.assert_allclose(np.diag(s), 1.0)
+
+
+def test_disjoint_profiles_sim_zero():
+    ds = dataset_from_profiles("d", [[0, 1, 2], [100, 101, 102]], 200)
+    gf = fingerprint_dataset(ds, n_bits=1024)
+    s = np.asarray(jaccard_pairwise(
+        jnp.asarray(gf.words), jnp.asarray(gf.card),
+        jnp.asarray(gf.words), jnp.asarray(gf.card)))
+    # Disjoint → near 0 (exactly 0 unless the 6 items collide in 1024 bits).
+    assert s[0, 1] < 0.35
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    p1=st.sets(st.integers(0, 499), min_size=1, max_size=60),
+    p2=st.sets(st.integers(0, 499), min_size=1, max_size=60),
+)
+def test_goldfinger_estimates_jaccard(p1, p2):
+    """GoldFinger (2048 bits, few collisions) ≈ exact Jaccard."""
+    ds = dataset_from_profiles("h", [sorted(p1), sorted(p2)], 500)
+    gf = fingerprint_dataset(ds, n_bits=2048)
+    s = float(np.asarray(jaccard_pairwise(
+        jnp.asarray(gf.words), jnp.asarray(gf.card),
+        jnp.asarray(gf.words), jnp.asarray(gf.card)))[0, 1])
+    exact = len(p1 & p2) / len(p1 | p2)
+    assert abs(s - exact) <= 0.12
+
+
+def test_popcount_rows():
+    w = np.array([[0, 0xFFFFFFFF, 0x0F0F0F0F]], dtype=np.uint32)
+    assert popcount_rows(w)[0] == 32 + 16

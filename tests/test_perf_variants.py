@@ -1,0 +1,96 @@
+"""§Perf optimization variants must be semantically equivalent to their
+baselines — these tests pin that down."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.models import layers as L
+from repro.models.config import ModelConfig, scaled_down
+from repro.models.layers import ShardCtx
+from repro.models.model import init_params
+from repro.train.steps import loss_fn
+
+CTX = ShardCtx()
+
+
+def test_distinct_hashes_reduceat_matches_lexsort_oracle(small_ds):
+    seeds = np.arange(6, dtype=np.int32)
+    ih = hashing.item_hashes(small_ds.items, seeds, 256)
+    fast = hashing.user_distinct_hashes_np(ih, small_ds.offsets, 5)
+    ref = hashing.user_distinct_hashes_np_ref(ih, small_ds.offsets, 5)
+    np.testing.assert_array_equal(fast, ref)
+
+
+def test_chunkwise_mlstm_matches_sequential():
+    cfg0 = ModelConfig(name="x", family="ssm", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=128,
+                       head_dim=16, block_pattern=(("mlstm",),))
+    cfg1 = dataclasses.replace(cfg0, mlstm_chunk=16)
+    p = L.init_mlstm(jax.random.key(0), cfg0)
+    x = jax.random.normal(jax.random.key(1), (2, 64, 64)).astype(jnp.bfloat16)
+    y0, _ = jax.jit(lambda p, x: L.apply_mlstm(p, x, cfg0, CTX))(p, x)
+    y1, _ = jax.jit(lambda p, x: L.apply_mlstm(p, x, cfg1, CTX))(p, x)
+    rel = (float(jnp.max(jnp.abs(y0.astype(jnp.float32)
+                                 - y1.astype(jnp.float32))))
+           / float(jnp.max(jnp.abs(y0.astype(jnp.float32)))))
+    assert rel < 0.02, rel
+    _, c0 = jax.jit(lambda p, x: L.apply_mlstm(
+        p, x, cfg0, CTX, want_cache=True))(p, x)
+    _, c1 = jax.jit(lambda p, x: L.apply_mlstm(
+        p, x, cfg1, CTX, want_cache=True))(p, x)
+    np.testing.assert_allclose(np.asarray(c0["C"]), np.asarray(c1["C"]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c0["n"]), np.asarray(c1["n"]),
+                               atol=1e-4)
+
+
+def test_chunked_loss_matches_unchunked():
+    from repro.configs import get_config
+
+    cfg = scaled_down(get_config("llama3_2-1b"))
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    l0, _ = jax.jit(lambda p, b: loss_fn(p, b, cfg, CTX, True, 0))(
+        params, batch)
+    l1, _ = jax.jit(lambda p, b: loss_fn(p, b, cfg, CTX, True, 8))(
+        params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), atol=1e-4)
+
+
+def test_save_tp_remat_policy_matches_full():
+    """remat='save_tp' must not change gradients (only what's recomputed)."""
+    from repro.configs import get_config
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.steps import train_step
+
+    cfg = scaled_down(get_config("gemma-2b"))
+    params = init_params(jax.random.key(0), cfg)
+    oc = OptConfig()
+    opt = init_opt_state(params, oc)
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    _, _, m0 = jax.jit(lambda p, o, b: train_step(
+        p, o, b, cfg, CTX, oc, remat=True))(params, opt, batch)
+    _, _, m1 = jax.jit(lambda p, o, b: train_step(
+        p, o, b, cfg, CTX, oc, remat="save_tp"))(params, opt, batch)
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]),
+                               atol=1e-5)
+
+
+def test_incidence_fingerprint_is_exact_jaccard(small_ds):
+    from repro.sketch.exact import edge_jaccard
+    from repro.sketch.goldfinger import incidence_fingerprint, \
+        jaccard_pairwise
+
+    gf = incidence_fingerprint(small_ds)
+    w = jnp.asarray(gf.words[:24])
+    c = jnp.asarray(gf.card[:24])
+    sims = np.asarray(jaccard_pairwise(w, c, w, c))
+    src = np.repeat(np.arange(24, dtype=np.int32), 24)
+    dst = np.tile(np.arange(24, dtype=np.int32), 24)
+    ref = edge_jaccard(small_ds, src, dst).reshape(24, 24)
+    np.testing.assert_allclose(sims, ref, atol=1e-6)

@@ -1,0 +1,180 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.knn.topk import dedup_mask, merge_topk
+from repro.types import NEG_INF, PAD_ID
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.lists(st.integers(-1, 20), min_size=4, max_size=12),
+                min_size=1, max_size=6))
+def test_dedup_mask_keeps_exactly_one_of_each(rows):
+    c = max(len(r) for r in rows)
+    ids = np.full((len(rows), c), PAD_ID, np.int32)
+    for i, r in enumerate(rows):
+        ids[i, : len(r)] = r
+    mask = np.asarray(dedup_mask(jnp.asarray(ids)))
+    for i, row in enumerate(ids):
+        for v in np.unique(row):
+            assert mask[i][row == v].sum() == 1
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 40), st.integers(1, 12), st.integers(0, 2**31 - 2))
+def test_merge_topk_invariants(c, k, seed):
+    rng = np.random.default_rng(seed)
+    n = 5
+    ids = rng.integers(0, 30, size=(n, c)).astype(np.int32)
+    ids[rng.random((n, c)) < 0.2] = PAD_ID
+    sims = rng.random((n, c)).astype(np.float32)
+    self_ids = jnp.arange(n, dtype=jnp.int32)
+    out_ids, out_sims = merge_topk(jnp.asarray(ids), jnp.asarray(sims), k,
+                                   self_ids)
+    out_ids, out_sims = np.asarray(out_ids), np.asarray(out_sims)
+    rows = np.arange(n)[:, None]
+    assert not (out_ids == rows).any(), "self edge survived"
+    finite = np.where(out_ids != PAD_ID, out_sims, -1e30)
+    assert (np.diff(finite, axis=1) <= 1e-6).all(), "not sorted"
+    for i in range(n):
+        live = out_ids[i][out_ids[i] != PAD_ID]
+        assert len(live) == len(set(live.tolist())), "duplicate neighbor"
+        # Every returned (id, sim) must exist in the candidates.
+        for v, s in zip(out_ids[i], out_sims[i]):
+            if v == PAD_ID:
+                continue
+            j = np.flatnonzero(ids[i] == v)
+            assert np.isclose(sims[i][j], s).any()
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 64), st.integers(0, 10_000))
+def test_rope_preserves_norm_and_relative_angle(hd2, pos):
+    from repro.models.layers import rope
+
+    hd = hd2 * 2
+    x = jax.random.normal(jax.random.key(hd2), (1, 1, 1, hd))
+    p = jnp.full((1, 1), pos, jnp.int32)
+    y = rope(x.astype(jnp.float32), p, 10_000.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-4)
+
+
+def test_rope_relative_position_property():
+    """⟨rope(q,i), rope(k,j)⟩ depends only on i−j."""
+    from repro.models.layers import rope
+
+    q = jax.random.normal(jax.random.key(0), (1, 1, 1, 32), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (1, 1, 1, 32), jnp.float32)
+
+    def dot(i, j):
+        qi = rope(q, jnp.full((1, 1), i, jnp.int32), 10_000.0)
+        kj = rope(k, jnp.full((1, 1), j, jnp.int32), 10_000.0)
+        return float(jnp.sum(qi * kj))
+
+    np.testing.assert_allclose(dot(5, 3), dot(105, 103), rtol=1e-4)
+    np.testing.assert_allclose(dot(17, 0), dot(1017, 1000), rtol=1e-4)
+
+
+def test_hlo_analysis_on_synthetic_module():
+    """The cost model on a hand-written HLO: dot flops, while trip
+    multiplication, collective bytes."""
+    from repro.launch.hlo_analysis import analyze
+
+    hlo = """
+HloModule test
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %d = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16] all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %lim), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%z, %a)
+  %w = (s32[], f32[8,16]) while(%t0), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,16] get-tuple-element(%w), index=1
+}
+"""
+    a = analyze(hlo)
+    # dot: 2·8·16·16 = 4096 flops × 10 trips.
+    assert a["flops_per_device"] == 4096 * 10
+    # all-reduce: 8·16·4 bytes × 10 trips.
+    assert a["collective_bytes_per_device"] == 512 * 10
+
+
+def test_elastic_restore_across_device_counts(tmp_path):
+    """Save under an 8-device mesh layout, restore under 1 device
+    (restore_sharded re-places leaves under the new mesh)."""
+    import subprocess
+    import sys
+    import os
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import checkpoint as ckpt
+mesh = jax.make_mesh((8,), ("data",))
+x = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
+                   NamedSharding(mesh, P("data", None)))
+ckpt.save(r"{tmp_path}", {{"w": x}}, step=3)
+print("SAVED")
+"""
+    r = subprocess.run([sys.executable, "-c", code],
+                       env={**os.environ,
+                            "PYTHONPATH": os.path.join(repo, "src")},
+                       capture_output=True, text=True, timeout=180)
+    assert "SAVED" in r.stdout, r.stdout + r.stderr
+    # Restore in THIS process (1 device).
+    from repro import checkpoint as ckpt
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh1 = jax.make_mesh((1,), ("data",))
+    like = {"w": np.zeros((8, 8), np.float32)}
+    sh = {"w": NamedSharding(mesh1, P("data", None))}
+    (tree, step) = ckpt.restore_sharded(tmp_path, like, sh)
+    assert step == 3
+    np.testing.assert_array_equal(
+        np.asarray(tree["w"]), np.arange(64, dtype=np.float32).reshape(8, 8))
+
+
+def test_data_pipeline_deterministic_and_c2_ordered():
+    from repro.configs import get_config
+    from repro.data.tokens import DataConfig, TokenPipeline
+    from repro.models.config import scaled_down
+
+    cfg = scaled_down(get_config("llama3_2-1b"))
+    dc = DataConfig(seq_len=32, global_batch=4, seed=5, n_docs=256)
+    p1, p2 = TokenPipeline(cfg, dc), TokenPipeline(cfg, dc)
+    for step in (0, 3, 17):
+        np.testing.assert_array_equal(p1.batch(step)["tokens"],
+                                      p2.batch(step)["tokens"])
+    # c2 ordering is a permutation of docs and is itself deterministic.
+    dc2 = DataConfig(seq_len=32, global_batch=4, seed=5, n_docs=256,
+                     ordering="c2")
+    q1, q2 = TokenPipeline(cfg, dc2), TokenPipeline(cfg, dc2)
+    assert sorted(q1._order.tolist()) == list(range(256))
+    np.testing.assert_array_equal(q1._order, q2._order)
+    np.testing.assert_array_equal(q1.batch(7)["tokens"],
+                                  q2.batch(7)["tokens"])

@@ -1,0 +1,72 @@
+"""Serving engine tests: wave batching, EOS, latency accounting, and
+decode-vs-prefill consistency under left-padding."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.config import scaled_down
+from repro.models.model import init_params
+from repro.serve.engine import Engine, Request, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = scaled_down(get_config("gemma-2b"))
+    params = init_params(jax.random.key(0), cfg)
+    return Engine(params, cfg, ServeConfig(max_batch=3, max_prompt=16,
+                                           max_new=8))
+
+
+def test_engine_drains_queue_in_waves(engine):
+    rng = np.random.default_rng(1)
+    for rid in range(7):
+        engine.submit(Request(
+            rid=rid, prompt=rng.integers(0, 200, 8).astype(np.int32),
+            max_new=4))
+    stats = engine.run()
+    assert stats["requests"] == 7
+    assert stats["waves"] == 3  # 3 + 3 + 1
+    assert all(r.output is not None and len(r.output) == 4
+               for r in engine.done)
+    assert stats["tokens_per_s"] > 0
+    assert stats["p95_latency_s"] >= stats["mean_latency_s"] > 0
+    engine.done.clear()
+
+
+def test_engine_eos_truncation(engine):
+    # eos = the token the model actually produces first → length 1 output.
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, 200, 8).astype(np.int32)
+    engine.submit(Request(rid=100, prompt=prompt, max_new=8))
+    engine.run()
+    first_tok = int(engine.done[-1].output[0])
+    engine.submit(Request(rid=101, prompt=prompt, max_new=8,
+                          eos_id=first_tok))
+    engine.run()
+    assert len(engine.done[-1].output) == 1
+    engine.done.clear()
+
+
+def test_engine_rejects_overlong_prompt(engine):
+    with pytest.raises(AssertionError):
+        engine.submit(Request(
+            rid=0, prompt=np.zeros(99, np.int32), max_new=2))
+
+
+def test_greedy_generate_matches_engine_single():
+    """Engine output for a lone request == direct greedy_generate."""
+    from repro.serve.steps import greedy_generate
+    from repro.models.layers import ShardCtx
+
+    cfg = scaled_down(get_config("llama3_2-1b"))
+    params = init_params(jax.random.key(0), cfg)
+    prompt = np.arange(1, 13, dtype=np.int32) % cfg.vocab_size
+    sc = ServeConfig(max_batch=1, max_prompt=12, max_new=6)
+    eng = Engine(params, cfg, sc)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=6))
+    eng.run()
+    direct = greedy_generate(params, prompt[None, :], cfg, ShardCtx(),
+                             max_new=6, s_alloc=12 + 6)
+    np.testing.assert_array_equal(eng.done[0].output,
+                                  np.asarray(direct)[0])

@@ -1,0 +1,89 @@
+"""Recursive splitting invariants (paper §II-D)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hashing
+from repro.core.clustering import build_plan
+from repro.core.params import C2Params
+from repro.core.splitting import split_config
+from repro.data.synthetic import make_dataset
+from repro.types import dataset_from_profiles
+
+
+def _cands_for(ds, seed, b, depth):
+    item_h = hashing.item_hashes(ds.items, np.array([seed], np.int32), b)
+    return hashing.user_distinct_hashes_np(item_h, ds.offsets, depth)[0]
+
+
+def test_partition_preserves_all_users(small_ds):
+    cands = _cands_for(small_ds, 0, 64, 6)
+    res = split_config(cands, max_cluster=40)
+    all_users = np.concatenate(res.members)
+    assert len(all_users) == len(np.unique(all_users))
+    valid = cands[:, 0] != hashing.NO_HASH
+    assert set(all_users.tolist()) == set(np.flatnonzero(valid).tolist())
+
+
+def test_split_reduces_max_cluster(small_ds):
+    cands = _cands_for(small_ds, 0, 16, 6)  # tiny b → huge skew
+    unsplit = split_config(cands, max_cluster=10**9)
+    split = split_config(cands, max_cluster=50)
+    assert split.sizes.max() <= max(50, unsplit.sizes.max() // 2) \
+        or split.sizes.max() < unsplit.sizes.max()
+    assert len(split.members) > len(unsplit.members)
+
+
+def test_paths_are_strictly_increasing(small_ds):
+    cands = _cands_for(small_ds, 1, 32, 6)
+    res = split_config(cands, max_cluster=30)
+    for path in res.paths:
+        assert all(a < b for a, b in zip(path, path[1:]))
+
+
+def test_members_match_path_semantics(small_ds):
+    """Every member of a cluster with path (η₁..η_d) has exactly that
+    prefix of distinct hash values."""
+    cands = _cands_for(small_ds, 2, 32, 6)
+    res = split_config(cands, max_cluster=30)
+    for mem, path in zip(res.members, res.paths):
+        d = len(path)
+        for u in mem[:10]:
+            seq = cands[u][cands[u] != hashing.NO_HASH]
+            # The user followed this path: its first d distinct hashes start
+            # with the path, OR it stayed early (exhausted / singleton).
+            assert seq[0] == path[0]
+            upto = min(d, len(seq))
+            assert tuple(seq[:upto]) == path[:upto]
+
+
+@settings(deadline=None, max_examples=10)
+@given(n_users=st.integers(20, 120), b=st.sampled_from([8, 32, 128]),
+       cap=st.integers(4, 60), seed=st.integers(0, 10))
+def test_split_partition_property(n_users, b, cap, seed):
+    rng = np.random.default_rng(seed)
+    profiles = [rng.choice(500, size=rng.integers(1, 30), replace=False)
+                for _ in range(n_users)]
+    ds = dataset_from_profiles("x", [sorted(p) for p in profiles], 500)
+    cands = _cands_for(ds, seed, b, 6)
+    res = split_config(cands, max_cluster=cap)
+    allu = np.concatenate(res.members) if res.members else np.array([])
+    assert len(allu) == len(np.unique(allu)) == ds.n_users
+
+
+def test_plan_covers_every_config(small_ds):
+    p = C2Params(k=5, b=128, t=4, max_cluster=100)
+    plan = build_plan(small_ds, p)
+    assert plan.t == 4
+    assert set(np.unique(plan.config_of)) <= set(range(4))
+    # Each user appears at most once per configuration.
+    for cfg in range(4):
+        users = np.concatenate(
+            [m for m, c in zip(plan.members, plan.config_of) if c == cfg])
+        assert len(users) == len(np.unique(users))
+
+
+def test_ml20M_stats_plan_scales():
+    ds = make_dataset("ml10M", scale=0.02, seed=0)
+    plan = build_plan(ds, C2Params(b=256, t=2, max_cluster=200))
+    assert plan.brute_force_sims() < ds.n_users * (ds.n_users - 1) // 2
