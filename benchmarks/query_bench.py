@@ -1,0 +1,94 @@
+"""Query-serving benchmark: QPS, latency percentiles, recall@k vs brute
+force, for cold (compile included) and warm waves, plus online-insert
+throughput.
+
+    PYTHONPATH=src python benchmarks/query_bench.py [--dataset synth]
+        [--scale 0.2] [--queries 256] [--out BENCH_query.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.params import params_for
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import build_index
+
+
+def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
+        k: int = 10, beam: int = 32, hops: int = 3, seed: int = 0) -> dict:
+    ds = make_dataset(dataset, scale=scale, seed=seed)
+    params = params_for(dataset, k=k, b=max(64, ds.n_users // 16),
+                        max_cluster=max(48, int(0.06 * ds.n_users)))
+    t0 = time.perf_counter()
+    index = build_index(ds, params)
+    t_build = time.perf_counter() - t0
+
+    engine = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
+                                            max_wave=n_queries))
+    qds = make_dataset(dataset, scale=scale, seed=seed + 1)
+    n_q = min(n_queries, qds.n_users)
+    profiles = [qds.profile(u) for u in range(n_q)]
+
+    def wave(tag: str) -> dict:
+        for rid, p in enumerate(profiles):
+            engine.submit(QueryRequest(rid=rid, profile=p))
+        stats = engine.run()
+        recall = engine.recall_vs_brute_force(engine.done[-n_q:])
+        return {
+            "tag": tag,
+            "qps": round(stats["qps"], 1),
+            "p50_latency_ms": round(stats["p50_latency_s"] * 1e3, 2),
+            "p95_latency_ms": round(stats["p95_latency_s"] * 1e3, 2),
+            f"recall_at_{k}": round(recall, 4),
+        }
+
+    cold = wave("cold")        # includes descent compilation
+    warm = wave("warm")        # compiled program reused
+
+    t0 = time.perf_counter()
+    n_ins = min(32, qds.n_users - n_q)
+    for m in range(n_ins):
+        engine.insert(qds.profile(n_q + m))
+    t_ins = time.perf_counter() - t0
+
+    return {
+        "dataset": ds.name,
+        "n_users": ds.n_users,
+        "n_queries": n_q,
+        "k": k,
+        "beam": beam,
+        "hops": hops,
+        "t_build_s": round(t_build, 2),
+        "cold": cold,
+        "warm": warm,
+        "inserts": n_ins,
+        "inserts_per_s": round(n_ins / max(t_ins, 1e-9), 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="synth")
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--beam", type=int, default=32)
+    ap.add_argument("--hops", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_query.json")
+    args = ap.parse_args()
+
+    rec = run(args.dataset, args.scale, args.queries, args.k, args.beam,
+              args.hops)
+    Path(args.out).write_text(json.dumps(rec, indent=2))
+    print(json.dumps(rec, indent=2))
+    print(f"[query_bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

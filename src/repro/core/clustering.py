@@ -26,6 +26,10 @@ class ClusterPlan:
     config_of: np.ndarray        # int32[n_clusters] — hash config index
     n_users: int
     t: int
+    # Split path (η₁..η_d) per cluster, when retained by the builder.
+    # The query router replays these paths to place an unseen profile in
+    # its cluster per configuration (repro/query/router.py).
+    paths: list[tuple[int, ...]] | None = None
 
     @property
     def n_clusters(self) -> int:
@@ -41,23 +45,31 @@ class ClusterPlan:
         return int((s * (s - 1) // 2).sum())
 
 
+def frh_seeds(params: C2Params) -> np.ndarray:
+    """Per-configuration FastRandomHash seeds (shared with the query router)."""
+    return np.arange(params.t, dtype=np.int32) + np.int32(params.seed * 1009)
+
+
 def build_plan(ds: Dataset, params: C2Params) -> ClusterPlan:
     """Cluster all users under t FastRandomHash functions + recursive split."""
-    seeds = np.arange(params.t, dtype=np.int32) + np.int32(params.seed * 1009)
+    seeds = frh_seeds(params)
     item_h = hashing.item_hashes(ds.items, seeds, params.b)  # [t, nnz]
     cands = hashing.user_distinct_hashes_np(item_h, ds.offsets, params.split_depth)
 
     members: list[np.ndarray] = []
     config_of: list[int] = []
+    paths: list[tuple[int, ...]] = []
     for i in range(params.t):
         res: SplitResult = split_config(cands[i], params.max_cluster)
-        for mem in res.members:
+        for mem, path in zip(res.members, res.paths):
             if len(mem) >= 2:  # singleton clusters yield no edges
                 members.append(mem)
                 config_of.append(i)
+                paths.append(path)
     return ClusterPlan(
         members=members,
         config_of=np.array(config_of, dtype=np.int32),
         n_users=ds.n_users,
         t=params.t,
+        paths=paths,
     )

@@ -33,8 +33,10 @@ class DatasetSpec:
     topic_affinity: float  # fraction of a profile drawn from the home topic
 
 
-# Paper Table I statistics.
+# Paper Table I statistics. "synth" is a CI-sized non-paper dataset for
+# serving demos and smoke benchmarks (small universe, strong communities).
 PAPER_DATASETS = {
+    "synth": DatasetSpec("synth", 4_000, 2_000, 60.0, 1.1, 16, 0.8),
     "ml1M":  DatasetSpec("ml1M", 6_038, 3_533, 95.28, 1.1, 24, 0.75),
     "ml10M": DatasetSpec("ml10M", 69_816, 10_472, 84.30, 1.1, 48, 0.75),
     "ml20M": DatasetSpec("ml20M", 138_362, 22_884, 88.14, 1.1, 64, 0.75),

@@ -26,6 +26,22 @@ def quality(ds: Dataset, approx: KNNGraph, exact: KNNGraph) -> float:
     return exact_avg_sim(ds, approx) / denom
 
 
+def knn_recall(approx_ids: np.ndarray, exact_ids: np.ndarray) -> float:
+    """Mean per-row recall@k of approximate KNN ids vs exact ids.
+
+    Rows are id lists (PAD_ID = absent); each row scores
+    |approx ∩ exact| / |exact|. Used by the query-serving recall metric.
+    """
+    vals = []
+    for a, e in zip(approx_ids, exact_ids):
+        e = e[e != PAD_ID]
+        if len(e) == 0:
+            continue
+        a = a[a != PAD_ID]
+        vals.append(len(np.intersect1d(a, e)) / len(e))
+    return float(np.mean(vals)) if vals else 0.0
+
+
 def recommend(train: Dataset, graph: KNNGraph, n_rec: int = 30) -> list[np.ndarray]:
     """Simple user-based CF (paper §V-B): score items by the summed
     similarity of neighbors who have them; recommend top ``n_rec`` unseen."""

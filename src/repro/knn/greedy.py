@@ -137,6 +137,9 @@ def _reverse_neighbors_np(ids: np.ndarray, r_max: int) -> np.ndarray:
     return rev
 
 
+reverse_neighbors_np = _reverse_neighbors_np  # public alias (query index)
+
+
 def hyrec(gf: GoldFinger, k: int, max_iters: int = 30, delta: float = 0.001,
           seed: int = 0, ids0: np.ndarray | None = None):
     """Hyrec KNN graph construction."""

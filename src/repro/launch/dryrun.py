@@ -217,6 +217,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax: list of dicts
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         from repro.launch.hlo_analysis import analyze
 

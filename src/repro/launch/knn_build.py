@@ -26,8 +26,9 @@ from repro.types import NEG_INF, PAD_ID
 
 
 def build(ds, params: C2Params, ckpt_dir: str | None = None,
-          mesh=None, verbose: bool = True):
-    gf = fingerprint_dataset(ds, n_bits=params.n_bits, seed=params.seed)
+          mesh=None, verbose: bool = True, gf=None):
+    if gf is None:
+        gf = fingerprint_dataset(ds, n_bits=params.n_bits, seed=params.seed)
     plan = build_plan(ds, params)
     t, n, k = params.t, ds.n_users, params.k
     ids = np.full((t, n, k), PAD_ID, dtype=np.int32)
@@ -81,6 +82,8 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-after-config", type=int, default=None)
+    ap.add_argument("--index-out", default=None,
+                    help="save a servable KNNIndex (.npz) for knn_serve")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -96,11 +99,20 @@ def main(argv=None):
               f"{args.fail_after_config} configs")
         raise SystemExit(42)
     t0 = time.time()
-    graph, plan = build(ds, params, ckpt_dir=args.ckpt_dir)
+    gf = fingerprint_dataset(ds, n_bits=params.n_bits, seed=params.seed)
+    graph, plan = build(ds, params, ckpt_dir=args.ckpt_dir, gf=gf)
     print(f"[knn] built KNN graph for {ds.n_users} users in "
           f"{time.time() - t0:.2f}s "
           f"({plan.n_clusters} clusters, {plan.brute_force_sims()} sims)")
     print(f"[knn] avg_sim = {graph.avg_sim():.4f}")
+    if args.index_out:
+        from repro.query.index import build_index
+
+        index = build_index(ds, params, graph=graph, plan=plan, gf=gf)
+        index.save(args.index_out)
+        print(f"[knn] servable index saved to {args.index_out} "
+              f"(serve with: python -m repro.launch.knn_serve "
+              f"--index {args.index_out})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,94 @@
+"""Online KNN query serving CLI: build (or load) an index, serve a wave
+of unseen query profiles, report QPS / latency / recall vs brute force.
+
+    PYTHONPATH=src python -m repro.launch.knn_serve --dataset synth \
+        --scale 0.2 --queries 256
+
+Pass ``--index path.npz`` to serve a previously built artifact
+(``launch/knn_build --index-out``), and ``--insert M`` to also exercise
+online insertion before the query wave.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.params import params_for
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import KNNIndex, build_index
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="synth")
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--beam", type=int, default=32)
+    ap.add_argument("--hops", type=int, default=3)
+    ap.add_argument("--max-wave", type=int, default=256)
+    ap.add_argument("--insert", type=int, default=0,
+                    help="insert this many users online before querying")
+    ap.add_argument("--index", default=None, help="load a saved index")
+    ap.add_argument("--save-index", default=None, help="save the built index")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.index:
+        index = KNNIndex.load(args.index)
+        print(f"[serve] loaded index: {index.n} users, k={index.k}, "
+              f"t={index.t}, {index.n_clusters} clusters")
+    else:
+        ds = make_dataset(args.dataset, scale=args.scale, seed=args.seed)
+        params = params_for(args.dataset, k=args.k,
+                            b=max(64, ds.n_users // 16),
+                            max_cluster=max(48, int(0.06 * ds.n_users)))
+        t0 = time.perf_counter()
+        index = build_index(ds, params)
+        print(f"[serve] built index: {ds.n_users} users, k={params.k} "
+              f"({time.perf_counter() - t0:.2f}s, "
+              f"{index.n_clusters} clusters)")
+    if args.save_index:
+        index.save(args.save_index)
+        print(f"[serve] index saved to {args.save_index}")
+
+    engine = QueryEngine(index, QueryConfig(
+        k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave))
+
+    # Unseen profiles from the same distribution (different seed).
+    qds = make_dataset(args.dataset, scale=args.scale, seed=args.seed + 1)
+    n_q = min(args.queries, qds.n_users)
+    profiles = [qds.profile(u) for u in range(n_q)]
+
+    for m in range(args.insert):
+        engine.insert(qds.profile(qds.n_users - 1 - m))
+    if args.insert:
+        print(f"[serve] inserted {args.insert} users online "
+              f"(index now {index.n} users)")
+
+    if not profiles:
+        print("[serve] no queries requested")
+        return {"requests": 0}, 0.0
+
+    # Warm-up wave compiles the descent program; the timed run reuses it.
+    engine.submit(QueryRequest(rid=-1, profile=profiles[0]))
+    engine.run()
+    engine.done.clear()
+
+    for rid, p in enumerate(profiles):
+        engine.submit(QueryRequest(rid=rid, profile=p))
+    stats = engine.run()
+    recall = engine.recall_vs_brute_force()
+    print(f"[serve] {stats['requests']} queries in {stats['waves']} waves | "
+          f"QPS {stats['qps']:.0f} | "
+          f"p50 {stats['p50_latency_s'] * 1e3:.1f}ms | "
+          f"p95 {stats['p95_latency_s'] * 1e3:.1f}ms | "
+          f"recall@{args.k} vs brute force {recall:.3f}")
+    return stats, recall
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Online KNN query serving over built C² graphs.
+
+``index``  — frozen, servable :class:`KNNIndex` artifact (graph +
+GoldFinger fingerprints + FRH routing tables + reverse adjacency).
+``router`` — FastRandomHash placement of unseen profiles into the
+clusters of each hash configuration (seed candidates).
+``search`` — jitted, batched beam descent over the index graph.
+``engine`` — queue → wave :class:`QueryEngine` with online insertion.
+"""
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import KNNIndex, build_index
+from repro.query.router import route
+from repro.query.search import batched_descent, exact_knn
+
+__all__ = [
+    "KNNIndex", "build_index", "route", "batched_descent", "exact_knn",
+    "QueryConfig", "QueryEngine", "QueryRequest",
+]

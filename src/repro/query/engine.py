@@ -1,0 +1,195 @@
+"""Queue → wave query engine over a :class:`~repro.query.index.KNNIndex`.
+
+Modeled on ``serve/engine.py``: requests queue up, are drained in waves
+of up to ``max_wave``, and each wave runs one jitted
+:func:`~repro.query.search.batched_descent`. Wave row-counts and the
+index row-count are padded to power-of-two capacities so each (capacity,
+beam, hops, k) shape compiles once and is reused across waves — the same
+padded-capacity-group discipline as ``core/local_knn.py``.
+
+Online insertion: :meth:`QueryEngine.insert` searches for the new
+profile's neighbors, appends its fingerprint + forward edges to the
+index, patches reverse edges (bounded-heap displacement), and registers
+the user in its FRH clusters so subsequent queries route to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.local_knn import capacity_of
+from repro.eval.metrics import knn_recall
+from repro.query.index import KNNIndex
+from repro.query.router import (fingerprint_profiles, placements,
+                                profiles_to_csr, route)
+from repro.query.search import batched_descent, exact_knn
+from repro.types import PAD_ID
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    rid: int
+    profile: np.ndarray                  # int32[|P|] item ids
+    # Filled by the engine:
+    ids: Optional[np.ndarray] = None     # int32[k] neighbor ids
+    sims: Optional[np.ndarray] = None    # float32[k] similarities
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryConfig:
+    k: int = 10                # neighbors returned per query
+    beam: int = 32             # descent frontier width
+    hops: int = 3              # descent depth (fixed, compiled in)
+    max_wave: int = 256        # queries per jitted wave
+    seeds_per_config: int = 16 # routed seed candidates per hash config
+
+
+class QueryEngine:
+    def __init__(self, index: KNNIndex, qc: QueryConfig | None = None):
+        self.index = index
+        self.qc = qc or QueryConfig()
+        self.queue: deque[QueryRequest] = deque()
+        self.done: list[QueryRequest] = []
+        self.n_inserted = 0
+        self._dev = None          # (version, n_cap, device arrays)
+
+    # -- device state ------------------------------------------------------
+
+    def _sync(self):
+        """Device copies of the index, padded to a power-of-two row count
+        (re-uploaded only when the index version changes; recompiles only
+        when the capacity crosses a power of two)."""
+        ix = self.index
+        if self._dev is not None and self._dev[0] == ix.version:
+            return self._dev[2]
+        n, cap = ix.n, capacity_of(ix.n, minimum=64)
+        pad = cap - n
+        arrays = (
+            jnp.asarray(np.pad(ix.graph_ids, ((0, pad), (0, 0)),
+                               constant_values=PAD_ID)),
+            jnp.asarray(np.pad(ix.rev_ids, ((0, pad), (0, 0)),
+                               constant_values=PAD_ID)),
+            jnp.asarray(np.pad(ix.words, ((0, pad), (0, 0)))),
+            jnp.asarray(np.pad(ix.card, (0, pad))),
+        )
+        self._dev = (ix.version, cap, arrays)
+        return arrays
+
+    # -- core batched path -------------------------------------------------
+
+    def query_batch(self, profiles, k: int | None = None):
+        """Answer a batch of raw profiles: (ids int32[q, k], sims f32[q, k])."""
+        items, offsets = profiles_to_csr(profiles)
+        qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
+                                   self.index.fp_seed)
+        return self._descend(items, offsets, qgf, k or self.qc.k)
+
+    def _descend(self, items, offsets, qgf, k: int, placed=None):
+        """Route + beam-descend already-fingerprinted query profiles."""
+        qc = self.qc
+        beam = max(qc.beam, k)
+        graph_ids, rev_ids, words, card = self._sync()
+        seeds = route(self.index, items, offsets, qc.seeds_per_config,
+                      placed=placed)
+        qn = len(offsets) - 1
+        qcap = capacity_of(qn, minimum=8)
+        qw = np.zeros((qcap, qgf.words.shape[1]), dtype=np.uint32)
+        qw[:qn] = qgf.words
+        qcard = np.zeros(qcap, dtype=np.int32)
+        qcard[:qn] = qgf.card
+        qseeds = np.full((qcap, seeds.shape[1]), PAD_ID, dtype=np.int32)
+        qseeds[:qn] = seeds
+        ids, sims = batched_descent(
+            graph_ids, rev_ids, words, card,
+            jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
+            k=k, beam=beam, hops=qc.hops)
+        return np.asarray(ids)[:qn], np.asarray(sims)[:qn]
+
+    # -- queue / wave serving ----------------------------------------------
+
+    def submit(self, req: QueryRequest):
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _next_wave(self) -> list[QueryRequest]:
+        wave = []
+        while self.queue and len(wave) < self.qc.max_wave:
+            wave.append(self.queue.popleft())
+        return wave
+
+    def run(self) -> dict:
+        """Drain the queue in waves; returns aggregate serving stats."""
+        t0 = time.perf_counter()
+        n_waves = 0
+        n_new_done = 0
+        while self.queue:
+            wave = self._next_wave()
+            ids, sims = self.query_batch([r.profile for r in wave])
+            now = time.perf_counter()
+            for j, r in enumerate(wave):
+                r.ids, r.sims = ids[j], sims[j]
+                r.t_done = now
+                self.done.append(r)
+            n_waves += 1
+            n_new_done += len(wave)
+        dt = max(time.perf_counter() - t0, 1e-9)
+        lats = [r.latency for r in self.done[-n_new_done:]] if n_new_done else []
+        return {
+            "requests": n_new_done,
+            "waves": n_waves,
+            "qps": n_new_done / dt,
+            "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
+            "p50_latency_s": float(np.percentile(lats, 50)) if lats else 0.0,
+            "p95_latency_s": float(np.percentile(lats, 95)) if lats else 0.0,
+            "inserted": self.n_inserted,
+        }
+
+    # -- online insertion --------------------------------------------------
+
+    def insert(self, profile) -> int:
+        """Add a new user online; returns its id in the index.
+
+        Links the user via its own search result (graph-degree k), then
+        registers it with the FRH router so later queries seed from it.
+        """
+        ix = self.index
+        items, offsets = profiles_to_csr([profile])
+        qgf = fingerprint_profiles(items, offsets, ix.n_bits, ix.fp_seed)
+        placed = placements(ix, items, offsets)
+        ids, sims = self._descend(items, offsets, qgf, ix.k, placed=placed)
+        u = ix.append_user(np.asarray(qgf.words)[0], int(qgf.card[0]),
+                           ids[0], sims[0])
+        for matched in placed[0]:
+            if matched:  # deepest matching cluster of this configuration
+                ix.add_cluster_member(matched[0], u)
+        self.n_inserted += 1
+        return u
+
+    # -- quality -----------------------------------------------------------
+
+    def recall_vs_brute_force(self, requests: list[QueryRequest] | None = None,
+                              ) -> float:
+        """Mean recall@k of served results vs brute force over the index."""
+        reqs = requests if requests is not None else self.done
+        reqs = [r for r in reqs if r.ids is not None]
+        if not reqs:
+            return 0.0
+        items, offsets = profiles_to_csr([r.profile for r in reqs])
+        qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
+                                   self.index.fp_seed)
+        k = len(reqs[0].ids)
+        exact_ids, _ = exact_knn(self.index.words, self.index.card,
+                                 np.asarray(qgf.words),
+                                 np.asarray(qgf.card), k)
+        return knn_recall(np.stack([r.ids for r in reqs]), exact_ids)

@@ -1,0 +1,253 @@
+"""The servable KNN index artifact (build output → query input).
+
+A :class:`KNNIndex` bundles everything the online query path needs:
+
+* the merged C² :class:`~repro.types.KNNGraph` (forward adjacency),
+* the GoldFinger fingerprints of every indexed user (similarity scoring),
+* the FastRandomHash routing tables — per-configuration hash seeds plus
+  the split-path → cluster-members mapping of the build-time
+  :class:`~repro.core.clustering.ClusterPlan` — so an unseen profile can
+  be placed in *its* cluster per configuration without touching the
+  dataset (repro/query/router.py),
+* the reverse adjacency (KNN graphs are directed; descent that follows
+  forward edges only can strand a query in a sink region — cf. the
+  friend-of-a-friend principle of NNDescent/Hyrec).
+
+The artifact is a single ``.npz``: ``launch/knn_build --index-out`` emits
+it, ``launch/knn_serve --index`` loads it. Online insertion
+(:meth:`KNNIndex.append_user`) mutates the host arrays and bumps
+``version`` so engines know to refresh device copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.clustering import ClusterPlan, build_plan, frh_seeds
+from repro.core.hashing import NO_HASH
+from repro.core.local_knn import local_knn
+from repro.core.merge import merge_partial
+from repro.core.params import C2Params
+from repro.knn.greedy import reverse_neighbors_np
+from repro.sketch.goldfinger import GoldFinger, fingerprint_dataset
+from repro.types import NEG_INF, PAD_ID, Dataset, KNNGraph
+
+_META = ("b", "n_bits", "fp_seed", "split_depth", "version")
+
+
+@dataclasses.dataclass
+class KNNIndex:
+    """A built C² graph packaged for online query serving."""
+
+    # Graph + similarity state.
+    graph_ids: np.ndarray        # int32[n, k]   forward neighbors
+    graph_sims: np.ndarray       # float32[n, k] estimated Jaccard sims
+    words: np.ndarray            # uint32[n, W]  GoldFinger fingerprints
+    card: np.ndarray             # int32[n]      fingerprint popcounts
+    rev_ids: np.ndarray          # int32[n, r]   reverse neighbors (capped)
+    # FRH routing tables.
+    hash_seeds: np.ndarray       # int32[t]      per-configuration seeds
+    cluster_paths: np.ndarray    # int32[c, depth] split paths, NO_HASH pad
+    cluster_config: np.ndarray   # int32[c]      hash configuration index
+    cluster_members: np.ndarray  # int32[Σ|C|]   member CSR values
+    cluster_offsets: np.ndarray  # int64[c + 1]  member CSR offsets
+    # Hashing metadata (must match the build).
+    b: int                       # FRH range
+    n_bits: int                  # GoldFinger width
+    fp_seed: int                 # fingerprint seed
+    split_depth: int             # distinct-hash depth of the split tables
+    version: int = 0             # bumped on mutation (engine cache key)
+
+    def __post_init__(self):
+        self._lut: dict | None = None
+        # Members appended online, per cluster index (consolidated into
+        # the CSR on save).
+        self._extra_members: dict[int, list[int]] = {}
+
+    # -- shape accessors ---------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.graph_ids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.graph_ids.shape[1]
+
+    @property
+    def t(self) -> int:
+        return len(self.hash_seeds)
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.cluster_config)
+
+    @property
+    def gf(self) -> GoldFinger:
+        return GoldFinger(words=self.words, card=self.card)
+
+    @property
+    def graph(self) -> KNNGraph:
+        return KNNGraph(ids=self.graph_ids, sims=self.graph_sims)
+
+    # -- routing tables ----------------------------------------------------
+
+    def path_lut(self) -> dict:
+        """(config, split-path tuple) → cluster index."""
+        if self._lut is None:
+            lut = {}
+            for ci in range(self.n_clusters):
+                path = tuple(int(h) for h in self.cluster_paths[ci]
+                             if h != NO_HASH)
+                lut[(int(self.cluster_config[ci]), path)] = ci
+            self._lut = lut
+        return self._lut
+
+    def cluster_users(self, ci: int) -> np.ndarray:
+        """Members of cluster ``ci``, including users inserted online."""
+        base = self.cluster_members[
+            self.cluster_offsets[ci]:self.cluster_offsets[ci + 1]]
+        extra = self._extra_members.get(ci)
+        if not extra:
+            return base
+        return np.concatenate([base, np.asarray(extra, dtype=np.int32)])
+
+    def add_cluster_member(self, ci: int, user: int):
+        self._extra_members.setdefault(ci, []).append(int(user))
+
+    # -- online insertion --------------------------------------------------
+
+    def append_user(self, words_row: np.ndarray, card_row: int,
+                    nbr_ids: np.ndarray, nbr_sims: np.ndarray) -> int:
+        """Append one user and link it into the graph.
+
+        ``nbr_ids``/``nbr_sims`` are the user's search result (its forward
+        edges, ≤ k entries, PAD_ID allowed). The reverse patch applies the
+        paper's bounded-heap semantics to each neighbor: the new user
+        displaces the neighbor's worst edge iff it is closer (or the
+        neighborhood has a free slot). Arrays are reallocated per insert —
+        fine at demo scale; amortized growth is a serving-scale follow-up.
+        """
+        u = self.n
+        k, r = self.k, self.rev_ids.shape[1]
+        row_ids = np.full(k, PAD_ID, dtype=np.int32)
+        row_sims = np.full(k, NEG_INF, dtype=np.float32)
+        valid = np.flatnonzero(np.asarray(nbr_ids) != PAD_ID)[:k]
+        order = valid[np.argsort(-np.asarray(nbr_sims, dtype=np.float32)[valid],
+                                 kind="stable")]
+        row_ids[: len(order)] = np.asarray(nbr_ids)[order]
+        row_sims[: len(order)] = np.asarray(nbr_sims)[order]
+
+        self.words = np.concatenate(
+            [self.words, np.asarray(words_row, np.uint32)[None]])
+        self.card = np.concatenate(
+            [self.card, np.asarray([card_row], np.int32)])
+        self.graph_ids = np.concatenate([self.graph_ids, row_ids[None]])
+        self.graph_sims = np.concatenate([self.graph_sims, row_sims[None]])
+
+        rev_row = np.full(r, PAD_ID, dtype=np.int32)
+        n_rev = 0
+        for v, s in zip(row_ids, row_sims):
+            if v == PAD_ID:
+                break
+            v = int(v)
+            # u → v exists, so u joins rev(v) (replace the tail if full).
+            free = np.flatnonzero(self.rev_ids[v] == PAD_ID)
+            self.rev_ids[v, free[0] if len(free) else r - 1] = u
+            # Bounded-heap insert of u into v's forward neighborhood.
+            eff = np.where(self.graph_ids[v] == PAD_ID, NEG_INF,
+                           self.graph_sims[v])
+            j = int(np.argmin(eff))
+            if s > eff[j]:
+                self.graph_ids[v, j] = u
+                self.graph_sims[v, j] = s
+                o = np.argsort(-self.graph_sims[v], kind="stable")
+                self.graph_ids[v] = self.graph_ids[v, o]
+                self.graph_sims[v] = self.graph_sims[v, o]
+                if n_rev < r:  # v → u now exists, so v joins rev(u)
+                    rev_row[n_rev] = v
+                    n_rev += 1
+        self.rev_ids = np.concatenate([self.rev_ids, rev_row[None]])
+        self.version += 1
+        return u
+
+    # -- persistence -------------------------------------------------------
+
+    def consolidate(self):
+        """Fold online-inserted members into the cluster CSR."""
+        if not self._extra_members:
+            return
+        members = [self.cluster_users(ci) for ci in range(self.n_clusters)]
+        self.cluster_members = (
+            np.concatenate(members) if members
+            else np.zeros((0,), np.int32)).astype(np.int32)
+        sizes = np.array([len(m) for m in members], dtype=np.int64)
+        self.cluster_offsets = np.zeros(self.n_clusters + 1, dtype=np.int64)
+        np.cumsum(sizes, out=self.cluster_offsets[1:])
+        self._extra_members = {}
+
+    def save(self, path: str | Path):
+        self.consolidate()
+        arrays = {f.name: getattr(self, f.name)
+                  for f in dataclasses.fields(self) if f.name not in _META}
+        meta = {name: np.int64(getattr(self, name)) for name in _META}
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        np.savez(path, **arrays, **meta)
+
+    @classmethod
+    def load(cls, path: str | Path) -> "KNNIndex":
+        z = np.load(path)
+        kw = {name: z[name] for name in z.files if name not in _META}
+        kw.update({name: int(z[name]) for name in _META})
+        return cls(**kw)
+
+
+def build_index(ds: Dataset, params: C2Params | None = None, *,
+                gf: GoldFinger | None = None,
+                plan: ClusterPlan | None = None,
+                graph: KNNGraph | None = None) -> KNNIndex:
+    """Package a built C² graph (or build one) into a servable index.
+
+    Pass ``graph``/``plan``/``gf`` from an existing build (e.g.
+    ``launch/knn_build.build``) to avoid recomputation; whatever is
+    missing is computed here with ``params``.
+    """
+    params = params or C2Params()
+    if gf is None:
+        gf = fingerprint_dataset(ds, n_bits=params.n_bits, seed=params.seed)
+    if plan is None:
+        plan = build_plan(ds, params)
+    assert plan.paths is not None, "plan must retain split paths for routing"
+    if graph is None:
+        ids, sims = local_knn(plan, gf, params)
+        graph = merge_partial(ids, sims, params.k)
+
+    depth = params.split_depth
+    paths = np.full((plan.n_clusters, depth), NO_HASH, dtype=np.int32)
+    for ci, p in enumerate(plan.paths):
+        paths[ci, : len(p)] = p[:depth]
+    sizes = plan.sizes
+    offsets = np.zeros(plan.n_clusters + 1, dtype=np.int64)
+    np.cumsum(sizes, out=offsets[1:])
+    members = (np.concatenate(plan.members) if plan.members
+               else np.zeros((0,), np.int32)).astype(np.int32)
+
+    return KNNIndex(
+        graph_ids=np.ascontiguousarray(graph.ids, dtype=np.int32),
+        graph_sims=np.ascontiguousarray(graph.sims, dtype=np.float32),
+        words=np.asarray(gf.words, dtype=np.uint32),
+        card=np.asarray(gf.card, dtype=np.int32),
+        rev_ids=reverse_neighbors_np(np.asarray(graph.ids), r_max=graph.k),
+        hash_seeds=frh_seeds(params),
+        cluster_paths=paths,
+        cluster_config=plan.config_of.astype(np.int32),
+        cluster_members=members,
+        cluster_offsets=offsets,
+        b=params.b,
+        n_bits=gf.n_bits,
+        fp_seed=params.seed,
+        split_depth=depth,
+    )

@@ -1,0 +1,98 @@
+"""Jitted, batched graph descent for query serving.
+
+One compiled program answers a whole *wave* of queries (mirroring the
+padded-capacity-group style of ``core/local_knn.py``): every query keeps
+a fixed-width beam of its best candidates so far; each hop gathers the
+forward AND reverse neighbors of the beam (neighbors-of-neighbors, the
+Hyrec/NNDescent friend-of-a-friend principle), scores them against the
+query fingerprint with the GoldFinger Jaccard estimator, and re-selects
+the beam with ``merge_topk``. Beam width, hop count, and k are static,
+so the engine compiles one program per (wave capacity, beam, hops, k)
+and reuses it across waves — no divergence, no per-query control flow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.knn.topk import merge_topk
+from repro.sketch.goldfinger import jaccard_pairwise
+from repro.types import NEG_INF, PAD_ID
+
+
+def _scorer(words, card):
+    """Row scorer: sims of one query against a PAD_ID-padded id list."""
+
+    def score_row(qw, qc, cids):
+        safe = jnp.where(cids == PAD_ID, 0, cids)
+        cw = words[safe]
+        cc = jnp.where(cids == PAD_ID, 0, card[safe])
+        s = jaccard_pairwise(qw[None], qc[None], cw, cc)[0]
+        return jnp.where(cids == PAD_ID, NEG_INF, s)
+
+    return jax.vmap(score_row)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "beam", "hops"))
+def batched_descent(graph_ids, rev_ids, words, card,
+                    q_words, q_card, seed_ids, *,
+                    k: int, beam: int, hops: int):
+    """Beam search over the index graph for a wave of queries.
+
+    graph_ids int32[n, kg], rev_ids int32[n, r]: forward/reverse adjacency.
+    words uint32[n, W], card int32[n]: index fingerprints.
+    q_words uint32[q, W], q_card int32[q]: query fingerprints.
+    seed_ids int32[q, S]: routed seed candidates (PAD_ID padded).
+    Returns (ids int32[q, k], sims float32[q, k]), sim-descending.
+    """
+    nq = q_words.shape[0]
+    kg, kr = graph_ids.shape[1], rev_ids.shape[1]
+    score = _scorer(words, card)
+
+    beam_ids, beam_sims = merge_topk(
+        seed_ids, score(q_words, q_card, seed_ids), beam)
+
+    def hop(state, _):
+        bids, bsims = state
+        safe = jnp.where(bids == PAD_ID, 0, bids)
+        fwd = graph_ids[safe].reshape(nq, -1)
+        fwd = jnp.where((bids == PAD_ID).repeat(kg, axis=1), PAD_ID, fwd)
+        rev = rev_ids[safe].reshape(nq, -1)
+        rev = jnp.where((bids == PAD_ID).repeat(kr, axis=1), PAD_ID, rev)
+        cand = jnp.concatenate([fwd, rev], axis=1)      # [q, beam·(kg+kr)]
+        cand_sims = score(q_words, q_card, cand)
+        nids, nsims = merge_topk(
+            jnp.concatenate([bids, cand], axis=1),
+            jnp.concatenate([bsims, cand_sims], axis=1), beam)
+        return (nids, nsims), None
+
+    (beam_ids, beam_sims), _ = jax.lax.scan(
+        hop, (beam_ids, beam_sims), None, length=hops)
+    return merge_topk(beam_ids, beam_sims, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _exact_block(words, card, q_words, q_card, k: int):
+    sims = jaccard_pairwise(q_words, q_card, words, card)
+    top_sims, top_ids = jax.lax.top_k(sims, k)
+    top_ids = jnp.where(top_sims == NEG_INF, PAD_ID, top_ids.astype(jnp.int32))
+    return top_ids, top_sims
+
+
+def exact_knn(words, card, q_words, q_card, k: int, block: int = 256):
+    """Brute-force query KNN (ground truth for recall), query-blocked."""
+    words, card = jnp.asarray(words), jnp.asarray(card)
+    q = q_words.shape[0]
+    ids_out = np.full((q, k), PAD_ID, dtype=np.int32)
+    sims_out = np.full((q, k), NEG_INF, dtype=np.float32)
+    for s in range(0, q, block):
+        e = min(s + block, q)
+        ids, sims = _exact_block(words, card,
+                                 jnp.asarray(q_words[s:e]),
+                                 jnp.asarray(q_card[s:e]), k)
+        ids_out[s:e] = np.asarray(ids)
+        sims_out[s:e] = np.asarray(sims)
+    return ids_out, sims_out

@@ -92,11 +92,21 @@ class Engine:
         tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         max_new = min(sc.max_new, max(r.max_new for r in wave))
         outs = [np.asarray(tok)[:, 0]]
+        # Per-row completion on host: a row is done once it has emitted its
+        # eos_id or its own max_new tokens; when every row is done the wave
+        # stops decoding instead of running out the full max_new budget.
+        eos_ids = np.array([r.eos_id for r in wave], dtype=np.int64)
+        max_per_row = np.array([r.max_new for r in wave], dtype=np.int64)
+        row_done = ((outs[0] == eos_ids) & (eos_ids >= 0)) | (max_per_row <= 1)
         for i in range(max_new - 1):
+            if row_done.all():
+                break
             logits, cache = self._decode(self.params, cache, tok, S + i)
             tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
             outs.append(np.asarray(tok)[:, 0])
-        gen = np.stack(outs, axis=1)  # [B, max_new]
+            row_done |= (outs[-1] == eos_ids) & (eos_ids >= 0)
+            row_done |= max_per_row <= len(outs)
+        gen = np.stack(outs, axis=1)  # [B, n_emitted]
         now = time.perf_counter()
         for j, r in enumerate(wave):
             seq = gen[j, : r.max_new]

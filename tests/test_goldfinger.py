@@ -1,6 +1,9 @@
 """GoldFinger sketch unit + property tests."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # [test] extra; skip, don't break collection
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

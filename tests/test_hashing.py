@@ -1,5 +1,8 @@
 """FastRandomHash unit + property tests, incl. Theorem 1 (paper §III)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # [test] extra; skip, don't break collection
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,117 @@
+"""Query-serving subsystem tests: routing, descent recall, online
+insertion, and index persistence."""
+import numpy as np
+import pytest
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import KNNIndex, build_index
+from repro.query.router import profiles_to_csr, route
+from repro.types import PAD_ID
+
+
+@pytest.fixture(scope="module")
+def index():
+    ds = make_dataset("synth", scale=0.15, seed=3)
+    return build_index(ds, C2Params(k=10, b=64, t=8, max_cluster=48))
+
+
+@pytest.fixture(scope="module")
+def engine(index):
+    return QueryEngine(index, QueryConfig(k=10, beam=32, hops=3,
+                                          max_wave=64))
+
+
+@pytest.fixture(scope="module")
+def query_profiles():
+    qds = make_dataset("synth", scale=0.15, seed=77)
+    return [qds.profile(u) for u in range(64)]
+
+
+def test_router_returns_seeds_for_clustered_queries(index, query_profiles):
+    items, offsets = profiles_to_csr(query_profiles)
+    seeds = route(index, items, offsets, seeds_per_config=16)
+    assert seeds.shape == (len(query_profiles), index.t * 16)
+    # Every query gets at least one seed (fallback guarantees it) and all
+    # seeds are valid user ids.
+    assert ((seeds != PAD_ID).sum(axis=1) > 0).all()
+    valid = seeds[seeds != PAD_ID]
+    assert (0 <= valid).all() and (valid < index.n).all()
+
+
+def test_engine_recall_vs_brute_force(engine, query_profiles):
+    for rid, p in enumerate(query_profiles):
+        engine.submit(QueryRequest(rid=rid, profile=p))
+    stats = engine.run()
+    assert stats["requests"] == len(query_profiles)
+    assert stats["qps"] > 0
+    assert stats["p95_latency_s"] >= stats["p50_latency_s"] > 0
+    assert engine.recall_vs_brute_force() >= 0.8
+    engine.done.clear()
+
+
+def test_results_are_sorted_and_self_free(engine, query_profiles):
+    ids, sims = engine.query_batch(query_profiles[:8])
+    assert ids.shape == (8, 10)
+    valid = ids != PAD_ID
+    # PAD slots score -inf and sort last; compare on a finite stand-in so
+    # the diff stays NaN-free.
+    assert (np.diff(np.where(valid, sims, -1.0), axis=1) <= 1e-6).all()
+    assert (np.where(valid, sims, 0.0) >= 0).all()
+
+
+def test_inserted_user_is_findable(engine, query_profiles):
+    n_before = engine.index.n
+    profile = query_profiles[0]
+    u = engine.insert(profile)
+    assert u == n_before and engine.index.n == n_before + 1
+    # The inserted user's fingerprint is identical to the query's, so it
+    # must come back as the top neighbor of the same profile.
+    ids, sims = engine.query_batch([profile])
+    assert ids[0, 0] == u
+    assert sims[0, 0] == pytest.approx(1.0)
+    # And it must be linked into the graph (forward edges exist).
+    assert (engine.index.graph_ids[u] != PAD_ID).any()
+
+
+def test_insert_patches_reverse_edges(engine, query_profiles):
+    ix = engine.index
+    u = engine.insert(query_profiles[1])
+    nbrs = ix.graph_ids[u]
+    nbrs = nbrs[nbrs != PAD_ID]
+    # u joined the reverse lists of its forward neighbors.
+    assert any(u in ix.rev_ids[int(v)] for v in nbrs)
+
+
+def test_index_save_load_roundtrip(index, tmp_path):
+    path = tmp_path / "index.npz"
+    index.save(path)
+    loaded = KNNIndex.load(path)
+    for name in ("graph_ids", "graph_sims", "words", "card", "rev_ids",
+                 "hash_seeds", "cluster_paths", "cluster_config",
+                 "cluster_members", "cluster_offsets"):
+        np.testing.assert_array_equal(getattr(index, name),
+                                      getattr(loaded, name), err_msg=name)
+    for name in ("b", "n_bits", "fp_seed", "split_depth", "version"):
+        assert getattr(index, name) == getattr(loaded, name), name
+    # The loaded artifact serves identically.
+    e1 = QueryEngine(index)
+    e2 = QueryEngine(loaded)
+    qds = make_dataset("synth", scale=0.15, seed=5)
+    profiles = [qds.profile(u) for u in range(8)]
+    ids1, sims1 = e1.query_batch(profiles)
+    ids2, sims2 = e2.query_batch(profiles)
+    np.testing.assert_array_equal(ids1, ids2)
+    np.testing.assert_array_equal(sims1, sims2)
+
+
+def test_serve_cli_smoke(capsys):
+    from repro.launch.knn_serve import main
+
+    stats, recall = main(["--dataset", "synth", "--scale", "0.05",
+                          "--queries", "32", "--insert", "2"])
+    out = capsys.readouterr().out
+    assert "QPS" in out and "recall" in out
+    assert stats["requests"] == 32
+    assert recall >= 0.6  # tiny index; the full-size bar is tested above

@@ -1,5 +1,8 @@
 """Recursive splitting invariants (paper §II-D)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # [test] extra; skip, don't break collection
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
