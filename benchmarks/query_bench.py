@@ -1,17 +1,40 @@
 """Query-serving benchmark: QPS, latency percentiles, recall@k vs brute
-force, for cold (compile included) and warm waves, plus online-insert
-throughput.
+force, for cold (compile included) and warm waves, in single-device and
+sharded modes, plus online-insert throughput.
 
     PYTHONPATH=src python benchmarks/query_bench.py [--dataset synth]
-        [--scale 0.2] [--queries 256] [--out BENCH_query.json]
+        [--scale 0.2] [--queries 256] [--shards 2] [--out BENCH_query.json]
+
+``--devices N`` (default: the shard count) emulates N XLA host devices —
+the multi-core serving configuration, one shard per device via
+shard_map; ``--devices 0`` forces the single-device vmap fallback.
+``--smoke`` shrinks the workload for CI: it still exercises build, both
+serving modes, and insertion, and fails loudly (exit 1) if the sharded
+mode regresses against single-device beyond the allowed margins.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 from pathlib import Path
 
+# The device count must be pinned before jax initializes (same pattern
+# as launch/dryrun.py), so peek at argv before the heavy imports.
+_pre = argparse.ArgumentParser(add_help=False)
+_pre.add_argument("--devices", type=int, default=None)
+_pre.add_argument("--shards", type=int, default=2)
+_pre_args, _ = _pre.parse_known_args()
+_n_dev = (_pre_args.devices if _pre_args.devices is not None
+          else _pre_args.shards)
+if _n_dev and _n_dev > 1:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n_dev}")
+
+import jax
 import numpy as np
 
 from repro.core.params import params_for
@@ -20,8 +43,29 @@ from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
 from repro.query.index import build_index
 
 
+def _serve_waves(engine: QueryEngine, profiles, k: int) -> dict:
+    """One cold + one warm wave through ``engine``; per-wave stats."""
+    out = {}
+    for tag in ("cold", "warm"):
+        for rid, p in enumerate(profiles):
+            engine.submit(QueryRequest(rid=rid, profile=p))
+        stats = engine.run()
+        recall = engine.recall_vs_brute_force(engine.done[-len(profiles):])
+        out[tag] = {
+            "qps": round(stats["qps"], 1),
+            "p50_latency_ms": round(stats["p50_latency_s"] * 1e3, 2),
+            "p95_latency_ms": round(stats["p95_latency_s"] * 1e3, 2),
+            f"recall_at_{k}": round(recall, 4),
+        }
+    return out
+
+
 def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
-        k: int = 10, beam: int = 32, hops: int = 3, seed: int = 0) -> dict:
+        k: int = 10, beam: int = 32, hops: int = 3, seed: int = 0,
+        shards: int = 2, oversample: float = 1.25) -> dict:
+    if shards < 2:
+        raise SystemExit("query_bench compares sharded vs single-device "
+                         "serving; --shards must be >= 2")
     ds = make_dataset(dataset, scale=scale, seed=seed)
     params = params_for(dataset, k=k, b=max(64, ds.n_users // 16),
                         max_cluster=max(48, int(0.06 * ds.n_users)))
@@ -29,34 +73,33 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
     index = build_index(ds, params)
     t_build = time.perf_counter() - t0
 
-    engine = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
-                                            max_wave=n_queries))
     qds = make_dataset(dataset, scale=scale, seed=seed + 1)
     n_q = min(n_queries, qds.n_users)
     profiles = [qds.profile(u) for u in range(n_q)]
 
-    def wave(tag: str) -> dict:
-        for rid, p in enumerate(profiles):
-            engine.submit(QueryRequest(rid=rid, profile=p))
-        stats = engine.run()
-        recall = engine.recall_vs_brute_force(engine.done[-n_q:])
-        return {
-            "tag": tag,
-            "qps": round(stats["qps"], 1),
-            "p50_latency_ms": round(stats["p50_latency_s"] * 1e3, 2),
-            "p95_latency_ms": round(stats["p95_latency_s"] * 1e3, 2),
-            f"recall_at_{k}": round(recall, 4),
-        }
+    single = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
+                                            max_wave=n_queries))
+    sharded = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
+                                             max_wave=n_queries,
+                                             shards=shards,
+                                             shard_oversample=oversample))
+    modes = {
+        "single": _serve_waves(single, profiles, k),
+        f"sharded_{shards}": _serve_waves(sharded, profiles, k),
+    }
+    sd = sharded.sharded_state()
+    sharded_exec = "mesh" if sd is not None and sd.mesh is not None else "vmap"
 
-    cold = wave("cold")        # includes descent compilation
-    warm = wave("warm")        # compiled program reused
-
+    # Online insertion through the amortized-growth path (single engine;
+    # the index is shared, so the sharded engine reshards lazily).
     t0 = time.perf_counter()
-    n_ins = min(32, qds.n_users - n_q)
+    n_ins = min(64, qds.n_users - n_q)
     for m in range(n_ins):
-        engine.insert(qds.profile(n_q + m))
+        single.insert(qds.profile(n_q + m))
     t_ins = time.perf_counter() - t0
 
+    sh = modes[f"sharded_{shards}"]["warm"]
+    sg = modes["single"]["warm"]
     return {
         "dataset": ds.name,
         "n_users": ds.n_users,
@@ -64,11 +107,21 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         "k": k,
         "beam": beam,
         "hops": hops,
+        "shards": shards,
+        "shard_oversample": oversample,
+        "sharded_execution": sharded_exec,
+        "n_devices": jax.device_count(),
         "t_build_s": round(t_build, 2),
-        "cold": cold,
-        "warm": warm,
+        "modes": modes,
         "inserts": n_ins,
         "inserts_per_s": round(n_ins / max(t_ins, 1e-9), 1),
+        "cohort_refreshes": single.n_refreshes,
+        "index_capacity": index.capacity,
+        "sharded_vs_single": {
+            "qps_ratio": round(sh["qps"] / max(sg["qps"], 1e-9), 3),
+            "recall_delta": round(sh[f"recall_at_{k}"]
+                                  - sg[f"recall_at_{k}"], 4),
+        },
     }
 
 
@@ -80,14 +133,36 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--beam", type=int, default=32)
     ap.add_argument("--hops", type=int, default=3)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--oversample", type=float, default=1.25,
+                    help="sharded fleet frontier vs single-device beam")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="emulated host devices (default: --shards; 0=off)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run; exit 1 on sharded regression")
     ap.add_argument("--out", default="BENCH_query.json")
     args = ap.parse_args()
 
+    if args.smoke:
+        args.scale, args.queries = min(args.scale, 0.1), min(args.queries, 64)
     rec = run(args.dataset, args.scale, args.queries, args.k, args.beam,
-              args.hops)
+              args.hops, shards=args.shards, oversample=args.oversample)
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(json.dumps(rec, indent=2))
     print(f"[query_bench] wrote {args.out}")
+
+    if args.smoke:
+        ratio = rec["sharded_vs_single"]["qps_ratio"]
+        delta = rec["sharded_vs_single"]["recall_delta"]
+        # CI floor: sharded must not collapse (generous margins — CI
+        # machines are noisy; the committed BENCH_query.json carries the
+        # quiet-machine numbers).
+        if ratio < 0.5 or delta < -0.05:
+            print(f"[query_bench] FAIL sharded regression: qps_ratio="
+                  f"{ratio} recall_delta={delta}", file=sys.stderr)
+            sys.exit(1)
+        print(f"[query_bench] smoke OK: qps_ratio={ratio} "
+              f"recall_delta={delta}")
 
 
 if __name__ == "__main__":

@@ -38,6 +38,14 @@ def lpt_assign(costs: np.ndarray, n_bins: int) -> np.ndarray:
     return assign
 
 
+def lpt_loads(costs: np.ndarray, assign: np.ndarray,
+              n_bins: int) -> np.ndarray:
+    """Per-bin load of an assignment (shared by build + serving shards)."""
+    loads = np.zeros(n_bins, dtype=np.float64)
+    np.add.at(loads, assign, np.asarray(costs, dtype=np.float64))
+    return loads
+
+
 @dataclasses.dataclass
 class DistPlan:
     """Static per-capacity-group member tensors: [n_dev, m_max, cap]."""
@@ -52,8 +60,7 @@ def build_dist_plan(plan: ClusterPlan, n_dev: int) -> DistPlan:
     sizes = plan.sizes
     costs = sizes.astype(np.float64) ** 2  # brute force is O(|C|²)
     assign = lpt_assign(costs, n_dev)
-    loads = np.zeros(n_dev)
-    np.add.at(loads, assign, costs)
+    loads = lpt_loads(costs, assign, n_dev)
     imbalance = float(loads.max() / max(loads.mean(), 1e-9))
 
     caps_all = np.array([capacity_of(int(s)) for s in sizes])

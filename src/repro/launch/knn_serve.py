@@ -5,8 +5,10 @@ of unseen query profiles, report QPS / latency / recall vs brute force.
         --scale 0.2 --queries 256
 
 Pass ``--index path.npz`` to serve a previously built artifact
-(``launch/knn_build --index-out``), and ``--insert M`` to also exercise
-online insertion before the query wave.
+(``launch/knn_build --index-out``), ``--insert M`` to also exercise
+online insertion before the query wave, and ``--shards S`` to serve
+through the LPT cluster shards (shard_map when a device per shard
+exists, vmapped on one device otherwise — see repro/query/sharded.py).
 """
 from __future__ import annotations
 
@@ -30,6 +32,8 @@ def main(argv=None):
     ap.add_argument("--beam", type=int, default=32)
     ap.add_argument("--hops", type=int, default=3)
     ap.add_argument("--max-wave", type=int, default=256)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve across this many LPT cluster shards")
     ap.add_argument("--insert", type=int, default=0,
                     help="insert this many users online before querying")
     ap.add_argument("--index", default=None, help="load a saved index")
@@ -56,7 +60,8 @@ def main(argv=None):
         print(f"[serve] index saved to {args.save_index}")
 
     engine = QueryEngine(index, QueryConfig(
-        k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave))
+        k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
+        shards=args.shards))
 
     # Unseen profiles from the same distribution (different seed).
     qds = make_dataset(args.dataset, scale=args.scale, seed=args.seed + 1)
@@ -68,6 +73,13 @@ def main(argv=None):
     if args.insert:
         print(f"[serve] inserted {args.insert} users online "
               f"(index now {index.n} users)")
+
+    sd = engine.sharded_state()  # after inserts: the waves reuse this state
+    if sd is not None:
+        print(f"[serve] sharded: {sd.n_shards} shards, resident rows "
+              f"{[len(r) for r in sd.plan.residents]}, "
+              f"imbalance {sd.plan.imbalance:.2f}, "
+              f"{'mesh' if sd.mesh is not None else 'vmap'} execution")
 
     if not profiles:
         print("[serve] no queries requested")

@@ -5,14 +5,17 @@ GoldFinger fingerprints + FRH routing tables + reverse adjacency).
 ``router`` — FastRandomHash placement of unseen profiles into the
 clusters of each hash configuration (seed candidates).
 ``search`` — jitted, batched beam descent over the index graph.
+``sharded`` — LPT cluster shards: per-shard descent + cross-shard merge.
 ``engine`` — queue → wave :class:`QueryEngine` with online insertion.
 """
 from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
 from repro.query.index import KNNIndex, build_index
 from repro.query.router import route
 from repro.query.search import batched_descent, exact_knn
+from repro.query.sharded import ShardedDescent, ShardPlan, plan_shards
 
 __all__ = [
     "KNNIndex", "build_index", "route", "batched_descent", "exact_knn",
     "QueryConfig", "QueryEngine", "QueryRequest",
+    "ShardedDescent", "ShardPlan", "plan_shards",
 ]

@@ -9,8 +9,17 @@ padded-capacity-group discipline as ``core/local_knn.py``.
 
 Online insertion: :meth:`QueryEngine.insert` searches for the new
 profile's neighbors, appends its fingerprint + forward edges to the
-index, patches reverse edges (bounded-heap displacement), and registers
-the user in its FRH clusters so subsequent queries route to it.
+index (O(degree) — the index grows into spare capacity), patches reverse
+edges (bounded-heap displacement), and registers the user in its FRH
+clusters so subsequent queries route to it. Inserted profiles accumulate
+in a *cohort*; once it exceeds ``QueryConfig.refresh_every`` the engine
+re-runs C² clustering on the cohort (:meth:`KNNIndex.refresh_cohort`) so
+drifting insert streams grow fresh routable clusters.
+
+Sharded serving (``QueryConfig.shards > 1``): descent runs per LPT
+cluster shard with a cross-shard top-k merge (repro/query/sharded.py) —
+``shard_map`` over the mesh when a device per shard exists, vmapped on
+one device otherwise.
 """
 from __future__ import annotations
 
@@ -53,6 +62,9 @@ class QueryConfig:
     hops: int = 3              # descent depth (fixed, compiled in)
     max_wave: int = 256        # queries per jitted wave
     seeds_per_config: int = 16 # routed seed candidates per hash config
+    shards: int = 1            # >1: LPT cluster shards + cross-shard merge
+    shard_oversample: float = 1.5  # fleet frontier vs single-device beam
+    refresh_every: int = 64    # cohort size triggering re-clustering
 
 
 class QueryEngine:
@@ -62,18 +74,44 @@ class QueryEngine:
         self.queue: deque[QueryRequest] = deque()
         self.done: list[QueryRequest] = []
         self.n_inserted = 0
+        self.n_refreshes = 0
         self._dev = None          # (version, n_cap, device arrays)
+        self._sharded = None      # cached ShardedDescent (version keyed)
+        self._cohort: list[tuple[int, np.ndarray]] = []  # (uid, profile)
 
     # -- device state ------------------------------------------------------
 
     def _sync(self):
-        """Device copies of the index, padded to a power-of-two row count
-        (re-uploaded only when the index version changes; recompiles only
-        when the capacity crosses a power of two)."""
+        """Device copies of the index, padded to a power-of-two row count.
+
+        Stale copies are repaired incrementally when possible: an insert
+        touches only the new row plus its patched neighbors (the index
+        journals them — :meth:`KNNIndex.rows_changed_since`), so those
+        rows are scattered into the resident device arrays instead of
+        re-padding and re-uploading all n rows per version bump. The full
+        upload happens only on first use, capacity crossings, or after
+        enough mutations that the journal no longer helps."""
         ix = self.index
         if self._dev is not None and self._dev[0] == ix.version:
             return self._dev[2]
         n, cap = ix.n, capacity_of(ix.n, minimum=64)
+        if self._dev is not None and self._dev[1] == cap:
+            changed = ix.rows_changed_since(self._dev[0])
+            if changed is not None and len(changed) <= max(64, n // 8):
+                arrays = self._dev[2]
+                if changed:
+                    rows = np.fromiter(sorted(changed), dtype=np.int64,
+                                       count=len(changed))
+                    idx = jnp.asarray(rows)
+                    g, r, w, c = arrays
+                    arrays = (
+                        g.at[idx].set(jnp.asarray(ix.graph_ids[rows])),
+                        r.at[idx].set(jnp.asarray(ix.rev_ids[rows])),
+                        w.at[idx].set(jnp.asarray(ix.words[rows])),
+                        c.at[idx].set(jnp.asarray(ix.card[rows])),
+                    )
+                self._dev = (ix.version, cap, arrays)
+                return arrays
         pad = cap - n
         arrays = (
             jnp.asarray(np.pad(ix.graph_ids, ((0, pad), (0, 0)),
@@ -86,6 +124,24 @@ class QueryEngine:
         self._dev = (ix.version, cap, arrays)
         return arrays
 
+    def _sync_sharded(self):
+        """Cached per-shard subgraphs; rebuilt lazily after mutations, so
+        an insert burst costs one reshard at the next query wave."""
+        from repro.query.sharded import ShardedDescent
+
+        ix = self.index
+        if (self._sharded is None
+                or self._sharded.version != ix.version
+                or self._sharded.n_shards != self.qc.shards):
+            self._sharded = ShardedDescent(
+                ix, self.qc.shards, oversample=self.qc.shard_oversample)
+        return self._sharded
+
+    def sharded_state(self):
+        """The current ShardedDescent (built on demand), or None when the
+        engine serves single-device. Public accessor for diagnostics."""
+        return self._sync_sharded() if self.qc.shards > 1 else None
+
     # -- core batched path -------------------------------------------------
 
     def query_batch(self, profiles, k: int | None = None):
@@ -95,11 +151,16 @@ class QueryEngine:
                                    self.index.fp_seed)
         return self._descend(items, offsets, qgf, k or self.qc.k)
 
-    def _descend(self, items, offsets, qgf, k: int, placed=None):
-        """Route + beam-descend already-fingerprinted query profiles."""
+    def _descend(self, items, offsets, qgf, k: int, placed=None,
+                 single: bool = False):
+        """Route + beam-descend already-fingerprinted query profiles.
+
+        ``single=True`` forces the single-device path even when the
+        engine serves sharded — used by :meth:`insert`, whose neighbor
+        search must not trigger a full reshard per version bump.
+        """
         qc = self.qc
         beam = max(qc.beam, k)
-        graph_ids, rev_ids, words, card = self._sync()
         seeds = route(self.index, items, offsets, qc.seeds_per_config,
                       placed=placed)
         qn = len(offsets) - 1
@@ -110,10 +171,15 @@ class QueryEngine:
         qcard[:qn] = qgf.card
         qseeds = np.full((qcap, seeds.shape[1]), PAD_ID, dtype=np.int32)
         qseeds[:qn] = seeds
-        ids, sims = batched_descent(
-            graph_ids, rev_ids, words, card,
-            jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
-            k=k, beam=beam, hops=qc.hops)
+        if qc.shards > 1 and not single:
+            ids, sims = self._sync_sharded().descend(
+                qw, qcard, qseeds, k=k, beam=beam, hops=qc.hops)
+        else:
+            graph_ids, rev_ids, words, card = self._sync()
+            ids, sims = batched_descent(
+                graph_ids, rev_ids, words, card,
+                jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
+                k=k, beam=beam, hops=qc.hops)
         return np.asarray(ids)[:qn], np.asarray(sims)[:qn]
 
     # -- queue / wave serving ----------------------------------------------
@@ -153,6 +219,8 @@ class QueryEngine:
             "p50_latency_s": float(np.percentile(lats, 50)) if lats else 0.0,
             "p95_latency_s": float(np.percentile(lats, 95)) if lats else 0.0,
             "inserted": self.n_inserted,
+            "shards": self.qc.shards,
+            "refreshes": self.n_refreshes,
         }
 
     # -- online insertion --------------------------------------------------
@@ -167,14 +235,39 @@ class QueryEngine:
         items, offsets = profiles_to_csr([profile])
         qgf = fingerprint_profiles(items, offsets, ix.n_bits, ix.fp_seed)
         placed = placements(ix, items, offsets)
-        ids, sims = self._descend(items, offsets, qgf, ix.k, placed=placed)
+        # Single-device search: each insert bumps the index version, and
+        # searching through the sharded path would rebuild the whole
+        # shard state per insert. The reshard happens once, lazily, at
+        # the next sharded query wave. Cost of this choice: a sharded
+        # engine that inserts holds BOTH the full device copy (repaired
+        # incrementally per insert) and the per-shard subgraphs — ~2x
+        # index memory; see the resharding follow-up in ROADMAP.md.
+        ids, sims = self._descend(items, offsets, qgf, ix.k, placed=placed,
+                                  single=True)
         u = ix.append_user(np.asarray(qgf.words)[0], int(qgf.card[0]),
                            ids[0], sims[0])
         for matched in placed[0]:
             if matched:  # deepest matching cluster of this configuration
                 ix.add_cluster_member(matched[0], u)
         self.n_inserted += 1
+        # Keep the materialized CSR row, not the caller's object — a
+        # one-shot iterable profile is already exhausted by now.
+        self._cohort.append((u, items[offsets[0]:offsets[1]].copy()))
+        if len(self._cohort) >= self.qc.refresh_every:
+            self.flush_cohort()
         return u
+
+    def flush_cohort(self) -> int:
+        """Re-run C² clustering on the accumulated insert cohort (see
+        :meth:`KNNIndex.refresh_cohort`); returns new clusters registered."""
+        if not self._cohort:
+            return 0
+        uids = np.array([u for u, _ in self._cohort], dtype=np.int32)
+        items, offsets = profiles_to_csr([p for _, p in self._cohort])
+        n_new = self.index.refresh_cohort(items, offsets, uids)
+        self._cohort = []  # drained only after the refresh succeeded
+        self.n_refreshes += 1
+        return n_new
 
     # -- quality -----------------------------------------------------------
 

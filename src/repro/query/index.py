@@ -14,67 +14,120 @@ A :class:`KNNIndex` bundles everything the online query path needs:
   friend-of-a-friend principle of NNDescent/Hyrec).
 
 The artifact is a single ``.npz``: ``launch/knn_build --index-out`` emits
-it, ``launch/knn_serve --index`` loads it. Online insertion
-(:meth:`KNNIndex.append_user`) mutates the host arrays and bumps
-``version`` so engines know to refresh device copies.
+it, ``launch/knn_serve --index`` loads it.
+
+Online growth: per-row state lives in capacity buffers with spare rows
+(geometric doubling, à la Debatty et al.'s online graph building), so
+:meth:`KNNIndex.append_user` is O(degree) — it writes one row and patches
+the neighbors' rows in place; the only reallocation is the doubling
+itself, amortized O(1) per insert. The public array attributes
+(``graph_ids`` …) are views of the first ``n`` rows, so readers never see
+the spare capacity. :meth:`refresh_cohort` re-runs C² clustering
+(recursive FRH splitting) on an inserted cohort to register new routable
+clusters once enough users accumulated online.
 """
 from __future__ import annotations
 
-import dataclasses
 from pathlib import Path
 
 import numpy as np
 
+from repro.core import hashing
 from repro.core.clustering import ClusterPlan, build_plan, frh_seeds
 from repro.core.hashing import NO_HASH
 from repro.core.local_knn import local_knn
 from repro.core.merge import merge_partial
 from repro.core.params import C2Params
+from repro.core.splitting import split_config
 from repro.knn.greedy import reverse_neighbors_np
 from repro.sketch.goldfinger import GoldFinger, fingerprint_dataset
 from repro.types import NEG_INF, PAD_ID, Dataset, KNNGraph
 
+_ROWS = ("graph_ids", "graph_sims", "words", "card", "rev_ids")
+_TABLES = ("hash_seeds", "cluster_paths", "cluster_config",
+           "cluster_members", "cluster_offsets")
 _META = ("b", "n_bits", "fp_seed", "split_depth", "version")
 
+_ROW_DTYPES = {"graph_ids": np.int32, "graph_sims": np.float32,
+               "words": np.uint32, "card": np.int32, "rev_ids": np.int32}
+_ROW_FILL = {"graph_ids": PAD_ID, "graph_sims": NEG_INF, "words": 0,
+             "card": 0, "rev_ids": PAD_ID}
 
-@dataclasses.dataclass
+
 class KNNIndex:
-    """A built C² graph packaged for online query serving."""
+    """A built C² graph packaged for online query serving.
 
-    # Graph + similarity state.
-    graph_ids: np.ndarray        # int32[n, k]   forward neighbors
-    graph_sims: np.ndarray       # float32[n, k] estimated Jaccard sims
-    words: np.ndarray            # uint32[n, W]  GoldFinger fingerprints
-    card: np.ndarray             # int32[n]      fingerprint popcounts
-    rev_ids: np.ndarray          # int32[n, r]   reverse neighbors (capped)
-    # FRH routing tables.
-    hash_seeds: np.ndarray       # int32[t]      per-configuration seeds
-    cluster_paths: np.ndarray    # int32[c, depth] split paths, NO_HASH pad
-    cluster_config: np.ndarray   # int32[c]      hash configuration index
-    cluster_members: np.ndarray  # int32[Σ|C|]   member CSR values
-    cluster_offsets: np.ndarray  # int64[c + 1]  member CSR offsets
-    # Hashing metadata (must match the build).
-    b: int                       # FRH range
-    n_bits: int                  # GoldFinger width
-    fp_seed: int                 # fingerprint seed
-    split_depth: int             # distinct-hash depth of the split tables
-    version: int = 0             # bumped on mutation (engine cache key)
+    Row-indexed arrays (one row per user) are stored in over-allocated
+    buffers; ``index.graph_ids`` etc. are length-``n`` views.
+    """
 
-    def __post_init__(self):
+    def __init__(self, *, graph_ids, graph_sims, words, card, rev_ids,
+                 hash_seeds, cluster_paths, cluster_config, cluster_members,
+                 cluster_offsets, b, n_bits, fp_seed, split_depth,
+                 version: int = 0):
+        self._n = int(np.asarray(graph_ids).shape[0])
+        self._bufs: dict[str, np.ndarray] = {}
+        for name, arr in (("graph_ids", graph_ids), ("graph_sims", graph_sims),
+                          ("words", words), ("card", card),
+                          ("rev_ids", rev_ids)):
+            self._bufs[name] = np.ascontiguousarray(arr, _ROW_DTYPES[name])
+        # FRH routing tables.
+        self.hash_seeds = np.asarray(hash_seeds, dtype=np.int32)
+        self.cluster_paths = np.asarray(cluster_paths, dtype=np.int32)
+        self.cluster_config = np.asarray(cluster_config, dtype=np.int32)
+        self.cluster_members = np.asarray(cluster_members, dtype=np.int32)
+        self.cluster_offsets = np.asarray(cluster_offsets, dtype=np.int64)
+        # Hashing metadata (must match the build).
+        self.b = int(b)
+        self.n_bits = int(n_bits)
+        self.fp_seed = int(fp_seed)
+        self.split_depth = int(split_depth)
+        self.version = int(version)  # bumped on mutation (engine cache key)
         self._lut: dict | None = None
         # Members appended online, per cluster index (consolidated into
-        # the CSR on save).
+        # the CSR on save / refresh_cohort).
         self._extra_members: dict[int, list[int]] = {}
+        # Journal of row mutations: (version, touched rows) per append,
+        # so engines can update device copies incrementally instead of
+        # re-uploading the whole index per insert.
+        self._row_log: list[tuple[int, tuple[int, ...]]] = []
+        self._row_log_base = self.version
+
+    # -- row buffers (views over spare capacity) ---------------------------
+
+    def __getattr__(self, name):
+        bufs = self.__dict__.get("_bufs")
+        if bufs is not None and name in bufs:
+            return bufs[name][: self.__dict__["_n"]]
+        raise AttributeError(name)
+
+    @property
+    def capacity(self) -> int:
+        """Allocated user rows (≥ n; grows by doubling, never per insert)."""
+        return self._bufs["graph_ids"].shape[0]
+
+    def _ensure_capacity(self, n_needed: int):
+        cap = self.capacity
+        if n_needed <= cap:
+            return
+        new_cap = max(cap, 64)
+        while new_cap < n_needed:
+            new_cap *= 2
+        for name, buf in self._bufs.items():
+            grown = np.full((new_cap,) + buf.shape[1:], _ROW_FILL[name],
+                            dtype=buf.dtype)
+            grown[: self._n] = buf[: self._n]
+            self._bufs[name] = grown
 
     # -- shape accessors ---------------------------------------------------
 
     @property
     def n(self) -> int:
-        return self.graph_ids.shape[0]
+        return self._n
 
     @property
     def k(self) -> int:
-        return self.graph_ids.shape[1]
+        return self._bufs["graph_ids"].shape[1]
 
     @property
     def t(self) -> int:
@@ -114,6 +167,13 @@ class KNNIndex:
             return base
         return np.concatenate([base, np.asarray(extra, dtype=np.int32)])
 
+    def cluster_sizes(self) -> np.ndarray:
+        """int64[n_clusters] member counts, online extras included."""
+        sizes = np.diff(self.cluster_offsets)
+        for ci, extra in self._extra_members.items():
+            sizes[ci] += len(extra)
+        return sizes
+
     def add_cluster_member(self, ci: int, user: int):
         self._extra_members.setdefault(ci, []).append(int(user))
 
@@ -127,11 +187,14 @@ class KNNIndex:
         edges, ≤ k entries, PAD_ID allowed). The reverse patch applies the
         paper's bounded-heap semantics to each neighbor: the new user
         displaces the neighbor's worst edge iff it is closer (or the
-        neighborhood has a free slot). Arrays are reallocated per insert —
-        fine at demo scale; amortized growth is a serving-scale follow-up.
+        neighborhood has a free slot). O(degree): one row write plus one
+        in-place patch per neighbor — the backing buffers only reallocate
+        on geometric-doubling boundaries.
         """
-        u = self.n
-        k, r = self.k, self.rev_ids.shape[1]
+        u = self._n
+        self._ensure_capacity(u + 1)
+        bufs = self._bufs
+        k, r = self.k, bufs["rev_ids"].shape[1]
         row_ids = np.full(k, PAD_ID, dtype=np.int32)
         row_sims = np.full(k, NEG_INF, dtype=np.float32)
         valid = np.flatnonzero(np.asarray(nbr_ids) != PAD_ID)[:k]
@@ -140,13 +203,13 @@ class KNNIndex:
         row_ids[: len(order)] = np.asarray(nbr_ids)[order]
         row_sims[: len(order)] = np.asarray(nbr_sims)[order]
 
-        self.words = np.concatenate(
-            [self.words, np.asarray(words_row, np.uint32)[None]])
-        self.card = np.concatenate(
-            [self.card, np.asarray([card_row], np.int32)])
-        self.graph_ids = np.concatenate([self.graph_ids, row_ids[None]])
-        self.graph_sims = np.concatenate([self.graph_sims, row_sims[None]])
+        bufs["words"][u] = np.asarray(words_row, np.uint32)
+        bufs["card"][u] = card_row
+        bufs["graph_ids"][u] = row_ids
+        bufs["graph_sims"][u] = row_sims
 
+        graph_ids, graph_sims = bufs["graph_ids"], bufs["graph_sims"]
+        rev_ids = bufs["rev_ids"]
         rev_row = np.full(r, PAD_ID, dtype=np.int32)
         n_rev = 0
         for v, s in zip(row_ids, row_sims):
@@ -154,24 +217,108 @@ class KNNIndex:
                 break
             v = int(v)
             # u → v exists, so u joins rev(v) (replace the tail if full).
-            free = np.flatnonzero(self.rev_ids[v] == PAD_ID)
-            self.rev_ids[v, free[0] if len(free) else r - 1] = u
+            free = np.flatnonzero(rev_ids[v] == PAD_ID)
+            rev_ids[v, free[0] if len(free) else r - 1] = u
             # Bounded-heap insert of u into v's forward neighborhood.
-            eff = np.where(self.graph_ids[v] == PAD_ID, NEG_INF,
-                           self.graph_sims[v])
+            eff = np.where(graph_ids[v] == PAD_ID, NEG_INF, graph_sims[v])
             j = int(np.argmin(eff))
             if s > eff[j]:
-                self.graph_ids[v, j] = u
-                self.graph_sims[v, j] = s
-                o = np.argsort(-self.graph_sims[v], kind="stable")
-                self.graph_ids[v] = self.graph_ids[v, o]
-                self.graph_sims[v] = self.graph_sims[v, o]
+                graph_ids[v, j] = u
+                graph_sims[v, j] = s
+                o = np.argsort(-graph_sims[v], kind="stable")
+                graph_ids[v] = graph_ids[v, o]
+                graph_sims[v] = graph_sims[v, o]
                 if n_rev < r:  # v → u now exists, so v joins rev(u)
                     rev_row[n_rev] = v
                     n_rev += 1
-        self.rev_ids = np.concatenate([self.rev_ids, rev_row[None]])
+        rev_ids[u] = rev_row
+        self._n = u + 1
         self.version += 1
+        touched = (u,) + tuple(int(v) for v in row_ids if v != PAD_ID)
+        self._row_log.append((self.version, touched))
+        if len(self._row_log) > 2048:  # bounded journal; old entries
+            drop = self._row_log[:1024]  # force a full resync instead
+            self._row_log = self._row_log[1024:]
+            self._row_log_base = drop[-1][0]
         return u
+
+    def rows_changed_since(self, version: int) -> set[int] | None:
+        """Row indices mutated after ``version``, or None when the
+        journal no longer reaches back that far (caller must resync)."""
+        if version < self._row_log_base:
+            return None
+        rows: set[int] = set()
+        for v, touched in reversed(self._row_log):
+            if v <= version:
+                break
+            rows.update(touched)
+        return rows
+
+    # -- cohort refresh (amortized re-clustering) --------------------------
+
+    def refresh_cohort(self, items: np.ndarray, offsets: np.ndarray,
+                       user_ids: np.ndarray,
+                       max_cluster: int | None = None) -> int:
+        """Re-run C² clustering on an inserted cohort; returns the number
+        of *new* routable clusters registered.
+
+        ``items``/``offsets`` are the cohort profiles in CSR form (one row
+        per inserted user, same order as ``user_ids``). The cohort is
+        re-hashed with the index's FRH seeds and recursively split exactly
+        like the build (core/splitting.py); every resulting cohort cluster
+        whose split path already names a build-time cluster folds its
+        members into it, and paths unseen at build time become new
+        clusters in the routing table — so a drifting insert stream grows
+        fresh routable entry points instead of piling onto stale ones.
+        """
+        user_ids = np.asarray(user_ids, dtype=np.int32)
+        if len(user_ids) == 0:
+            return 0
+        if max_cluster is None:
+            base_sizes = np.diff(self.cluster_offsets)
+            max_cluster = int(base_sizes.max()) if len(base_sizes) else 64
+        item_h = hashing.item_hashes(np.asarray(items, np.int32),
+                                     self.hash_seeds, self.b)
+        cands = hashing.user_distinct_hashes_np(
+            item_h, np.asarray(offsets, np.int64), self.split_depth)
+        lut = self.path_lut()
+        new_paths: list[tuple[int, tuple[int, ...]]] = []
+        new_members: list[np.ndarray] = []
+        for cfg in range(self.t):
+            res = split_config(cands[cfg], max_cluster)
+            for mem, path in zip(res.members, res.paths):
+                users = user_ids[mem]
+                ci = lut.get((cfg, path))
+                if ci is not None:
+                    known = set(self.cluster_users(ci).tolist())
+                    for u in users:
+                        if int(u) not in known:
+                            self.add_cluster_member(ci, int(u))
+                elif len(users) >= 2:  # singletons yield no routing value
+                    new_paths.append((cfg, path))
+                    new_members.append(users)
+        if new_members:
+            depth = self.cluster_paths.shape[1] if self.n_clusters else \
+                self.split_depth
+            add_paths = np.full((len(new_paths), depth), NO_HASH,
+                                dtype=np.int32)
+            for i, (_, p) in enumerate(new_paths):
+                add_paths[i, : min(len(p), depth)] = p[:depth]
+            self.cluster_paths = (
+                np.concatenate([self.cluster_paths, add_paths])
+                if self.n_clusters else add_paths)
+            self.cluster_config = np.concatenate(
+                [self.cluster_config,
+                 np.array([c for c, _ in new_paths], dtype=np.int32)])
+            self.cluster_members = np.concatenate(
+                [self.cluster_members] + new_members).astype(np.int32)
+            sizes = np.array([len(m) for m in new_members], dtype=np.int64)
+            self.cluster_offsets = np.concatenate(
+                [self.cluster_offsets,
+                 self.cluster_offsets[-1] + np.cumsum(sizes)])
+        self._lut = None
+        self.version += 1
+        return len(new_members)
 
     # -- persistence -------------------------------------------------------
 
@@ -187,11 +334,11 @@ class KNNIndex:
         self.cluster_offsets = np.zeros(self.n_clusters + 1, dtype=np.int64)
         np.cumsum(sizes, out=self.cluster_offsets[1:])
         self._extra_members = {}
+        self._lut = None
 
     def save(self, path: str | Path):
         self.consolidate()
-        arrays = {f.name: getattr(self, f.name)
-                  for f in dataclasses.fields(self) if f.name not in _META}
+        arrays = {name: getattr(self, name) for name in _ROWS + _TABLES}
         meta = {name: np.int64(getattr(self, name)) for name in _META}
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)

@@ -36,10 +36,9 @@ def _scorer(words, card):
     return jax.vmap(score_row)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "beam", "hops"))
-def batched_descent(graph_ids, rev_ids, words, card,
-                    q_words, q_card, seed_ids, *,
-                    k: int, beam: int, hops: int):
+def descent_kernel(graph_ids, rev_ids, words, card,
+                   q_words, q_card, seed_ids, *,
+                   k: int, beam: int, hops: int):
     """Beam search over the index graph for a wave of queries.
 
     graph_ids int32[n, kg], rev_ids int32[n, r]: forward/reverse adjacency.
@@ -47,6 +46,9 @@ def batched_descent(graph_ids, rev_ids, words, card,
     q_words uint32[q, W], q_card int32[q]: query fingerprints.
     seed_ids int32[q, S]: routed seed candidates (PAD_ID padded).
     Returns (ids int32[q, k], sims float32[q, k]), sim-descending.
+
+    Unjitted so callers can compose it (``batched_descent`` jits it
+    directly; ``query/sharded.py`` vmaps/shard_maps it over shards).
     """
     nq = q_words.shape[0]
     kg, kr = graph_ids.shape[1], rev_ids.shape[1]
@@ -72,6 +74,10 @@ def batched_descent(graph_ids, rev_ids, words, card,
     (beam_ids, beam_sims), _ = jax.lax.scan(
         hop, (beam_ids, beam_sims), None, length=hops)
     return merge_topk(beam_ids, beam_sims, k)
+
+
+batched_descent = functools.partial(
+    jax.jit, static_argnames=("k", "beam", "hops"))(descent_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

@@ -1,0 +1,264 @@
+"""Sharded query serving: partition a :class:`KNNIndex` across devices.
+
+The build already scales Step 2 across the mesh by LPT bin-packing FRH
+clusters onto devices (``core/distributed.py``). Serving reuses exactly
+that partition axis: clusters are LPT-assigned to shards by member count,
+each shard owns the *residents* of its clusters (the union of their
+members, plus an id-strided share of unclustered users so every indexed
+row lives somewhere), and each shard materializes a self-contained local
+subgraph — adjacency rows of its residents with neighbor ids remapped to
+shard-local indices (cross-shard edges drop to PAD), its residents'
+fingerprints, and a local→global id map.
+
+A query is routed once (global FRH placement); each routed seed is then
+handed to exactly ONE shard — the shard that *owns* the seed user (users
+are claimed by their largest cluster in LPT order, so ownership follows
+the cluster partition). This matters: residents overlap across shards
+(every user sits in up to t clusters), so broadcasting identical seeds
+everywhere would make the per-shard descents redundant copies of each
+other; ownership partitions the search basins instead. Beam descent runs
+*per shard* over the shard-local subgraph — under ``shard_map`` when the
+mesh has a device per shard (SPMD, no collectives inside, like
+``distributed_local_knn``), or vmapped over the shard axis on a single
+device (identical numerics; this is the CPU/CI path). Per-shard top-k
+results return in global ids and are merged with ``knn/topk.merge_topk``
+— the partition-then-merge strategy of "On the Merge of k-NN Graph"
+(Zhao et al.).
+
+Each shard's beam defaults to ``oversample · beam / n_shards`` (floored
+at k): the fleet's total frontier stays ~``oversample ×`` the
+single-device configuration, but every ``top_k`` row is ``n_shards ×``
+narrower — which is what makes the vmapped CPU path competitive and the
+mesh path a near-linear scale-out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import lpt_assign, lpt_loads
+from repro.core.local_knn import capacity_of
+from repro.knn.topk import merge_topk
+from repro.query.index import KNNIndex
+from repro.query.search import descent_kernel
+from repro.types import PAD_ID
+
+
+@dataclasses.dataclass
+class ShardPlan:
+    """Static cluster → shard partition of an index."""
+
+    n_shards: int
+    cluster_shard: np.ndarray     # int64[n_clusters]
+    residents: list[np.ndarray]   # sorted unique global user ids per shard
+    owner: np.ndarray             # int64[n] — the one shard seeding each user
+    imbalance: float              # max/mean assigned cluster-size load
+
+
+def plan_shards(index: KNNIndex, n_shards: int) -> ShardPlan:
+    """LPT bin-packing of FRH clusters onto ``n_shards`` serving shards.
+
+    Serving cost is linear in resident rows (descent gathers + scoring),
+    so clusters are weighed by member count — unlike the build, whose
+    brute-force cost is quadratic. Besides the (overlapping) resident
+    sets, the plan fixes a disjoint *ownership*: every user belongs to
+    exactly one shard — the shard of the largest cluster claiming it —
+    which is where routed seeds naming that user are explored.
+    """
+    sizes = index.cluster_sizes().astype(np.float64)
+    assign = lpt_assign(sizes, n_shards)
+    residents: list[np.ndarray] = []
+    covered = np.zeros(index.n, dtype=bool)
+    for s in range(n_shards):
+        mems = [index.cluster_users(ci)
+                for ci in np.flatnonzero(assign == s)]
+        res = (np.unique(np.concatenate(mems)).astype(np.int64)
+               if mems else np.zeros(0, np.int64))
+        res = res[(res >= 0) & (res < index.n)]
+        residents.append(res)
+        covered[res] = True
+    owner = np.full(index.n, -1, dtype=np.int64)
+    for ci in np.argsort(-sizes, kind="stable"):  # big clusters claim first
+        mem = index.cluster_users(int(ci))
+        mem = mem[(mem >= 0) & (mem < index.n)]
+        free = mem[owner[mem] < 0]
+        owner[free] = assign[ci]
+    # Unclustered users (singleton clusters are dropped at build; fresh
+    # inserts may not be registered yet) still need a home shard.
+    leftovers = np.flatnonzero(~covered)
+    if len(leftovers):
+        residents = [np.union1d(res, leftovers[s::n_shards])
+                     for s, res in enumerate(residents)]
+    unowned = np.flatnonzero(owner < 0)
+    for s in range(n_shards):
+        owner[unowned[s::n_shards]] = s
+    # Balance metric: assigned cluster-size mass per shard (residency
+    # alone under-reports skew — clusters overlap across configurations).
+    loads = lpt_loads(sizes, assign, n_shards)
+    imbalance = float(loads.max() / max(loads.mean(), 1e-9))
+    return ShardPlan(n_shards=n_shards, cluster_shard=assign,
+                     residents=residents, owner=owner, imbalance=imbalance)
+
+
+class ShardedDescent:
+    """Per-shard local subgraphs + the descent/merge program over them.
+
+    Rebuilt when the index version changes (the engine caches one per
+    (version, n_shards), so an insert burst costs one rebuild at the next
+    query wave, not one per insert).
+    """
+
+    def __init__(self, index: KNNIndex, n_shards: int,
+                 plan: ShardPlan | None = None, use_mesh: bool | None = None,
+                 oversample: float = 1.5):
+        assert n_shards >= 1
+        self.index = index
+        self.oversample = oversample
+        self.plan = plan or plan_shards(index, n_shards)
+        S = self.plan.n_shards
+        n = index.n
+        cap = max(capacity_of(len(r), minimum=64)
+                  for r in self.plan.residents)
+        kg, kr = index.k, index.rev_ids.shape[1]
+        W = index.words.shape[1]
+
+        l2g = np.full((S, cap), PAD_ID, dtype=np.int32)
+        g2l = np.full((S, n), PAD_ID, dtype=np.int32)
+        l_graph = np.full((S, cap, kg), PAD_ID, dtype=np.int32)
+        l_rev = np.full((S, cap, kr), PAD_ID, dtype=np.int32)
+        l_words = np.zeros((S, cap, W), dtype=np.uint32)
+        l_card = np.zeros((S, cap), dtype=np.int32)
+        for s, res in enumerate(self.plan.residents):
+            m = len(res)
+            l2g[s, :m] = res
+            g2l[s, res] = np.arange(m, dtype=np.int32)
+            l_graph[s, :m] = self._remap(g2l[s], index.graph_ids[res])
+            l_rev[s, :m] = self._remap(g2l[s], index.rev_ids[res])
+            l_words[s, :m] = index.words[res]
+            l_card[s, :m] = index.card[res]
+        self._g2l = g2l
+        self.version = index.version
+        if use_mesh is None:  # auto: one device per shard when available
+            use_mesh = S > 1 and jax.device_count() >= S
+        self.mesh = None
+        arrays = (l_graph, l_rev, l_words, l_card, l2g)
+        if use_mesh:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            self.mesh = jax.sharding.Mesh(
+                np.asarray(jax.devices()[:S]), ("shards",))
+            # Pin each shard's subgraph to its device ONCE — per-call
+            # resharding would move the whole index every wave.
+            self._dev = tuple(
+                jax.device_put(a, NamedSharding(
+                    self.mesh, P("shards", *([None] * (a.ndim - 1)))))
+                for a in arrays)
+        else:
+            self._dev = tuple(jnp.asarray(a) for a in arrays)
+
+    @staticmethod
+    def _remap(g2l_row: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Global → shard-local ids; non-resident targets become PAD."""
+        safe = np.where(ids == PAD_ID, 0, ids)
+        return np.where(ids == PAD_ID, PAD_ID, g2l_row[safe])
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards
+
+    def shard_seeds(self, seeds: np.ndarray) -> np.ndarray:
+        """Partition routed global seeds by ownership and remap to local.
+
+        Returns int32[S, q, S_cols]: seed ids in shard-local coordinates;
+        a seed appears on exactly the shard owning that user (PAD
+        elsewhere), so the fleet explores disjoint basins.
+        """
+        S = self.n_shards
+        safe = np.where(seeds == PAD_ID, 0, seeds)
+        owned = ((self.plan.owner[safe][None]
+                  == np.arange(S)[:, None, None])
+                 & (seeds[None] != PAD_ID))              # [S, q, cols]
+        local = self._g2l[:, safe]
+        return np.where(owned, local, PAD_ID)
+
+    def descend(self, q_words, q_card, seeds: np.ndarray, *,
+                k: int, beam: int, hops: int):
+        """Route-seeded descent on every shard + cross-shard top-k merge.
+
+        ``seeds`` are global ids (router output, PAD padded); ``beam`` is
+        the single-device frontier width, divided among shards (with
+        ``self.oversample`` slack, floored at k). Returns
+        (ids int32[q, k], sims float32[q, k]) in global ids.
+        """
+        l_seeds = jnp.asarray(self.shard_seeds(seeds))
+        shard_beam = max(
+            k, int(np.ceil(self.oversample * beam / self.n_shards)))
+        args = (*self._dev, jnp.asarray(q_words), jnp.asarray(q_card),
+                l_seeds)
+        if self.mesh is not None:
+            program = _mesh_program(self.mesh, k=k, beam=shard_beam,
+                                    hops=hops)
+            ids, sims = program(*args)
+        else:
+            ids, sims = _vmapped_descent(*args, k=k, beam=shard_beam,
+                                         hops=hops)
+        return _merge_shard_topk(ids, sims, k)
+
+
+def _per_shard(graph, rev, words, card, l2g, q_words, q_card, seeds,
+               *, k, beam, hops):
+    """One shard's descent; results mapped back to global ids."""
+    ids, sims = descent_kernel(graph, rev, words, card,
+                               q_words, q_card, seeds,
+                               k=k, beam=beam, hops=hops)
+    safe = jnp.where(ids == PAD_ID, 0, ids)
+    return jnp.where(ids == PAD_ID, PAD_ID, l2g[safe]), sims
+
+
+@functools.partial(jax.jit, static_argnames=("k", "beam", "hops"))
+def _vmapped_descent(l_graph, l_rev, l_words, l_card, l2g,
+                     q_words, q_card, l_seeds, *, k, beam, hops):
+    """Single-device fallback: the shard axis is a vmap axis."""
+    return jax.vmap(
+        lambda g, r, w, c, m, s: _per_shard(
+            g, r, w, c, m, q_words, q_card, s, k=k, beam=beam, hops=hops)
+    )(l_graph, l_rev, l_words, l_card, l2g, l_seeds)
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_program(mesh, *, k, beam, hops):
+    """SPMD path: one shard per device, no collectives inside (the merge
+    happens after the shard-parallel top-k, mirroring
+    distributed_local_knn's reduce phase). Returns a jitted callable.
+
+    Cached at module level (jax.sharding.Mesh hashes by devices + axis
+    names), so resharding after an insert burst reuses the compiled
+    program as long as shapes and (k, beam, hops) are unchanged —
+    symmetric with the module-level jitted ``_vmapped_descent``."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def device_fn(g, r, w, c, m, qw, qc, s):
+        ids, sims = _per_shard(g[0], r[0], w[0], c[0], m[0], qw, qc, s[0],
+                               k=k, beam=beam, hops=hops)
+        return ids[None], sims[None]
+
+    in_specs = (P("shards", None, None), P("shards", None, None),
+                P("shards", None, None), P("shards", None),
+                P("shards", None), P(), P(), P("shards", None, None))
+    out_specs = (P("shards", None, None), P("shards", None, None))
+    return jax.jit(shard_map(device_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_shard_topk(ids, sims, k: int):
+    """[S, q, k'] per-shard results → global top-k per query."""
+    S, q, kk = ids.shape
+    flat_ids = jnp.swapaxes(ids, 0, 1).reshape(q, S * kk)
+    flat_sims = jnp.swapaxes(sims, 0, 1).reshape(q, S * kk)
+    return merge_topk(flat_ids, flat_sims, k)

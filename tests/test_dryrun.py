@@ -7,10 +7,13 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
 
 
+@pytest.mark.slow
 def test_dryrun_cell_compiles_on_512_devices(tmp_path):
     code = r"""
 import repro.launch.dryrun as dr
@@ -36,6 +39,7 @@ print("DRYRUN_OK", rec["collectives"]["total_bytes_per_device"])
     assert rec["status"] == "ok"
 
 
+@pytest.mark.slow
 def test_dryrun_records_long500k_skips(tmp_path):
     code = r"""
 import repro.launch.dryrun as dr

@@ -37,6 +37,7 @@ def test_checkpoint_atomic_overwrite(tmp_path):
     assert step == 2 and got["a"].sum() == 4
 
 
+@pytest.mark.slow
 def test_train_restart_resumes_identically(tmp_path):
     """Crash at step 6, restart, and land on the same final loss as an
     uninterrupted run — checkpoint + deterministic data skip together."""
@@ -91,6 +92,7 @@ def test_dist_plan_covers_all_clusters(small_ds):
     assert dp.imbalance < 2.5
 
 
+@pytest.mark.slow
 def test_distributed_c2_matches_single_device():
     """Run distributed C² on 8 emulated host devices (subprocess so the
     device count doesn't leak into this test session) and compare with

@@ -124,6 +124,7 @@ ENTRY %main (a: f32[8,16]) -> f32[8,16] {
     assert a["collective_bytes_per_device"] == 512 * 10
 
 
+@pytest.mark.slow
 def test_elastic_restore_across_device_counts(tmp_path):
     """Save under an 8-device mesh layout, restore under 1 device
     (restore_sharded re-places leaves under the new mesh)."""

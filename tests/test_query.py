@@ -84,6 +84,150 @@ def test_insert_patches_reverse_edges(engine, query_profiles):
     assert any(u in ix.rev_ids[int(v)] for v in nbrs)
 
 
+def test_append_is_amortized_no_per_insert_realloc(index):
+    """Regression for the O(n)-copy-per-insert bug: row buffers may only
+    reallocate on geometric-doubling boundaries, never per insert."""
+    import copy
+
+    ix = copy.deepcopy(index)
+    engine = QueryEngine(ix, QueryConfig(k=10, refresh_every=10**9))
+    qds = make_dataset("synth", scale=0.15, seed=11)
+    n_ins = 40
+    n0, cap0 = ix.n, ix.capacity
+    caps, buf_ids = [], []
+    for m in range(n_ins):
+        engine.insert(qds.profile(m))
+        caps.append(ix.capacity)
+        buf_ids.append(id(ix._bufs["graph_ids"]))
+    caps = np.array([cap0] + caps)
+    # Capacity only changes when the previous one was exhausted, and then
+    # exactly doubles (so reallocations are O(log inserts), not O(inserts)).
+    for prev, cur, n_now in zip(caps, caps[1:], range(n0 + 1, n0 + n_ins + 1)):
+        if cur != prev:
+            assert prev < n_now <= cur and cur == max(2 * prev, 64)
+    n_reallocs = len(set(buf_ids))
+    assert n_reallocs <= int(np.log2(n_ins)) + 1, n_reallocs
+    # Buffers are stable between doublings: inserts write in place.
+    assert buf_ids[-1] == buf_ids[-2]
+
+
+def test_insert_reverse_adjacency_consistent(index):
+    """After insert, every forward edge u→v is mirrored in rev(v), and
+    every reverse entry w∈rev(u) is a real forward edge w→u."""
+    import copy
+
+    ix = copy.deepcopy(index)
+    engine = QueryEngine(ix, QueryConfig(k=10))
+    qds = make_dataset("synth", scale=0.15, seed=13)
+    for m in range(4):
+        u = engine.insert(qds.profile(m))
+        fwd = ix.graph_ids[u]
+        for v in fwd[fwd != PAD_ID]:
+            assert u in ix.rev_ids[int(v)], (u, int(v))
+        rev = ix.rev_ids[u]
+        for w in rev[rev != PAD_ID]:
+            assert u in ix.graph_ids[int(w)], (u, int(w))
+
+
+def test_inserted_user_reachable_from_router_clusters(index):
+    """The inserted node must be reachable from its registered router
+    clusters by following forward/reverse edges (≤ hops steps) — i.e.
+    routing a similar query can actually descend to it."""
+    import copy
+
+    from repro.query.router import placements
+
+    ix = copy.deepcopy(index)
+    engine = QueryEngine(ix, QueryConfig(k=10, hops=3))
+    qds = make_dataset("synth", scale=0.15, seed=17)
+    profile = qds.profile(0)
+    u = engine.insert(profile)
+    items, offsets = profiles_to_csr([profile])
+    placed = placements(ix, items, offsets)
+    registered = [m[0] for m in placed[0] if m]
+    assert registered, "profile must place in at least one cluster"
+    for ci in registered:
+        assert u in ix.cluster_users(ci)  # registered in deepest clusters
+    # Descent seeds from the union of the matched clusters (route()), so
+    # reachability is over that union, following forward+reverse edges.
+    frontier = set()
+    for ci in registered:
+        frontier |= set(int(x) for x in ix.cluster_users(ci) if x != u)
+    seen = set(frontier)
+    reached = u in frontier
+    for _ in range(engine.qc.hops):
+        if reached:
+            break
+        nxt = set()
+        for x in frontier:
+            for nb in np.concatenate([ix.graph_ids[x], ix.rev_ids[x]]):
+                if nb != PAD_ID and int(nb) not in seen:
+                    nxt.add(int(nb))
+        seen |= nxt
+        frontier = nxt
+        reached = u in frontier
+    assert reached
+
+
+def test_incremental_device_sync_matches_full_upload(index, query_profiles):
+    """Inserts repair the engine's device copies via the row journal
+    (scatter of touched rows); results must be identical to a fresh
+    engine that uploads the mutated index from scratch."""
+    import copy
+
+    ix = copy.deepcopy(index)
+    warm = QueryEngine(ix, QueryConfig(k=10, refresh_every=10**9))
+    warm.query_batch(query_profiles[:4])  # populate the device cache
+    v0 = ix.version
+    qds = make_dataset("synth", scale=0.15, seed=23)
+    for m in range(5):
+        u = warm.insert(qds.profile(m))
+        touched = ix.rows_changed_since(v0)
+        assert touched is not None and u in touched
+    # Journal semantics: per-step diffs are supersets of the final row.
+    assert ix.rows_changed_since(ix.version) == set()
+    assert ix.rows_changed_since(ix.version - 1) is not None
+    ids1, sims1 = warm.query_batch(query_profiles[:8])
+    fresh = QueryEngine(ix, QueryConfig(k=10))
+    ids2, sims2 = fresh.query_batch(query_profiles[:8])
+    np.testing.assert_array_equal(ids1, ids2)
+    np.testing.assert_allclose(sims1, sims2, atol=1e-6)
+
+
+def test_cohort_refresh_registers_new_clusters(index):
+    """Once the insert cohort exceeds the threshold, the engine re-runs
+    C² clustering on it: new split paths become routable clusters and
+    the routing tables stay structurally consistent."""
+    import copy
+
+    ix = copy.deepcopy(index)
+    engine = QueryEngine(ix, QueryConfig(k=10, refresh_every=12))
+    # A *different* synth seed drifts the insert stream away from the
+    # build distribution, so fresh split paths appear.
+    qds = make_dataset("synth", scale=0.15, seed=99)
+    c_before = ix.n_clusters
+    v_before = ix.version
+    for m in range(12):
+        engine.insert(qds.profile(m))
+    assert engine.n_refreshes == 1
+    assert engine._cohort == []  # drained
+    assert ix.version > v_before
+    assert ix.n_clusters >= c_before
+    # CSR stays consistent after the refresh appended clusters.
+    assert len(ix.cluster_offsets) == ix.n_clusters + 1
+    assert ix.cluster_offsets[-1] == len(ix.cluster_members)
+    assert len(ix.cluster_paths) == ix.n_clusters
+    assert (np.diff(ix.cluster_offsets) >= 0).all()
+    mem = ix.cluster_members
+    assert ((mem >= 0) & (mem < ix.n)).all()
+    # The refreshed LUT routes: every new cluster is findable by path.
+    lut = ix.path_lut()
+    assert len(lut) == ix.n_clusters
+    # Serving still works end to end on the refreshed tables.
+    ids, _ = engine.query_batch([qds.profile(0)])
+    assert (ids[0] != PAD_ID).any()
+
+
 def test_index_save_load_roundtrip(index, tmp_path):
     path = tmp_path / "index.npz"
     index.save(path)

@@ -1,0 +1,134 @@
+"""Hypothesis property tests for the query layer: FRH longest-prefix
+routing and KNNIndex persistence."""
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # [test] extra; skip, don't break collection
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hashing import NO_HASH
+from repro.query.index import KNNIndex
+from repro.query.router import _matches_for
+from repro.types import NEG_INF, PAD_ID
+
+# Ascending distinct hash sequences, like user_distinct_hashes_np emits.
+_hash_seq = st.lists(st.integers(0, 50), min_size=1, max_size=6,
+                     unique=True).map(sorted)
+
+
+@settings(deadline=None, max_examples=60)
+@given(query=_hash_seq, table=st.lists(_hash_seq, max_size=8),
+       pad=st.integers(0, 3))
+def test_router_longest_prefix_match(query, table, pad):
+    """_matches_for returns exactly the table paths that are prefixes of
+    the query's distinct-hash sequence, deepest first."""
+    cfg = 0
+    # LUT over the table paths plus a few of the query's own prefixes (so
+    # matches exist often), mimicking KNNIndex.path_lut().
+    paths = {tuple(p) for p in table}
+    paths |= {tuple(query[:d]) for d in range(1, len(query) + 1)
+              if d % 2 == 1}
+    lut = {(cfg, p): ci for ci, p in enumerate(sorted(paths))}
+    row = np.array(query + [NO_HASH] * pad, dtype=np.int64)
+    got = _matches_for(lut, cfg, row)
+    expect = [lut[(cfg, tuple(query[:d]))]
+              for d in range(len(query), 0, -1)
+              if (cfg, tuple(query[:d])) in lut]
+    assert got == expect
+    # A different configuration never matches.
+    assert _matches_for(lut, cfg + 1, row) == []
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.data())
+def test_index_save_load_roundtrip_identity(data):
+    """save → load is the identity on every array and meta field, for
+    arbitrary (well-formed) index shapes."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    n = data.draw(st.integers(2, 24))
+    k = data.draw(st.integers(1, 5))
+    W = data.draw(st.integers(1, 4))
+    t = data.draw(st.integers(1, 3))
+    depth = data.draw(st.integers(1, 3))
+    c = data.draw(st.integers(0, 6))
+
+    graph_ids = rng.integers(-1, n, size=(n, k)).astype(np.int32)
+    graph_sims = np.where(graph_ids == PAD_ID, NEG_INF,
+                          rng.random((n, k))).astype(np.float32)
+    sizes = rng.integers(0, n, size=c)
+    offsets = np.zeros(c + 1, dtype=np.int64)
+    np.cumsum(sizes, out=offsets[1:])
+    members = rng.integers(0, n, size=int(offsets[-1])).astype(np.int32)
+    paths = rng.integers(0, 100, size=(c, depth)).astype(np.int32)
+    ix = KNNIndex(
+        graph_ids=graph_ids,
+        graph_sims=graph_sims,
+        words=rng.integers(0, 2**32, size=(n, W), dtype=np.uint32),
+        card=rng.integers(0, 32 * W, size=n).astype(np.int32),
+        rev_ids=rng.integers(-1, n, size=(n, k)).astype(np.int32),
+        hash_seeds=rng.integers(0, 2**31 - 1, size=t).astype(np.int32),
+        cluster_paths=paths,
+        cluster_config=rng.integers(0, t, size=c).astype(np.int32),
+        cluster_members=members,
+        cluster_offsets=offsets,
+        b=int(data.draw(st.integers(1, 512))),
+        n_bits=32 * W,
+        fp_seed=int(data.draw(st.integers(0, 1000))),
+        split_depth=depth,
+        version=int(data.draw(st.integers(0, 7))),
+    )
+    with tempfile.TemporaryDirectory() as d:
+        path = Path(d) / "ix.npz"
+        ix.save(path)
+        loaded = KNNIndex.load(path)
+    for name in ("graph_ids", "graph_sims", "words", "card", "rev_ids",
+                 "hash_seeds", "cluster_paths", "cluster_config",
+                 "cluster_members", "cluster_offsets"):
+        np.testing.assert_array_equal(getattr(ix, name),
+                                      getattr(loaded, name), err_msg=name)
+    for name in ("b", "n_bits", "fp_seed", "split_depth", "version"):
+        assert getattr(ix, name) == getattr(loaded, name), name
+    assert loaded.n == ix.n and loaded.capacity >= loaded.n
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 20))
+def test_roundtrip_after_inserts(seed, n_ins):
+    """Growth state (spare capacity, online cluster members) never leaks
+    into the artifact: save trims to n rows and consolidates the CSR."""
+    rng = np.random.default_rng(seed)
+    n, k, W = 8, 3, 2
+    ids = rng.integers(0, n, size=(n, k)).astype(np.int32)
+    ix = KNNIndex(
+        graph_ids=ids,
+        graph_sims=rng.random((n, k)).astype(np.float32),
+        words=rng.integers(0, 2**32, size=(n, W), dtype=np.uint32),
+        card=rng.integers(1, 64, size=n).astype(np.int32),
+        rev_ids=rng.integers(-1, n, size=(n, k)).astype(np.int32),
+        hash_seeds=np.array([1], np.int32),
+        cluster_paths=np.array([[7]], np.int32),
+        cluster_config=np.array([0], np.int32),
+        cluster_members=np.arange(n, dtype=np.int32),
+        cluster_offsets=np.array([0, n], np.int64),
+        b=64, n_bits=32 * W, fp_seed=0, split_depth=1,
+    )
+    for _ in range(n_ins):
+        u = ix.append_user(rng.integers(0, 2**32, size=W, dtype=np.uint32),
+                           int(rng.integers(1, 64)),
+                           np.array([0, 1], np.int32),
+                           np.array([0.5, 0.25], np.float32))
+        ix.add_cluster_member(0, u)
+    assert ix.capacity >= ix.n == n + n_ins
+    with tempfile.TemporaryDirectory() as d:
+        path = Path(d) / "ix.npz"
+        ix.save(path)
+        loaded = KNNIndex.load(path)
+    assert loaded.n == ix.n
+    assert loaded.graph_ids.shape[0] == ix.n  # no spare rows in the npz
+    np.testing.assert_array_equal(loaded.graph_ids, ix.graph_ids)
+    np.testing.assert_array_equal(loaded.cluster_users(0),
+                                  ix.cluster_users(0))
