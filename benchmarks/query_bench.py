@@ -8,9 +8,15 @@ sharded modes, plus online-insert throughput.
 ``--devices N`` (default: the shard count) emulates N XLA host devices —
 the multi-core serving configuration, one shard per device via
 shard_map; ``--devices 0`` forces the single-device vmap fallback.
-``--smoke`` shrinks the workload for CI: it still exercises build, both
-serving modes, and insertion, and fails loudly (exit 1) if the sharded
-mode regresses against single-device beyond the allowed margins.
+``--continuous`` adds the slot-scheduler comparison: closed-loop
+continuous rows plus a Poisson-arrival *open-loop* run (requests are
+submitted at their arrival times, not all at once) reporting p50/p95
+under load for wave vs continuous serving — the tail-latency case
+continuous batching exists for. ``--smoke`` shrinks the workload for
+CI: it still exercises build, both serving modes, and insertion, and
+fails loudly (exit 1) if the sharded mode regresses against
+single-device beyond the allowed margins (with ``--continuous``: if
+streaming admission loses results or recall parity with waves).
 """
 from __future__ import annotations
 
@@ -60,9 +66,169 @@ def _serve_waves(engine: QueryEngine, profiles, k: int) -> dict:
     return out
 
 
+def _warm_wave_capacities(engine: QueryEngine, profiles, hop_set=(None,)):
+    """Compile the wave program for every pow-2 wave capacity × hop
+    budget the open-loop run can hit (waves are padded to capacity
+    buckets), so a mid-run compile doesn't pollute the latency
+    measurement."""
+    for hops in hop_set:
+        n = 1
+        while True:
+            engine.query_batch(profiles[: min(n, len(profiles))],
+                               hops=hops)
+            if n >= len(profiles):  # final call warms the top bucket
+                break
+            n *= 2
+
+
+def open_loop(engine: QueryEngine, profiles, rate_qps: float,
+              budgets=None, seed: int = 0, timeout_s: float = 300.0) -> dict:
+    """Poisson-arrival open-loop serving through ``engine.step()``.
+
+    Requests are submitted at their arrival times (exponential
+    inter-arrivals at ``rate_qps``) while the engine serves — so a
+    request's latency includes the queueing it actually experiences
+    behind in-flight work, which is where wave and continuous modes
+    diverge. ``budgets`` (optional int[n]) gives each request its own
+    hop budget: wave mode convoys a wave to its deepest member, while
+    continuous mode frees each slot at its own budget.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps,
+                                         size=len(profiles)))
+    reqs = [QueryRequest(rid=i, profile=p,
+                         hops=None if budgets is None else int(budgets[i]))
+            for i, p in enumerate(profiles)]
+    n_done0 = len(engine.done)
+    n_steps = 0
+    t0 = time.perf_counter()
+    i = 0
+    while len(engine.done) - n_done0 < len(reqs):
+        now = time.perf_counter() - t0
+        if now > timeout_s:
+            raise RuntimeError(
+                f"open_loop stalled: {len(engine.done) - n_done0}"
+                f"/{len(reqs)} done after {timeout_s}s")
+        while i < len(reqs) and arrivals[i] <= now:
+            req = reqs[i]
+            # Latency counts from the ARRIVAL time, not from when the
+            # driver got around to enqueueing it — a request that landed
+            # while a long wave was in flight has been waiting since its
+            # arrival, and that queueing is the quantity under test.
+            req.t_submit = t0 + arrivals[i]
+            engine.queue.append(req)
+            i += 1
+        if engine.busy():
+            engine.step()
+            n_steps += 1
+        elif i < len(reqs):  # idle: sleep to the next arrival
+            time.sleep(max(min(arrivals[i] - now, 0.01), 0.0))
+    dt = max(time.perf_counter() - t0, 1e-9)
+    served = engine.done[n_done0:]
+    lats = np.array([r.latency for r in served])
+    return {
+        "rate_qps": round(rate_qps, 1),
+        "achieved_qps": round(len(served) / dt, 1),
+        "steps": n_steps,
+        "p50_latency_ms": round(float(np.percentile(lats, 50)) * 1e3, 2),
+        "p95_latency_ms": round(float(np.percentile(lats, 95)) * 1e3, 2),
+        "max_latency_ms": round(float(lats.max()) * 1e3, 2),
+    }
+
+
+def run_continuous(index, profiles, k: int, beam: int, hops: int,
+                   slots: int, load: float = 0.85, deep_frac: float = 0.2,
+                   seed: int = 0) -> dict:
+    """Wave vs continuous under identical Poisson load + closed-loop rows.
+
+    The open-loop workload is heterogeneous — ``deep_frac`` of the
+    requests carry a 2× hop budget (refinement queries, the "slow
+    descent" of the PR motivation). Wave batching convoys every wave
+    containing a deep request to the deep budget; continuous serving
+    frees each slot at its own budget, which is where the tail-latency
+    gap comes from.
+    """
+    cont = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
+                                          continuous=True, slots=slots))
+    closed = _serve_waves(cont, profiles, k)
+
+    # A sustained arrival stream (2× the profile set) and a few
+    # repetitions: a single short burst is a convoy lottery — backlog
+    # needs time to build before the wave-mode tail shows.
+    deep_hops = 2 * hops
+    stream = profiles * 2
+    reps = 3
+    rng = np.random.default_rng(seed + 1)
+    budgets = np.where(rng.random(len(stream)) < deep_frac,
+                       deep_hops, hops)
+
+    # Calibrate offered load against the wave engine's warm closed-loop
+    # throughput on this mixed workload (one drain = one deep-budget
+    # wave), then run below the knee so neither mode saturates outright.
+    wave_ol = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
+                                             max_wave=len(stream)))
+    _warm_wave_capacities(wave_ol, stream, hop_set=(hops, deep_hops))
+    for rid, p in enumerate(stream):
+        wave_ol.submit(QueryRequest(rid=rid, profile=p,
+                                    hops=int(budgets[rid])))
+    mixed_qps = wave_ol.run()["qps"]
+    wave_ol.done.clear()
+    rate = max(load * mixed_qps, 1.0)
+
+    cont_ol = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
+                                             continuous=True, slots=slots))
+    for rid, p in enumerate(stream[: 2 * slots]):
+        cont_ol.submit(QueryRequest(rid=-1 - rid, profile=p))  # warm ticks
+    cont_ol.run()
+    cont_ol.done.clear()
+
+    runs = {"wave": [], "continuous": []}
+    for rep in range(reps):
+        runs["wave"].append(open_loop(wave_ol, stream, rate,
+                                      budgets=budgets, seed=seed + rep))
+        runs["continuous"].append(open_loop(cont_ol, stream, rate,
+                                            budgets=budgets,
+                                            seed=seed + rep))
+
+    def median_row(rows):
+        out = {"rate_qps": rows[0]["rate_qps"]}
+        for key in ("achieved_qps", "p50_latency_ms", "p95_latency_ms",
+                    "max_latency_ms"):
+            out[key] = round(float(np.median([r[key] for r in rows])), 2)
+        out["p95_latency_ms_reps"] = [r["p95_latency_ms"] for r in rows]
+        return out
+
+    open_rows = {mode: median_row(rows) for mode, rows in runs.items()}
+    wave_recall = wave_ol.recall_vs_brute_force()
+    cont_recall = cont_ol.recall_vs_brute_force()
+    return {
+        "slots": slots,
+        "closed_loop": closed,
+        "open_loop_workload": {
+            "deep_frac": deep_frac,
+            "hops": hops,
+            "deep_hops": deep_hops,
+            "load": load,
+            "arrivals_per_rep": len(stream),
+            "reps": reps,
+            "mixed_wave_closed_loop_qps": round(mixed_qps, 1),
+        },
+        "open_loop": open_rows,
+        "open_loop_recall": {
+            "wave": round(wave_recall, 4),
+            "continuous": round(cont_recall, 4),
+            "delta": round(cont_recall - wave_recall, 4),
+        },
+        "p95_improvement": round(
+            open_rows["wave"]["p95_latency_ms"]
+            / max(open_rows["continuous"]["p95_latency_ms"], 1e-9), 3),
+    }
+
+
 def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         k: int = 10, beam: int = 32, hops: int = 3, seed: int = 0,
-        shards: int = 2, oversample: float = 1.25) -> dict:
+        shards: int = 2, oversample: float = 1.25,
+        continuous: bool = False, slots: int = 32) -> dict:
     if shards < 2:
         raise SystemExit("query_bench compares sharded vs single-device "
                          "serving; --shards must be >= 2")
@@ -89,6 +255,14 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
     }
     sd = sharded.sharded_state()
     sharded_exec = "mesh" if sd is not None and sd.mesh is not None else "vmap"
+
+    # Continuous-batching rows BEFORE the insert benchmark mutates the
+    # shared index, so wave and continuous are measured on the same
+    # index state and their recall numbers are directly comparable.
+    cont = None
+    if continuous:
+        cont = run_continuous(index, profiles, k, beam, hops, slots,
+                              seed=seed)
 
     # Online insertion through the amortized-growth path (single engine;
     # the index is shared, so the sharded engine reshards lazily).
@@ -122,6 +296,7 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
             "recall_delta": round(sh[f"recall_at_{k}"]
                                   - sg[f"recall_at_{k}"], 4),
         },
+        **({"continuous": cont} if cont is not None else {}),
     }
 
 
@@ -138,6 +313,10 @@ def main():
                     help="sharded fleet frontier vs single-device beam")
     ap.add_argument("--devices", type=int, default=None,
                     help="emulated host devices (default: --shards; 0=off)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="add wave-vs-continuous closed/open-loop rows")
+    ap.add_argument("--slots", type=int, default=32,
+                    help="continuous-mode in-flight slot capacity")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI run; exit 1 on sharded regression")
     ap.add_argument("--out", default="BENCH_query.json")
@@ -145,8 +324,10 @@ def main():
 
     if args.smoke:
         args.scale, args.queries = min(args.scale, 0.1), min(args.queries, 64)
+        args.slots = min(args.slots, 16)
     rec = run(args.dataset, args.scale, args.queries, args.k, args.beam,
-              args.hops, shards=args.shards, oversample=args.oversample)
+              args.hops, shards=args.shards, oversample=args.oversample,
+              continuous=args.continuous, slots=args.slots)
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(json.dumps(rec, indent=2))
     print(f"[query_bench] wrote {args.out}")
@@ -163,6 +344,18 @@ def main():
             sys.exit(1)
         print(f"[query_bench] smoke OK: qps_ratio={ratio} "
               f"recall_delta={delta}")
+        if args.continuous:
+            # Streaming admission must keep result quality: recall parity
+            # with waves (identical descent ⇒ tight margin even on noisy
+            # CI) and full completion of the open-loop run.
+            cd = rec["continuous"]["open_loop_recall"]["delta"]
+            if abs(cd) > 0.005:
+                print(f"[query_bench] FAIL continuous recall drift: "
+                      f"delta={cd}", file=sys.stderr)
+                sys.exit(1)
+            print(f"[query_bench] continuous smoke OK: recall_delta={cd} "
+                  f"p95_improvement="
+                  f"{rec['continuous']['p95_improvement']}")
 
 
 if __name__ == "__main__":

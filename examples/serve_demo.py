@@ -1,8 +1,11 @@
-"""Serve a small model with batched requests: queue → prefill wave →
-batched decode, with throughput/latency stats.
+"""Serve a small model with batched requests, in wave mode (queue →
+prefill wave → batched decode) or continuous mode (slot-scheduled
+streaming admission, ``--continuous``), with throughput/latency stats.
 
-    PYTHONPATH=src python examples/serve_demo.py
+    PYTHONPATH=src python examples/serve_demo.py [--continuous]
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -13,10 +16,17 @@ from repro.serve.engine import Engine, Request, ServeConfig
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-scheduled streaming admission instead of "
+                         "closed waves (identical token streams)")
+    args = ap.parse_args()
+
     cfg = scaled_down(get_config("llama3_2-1b"))
     params = init_params(jax.random.key(0), cfg)
     engine = Engine(params, cfg, ServeConfig(max_batch=4, max_prompt=32,
-                                             max_new=16))
+                                             max_new=16,
+                                             continuous=args.continuous))
     rng = np.random.default_rng(0)
     for rid in range(10):
         plen = int(rng.integers(4, 32))
@@ -25,9 +35,11 @@ def main():
             prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
             max_new=int(rng.integers(4, 16))))
     stats = engine.run()
-    print("requests:", stats["requests"], "waves:", stats["waves"])
+    unit = "ticks" if args.continuous else "waves"
+    print("requests:", stats["requests"], f"{unit}:", stats["waves"],
+          "decode steps:", stats["decode_steps"])
     print(f"throughput: {stats['tokens_per_s']:.1f} tok/s "
-          f"(batched greedy decode, CPU)")
+          f"({stats['mode']} greedy decode, CPU)")
     print(f"latency: mean {stats['mean_latency_s']:.2f}s "
           f"p95 {stats['p95_latency_s']:.2f}s")
     for r in engine.done[:3]:

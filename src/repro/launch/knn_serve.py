@@ -6,9 +6,12 @@ of unseen query profiles, report QPS / latency / recall vs brute force.
 
 Pass ``--index path.npz`` to serve a previously built artifact
 (``launch/knn_build --index-out``), ``--insert M`` to also exercise
-online insertion before the query wave, and ``--shards S`` to serve
+online insertion before the query wave, ``--shards S`` to serve
 through the LPT cluster shards (shard_map when a device per shard
-exists, vmapped on one device otherwise — see repro/query/sharded.py).
+exists, vmapped on one device otherwise — see repro/query/sharded.py),
+and ``--continuous`` to stream requests through the slot-based
+continuous-batching scheduler (``repro/sched/``) instead of closed
+waves — same results, but admission happens mid-descent.
 """
 from __future__ import annotations
 
@@ -32,6 +35,11 @@ def main(argv=None):
     ap.add_argument("--beam", type=int, default=32)
     ap.add_argument("--hops", type=int, default=3)
     ap.add_argument("--max-wave", type=int, default=256)
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching (streaming "
+                         "admission) instead of closed waves")
+    ap.add_argument("--slots", type=int, default=32,
+                    help="in-flight slot capacity in continuous mode")
     ap.add_argument("--shards", type=int, default=1,
                     help="serve across this many LPT cluster shards")
     ap.add_argument("--insert", type=int, default=0,
@@ -61,7 +69,7 @@ def main(argv=None):
 
     engine = QueryEngine(index, QueryConfig(
         k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
-        shards=args.shards))
+        shards=args.shards, continuous=args.continuous, slots=args.slots))
 
     # Unseen profiles from the same distribution (different seed).
     qds = make_dataset(args.dataset, scale=args.scale, seed=args.seed + 1)
@@ -94,7 +102,9 @@ def main(argv=None):
         engine.submit(QueryRequest(rid=rid, profile=p))
     stats = engine.run()
     recall = engine.recall_vs_brute_force()
-    print(f"[serve] {stats['requests']} queries in {stats['waves']} waves | "
+    unit = "ticks" if args.continuous else "waves"
+    print(f"[serve] {stats['requests']} queries in {stats['waves']} {unit} "
+          f"({stats['mode']}) | "
           f"QPS {stats['qps']:.0f} | "
           f"p50 {stats['p50_latency_s'] * 1e3:.1f}ms | "
           f"p95 {stats['p95_latency_s'] * 1e3:.1f}ms | "

@@ -223,17 +223,32 @@ def apply_attn(p, x, cfg: ModelConfig, ctx: ShardCtx, *,
     else:
         # Decode: S == 1. Write into the (ring) buffer at cur_index.
         S_alloc = cache["k"].shape[1]
-        slot = (cur_index % S_alloc).astype(jnp.int32)
-        ck_ = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-        cv_ = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-        cpos = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], cur_index[None].astype(jnp.int32), slot, axis=0)
+        if cache["pos"].ndim == 2:
+            # Per-row decode positions (continuous batching): pos is
+            # [B, S_alloc] and cur_index is [B] — every slot writes its
+            # own ring position and masks by its own timeline, so one
+            # batch row can be at token 3 while another is at token 97.
+            ci = cur_index.astype(jnp.int32)
+            slot = ci % S_alloc
+            rows = jnp.arange(B)
+            ck_ = cache["k"].at[rows, slot].set(k[:, 0])
+            cv_ = cache["v"].at[rows, slot].set(v[:, 0])
+            cpos = cache["pos"].at[rows, slot].set(ci)
+            kp = cpos[:, None, :]
+        else:
+            slot = (cur_index % S_alloc).astype(jnp.int32)
+            ck_ = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, slot, axis=1)
+            cv_ = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, slot, axis=1)
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], cur_index[None].astype(jnp.int32), slot, axis=0)
+            kp = cpos[None, None, :]
         new_cache = {"k": ck_, "v": cv_, "pos": cpos}
         qg = q.reshape(B, 1, KV, G, hd)
         scale = 1.0 / np.sqrt(hd)
         s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, ck_,
                        preferred_element_type=jnp.float32) * scale
-        kp = cpos[None, None, :]
         qp = positions[:, :, None]
         mask = (kp <= qp) & (kp >= 0)
         if window:

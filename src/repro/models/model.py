@@ -185,8 +185,11 @@ def forward(params, cfg: ModelConfig, ctx: ShardCtx, *,
     x = ctx.csp(x, ctx.batch_axes, None, None)
     if positions is None:
         if cur_index is not None:
-            positions = jnp.broadcast_to(
-                cur_index.astype(jnp.int32), (B, S))
+            ci = cur_index.astype(jnp.int32)
+            if ci.ndim == 1:  # per-row decode positions (continuous batching)
+                positions = jnp.broadcast_to(ci[:, None], (B, S))
+            else:
+                positions = jnp.broadcast_to(ci, (B, S))
         else:
             positions = jnp.broadcast_to(
                 jnp.arange(S, dtype=jnp.int32), (B, S))

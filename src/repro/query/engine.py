@@ -36,14 +36,18 @@ from repro.eval.metrics import knn_recall
 from repro.query.index import KNNIndex
 from repro.query.router import (fingerprint_profiles, placements,
                                 profiles_to_csr, route)
-from repro.query.search import batched_descent, exact_knn
-from repro.types import PAD_ID
+from repro.query.search import (batched_descent, exact_knn, slot_admit,
+                                slot_hop)
+from repro.sched import SlotScheduler
+from repro.types import NEG_INF, PAD_ID
 
 
 @dataclasses.dataclass
 class QueryRequest:
     rid: int
     profile: np.ndarray                  # int32[|P|] item ids
+    hops: Optional[int] = None           # per-request hop budget
+                                         # (None → QueryConfig.hops)
     # Filled by the engine:
     ids: Optional[np.ndarray] = None     # int32[k] neighbor ids
     sims: Optional[np.ndarray] = None    # float32[k] similarities
@@ -65,18 +69,52 @@ class QueryConfig:
     shards: int = 1            # >1: LPT cluster shards + cross-shard merge
     shard_oversample: float = 1.5  # fleet frontier vs single-device beam
     refresh_every: int = 64    # cohort size triggering re-clustering
+    continuous: bool = False   # slot-based streaming admission (sched/)
+    slots: int = 32            # in-flight capacity in continuous mode
+
+
+class _ContinuousState:
+    """Per-slot state for the continuous-batching path.
+
+    Beam state and query fingerprints are DEVICE-resident at the fixed
+    capacity ``QueryConfig.slots`` — admissions scatter into them
+    (:func:`~repro.query.search.slot_admit`, bucketed to ``admit_cap``
+    rows) and :func:`~repro.query.search.slot_hop` advances them in
+    place, so a steady-state tick moves no per-slot query state across
+    the host boundary. Hop counters and the scheduler stay on host.
+    """
+
+    def __init__(self, index: KNNIndex, qc: QueryConfig):
+        n_slots, beam = qc.slots, max(qc.beam, qc.k)
+        self.beam = beam
+        self.admit_cap = int(np.clip(n_slots // 4, 8, 32))
+        self.seed_cols = index.t * qc.seeds_per_config
+        self.sched = SlotScheduler(n_slots)
+        self.q_words = jnp.zeros((n_slots, index.words.shape[1]),
+                                 jnp.uint32)
+        self.q_card = jnp.zeros(n_slots, jnp.int32)
+        self.beam_ids = jnp.full((n_slots, beam), PAD_ID, jnp.int32)
+        self.beam_sims = jnp.full((n_slots, beam), NEG_INF, jnp.float32)
+        self.hops_done = np.zeros(n_slots, np.int64)
+        self.budget = np.full(n_slots, qc.hops, np.int64)  # per-slot hops
 
 
 class QueryEngine:
     def __init__(self, index: KNNIndex, qc: QueryConfig | None = None):
         self.index = index
         self.qc = qc or QueryConfig()
+        if self.qc.continuous and self.qc.shards > 1:
+            raise ValueError(
+                "continuous mode streams through the single-device slot "
+                "program; sharded continuous serving is a ROADMAP item")
         self.queue: deque[QueryRequest] = deque()
         self.done: list[QueryRequest] = []
         self.n_inserted = 0
         self.n_refreshes = 0
+        self.n_ticks = 0          # continuous slot_step invocations
         self._dev = None          # (version, n_cap, device arrays)
         self._sharded = None      # cached ShardedDescent (version keyed)
+        self._cont: _ContinuousState | None = None
         self._cohort: list[tuple[int, np.ndarray]] = []  # (uid, profile)
 
     # -- device state ------------------------------------------------------
@@ -144,15 +182,16 @@ class QueryEngine:
 
     # -- core batched path -------------------------------------------------
 
-    def query_batch(self, profiles, k: int | None = None):
+    def query_batch(self, profiles, k: int | None = None,
+                    hops: int | None = None):
         """Answer a batch of raw profiles: (ids int32[q, k], sims f32[q, k])."""
         items, offsets = profiles_to_csr(profiles)
         qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
                                    self.index.fp_seed)
-        return self._descend(items, offsets, qgf, k or self.qc.k)
+        return self._descend(items, offsets, qgf, k or self.qc.k, hops=hops)
 
     def _descend(self, items, offsets, qgf, k: int, placed=None,
-                 single: bool = False):
+                 single: bool = False, hops: int | None = None):
         """Route + beam-descend already-fingerprinted query profiles.
 
         ``single=True`` forces the single-device path even when the
@@ -161,6 +200,7 @@ class QueryEngine:
         """
         qc = self.qc
         beam = max(qc.beam, k)
+        hops = qc.hops if hops is None else hops
         seeds = route(self.index, items, offsets, qc.seeds_per_config,
                       placed=placed)
         qn = len(offsets) - 1
@@ -173,13 +213,13 @@ class QueryEngine:
         qseeds[:qn] = seeds
         if qc.shards > 1 and not single:
             ids, sims = self._sync_sharded().descend(
-                qw, qcard, qseeds, k=k, beam=beam, hops=qc.hops)
+                qw, qcard, qseeds, k=k, beam=beam, hops=hops)
         else:
             graph_ids, rev_ids, words, card = self._sync()
             ids, sims = batched_descent(
                 graph_ids, rev_ids, words, card,
                 jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
-                k=k, beam=beam, hops=qc.hops)
+                k=k, beam=beam, hops=hops)
         return np.asarray(ids)[:qn], np.asarray(sims)[:qn]
 
     # -- queue / wave serving ----------------------------------------------
@@ -194,26 +234,163 @@ class QueryEngine:
             wave.append(self.queue.popleft())
         return wave
 
-    def run(self) -> dict:
-        """Drain the queue in waves; returns aggregate serving stats."""
-        t0 = time.perf_counter()
-        n_waves = 0
-        n_new_done = 0
+    def _serve_wave(self) -> int:
+        """Close one wave from the queue; returns requests completed.
+
+        A wave runs to the MAX hop budget of its members (the compiled
+        program has one static hop count) — one deep request convoys
+        every shallow request behind it. Continuous mode per-slot hop
+        budgets are the fix.
+        """
+        wave = self._next_wave()
+        if not wave:
+            return 0
+        hops = max(r.hops if r.hops is not None else self.qc.hops
+                   for r in wave)
+        ids, sims = self.query_batch([r.profile for r in wave], hops=hops)
+        now = time.perf_counter()
+        for j, r in enumerate(wave):
+            r.ids, r.sims = ids[j], sims[j]
+            r.t_done = now
+            self.done.append(r)
+        return len(wave)
+
+    def busy(self) -> bool:
+        """True while requests are queued or (continuous) in flight."""
+        if self.queue:
+            return True
+        return self._cont is not None and self._cont.sched.has_work()
+
+    def step(self) -> int:
+        """Serve one scheduler step — one wave, or one continuous tick.
+
+        The open-loop benchmark drives this directly so arrivals can be
+        interleaved with service; :meth:`run` loops it until drained.
+        """
+        return self.tick() if self.qc.continuous else self._serve_wave()
+
+    # -- continuous (slot) serving -----------------------------------------
+
+    def _cont_state(self) -> _ContinuousState:
+        if self._cont is None:
+            self._cont = _ContinuousState(self.index, self.qc)
+        return self._cont
+
+    def tick(self) -> int:
+        """One continuous tick: admit into free slots, advance every
+        in-flight beam one hop, complete converged/exhausted slots.
+
+        Returns the number of requests completed this tick. Admission is
+        mid-flight: rows freed by a previous tick take fresh requests
+        while the remaining rows keep descending — no wave barrier.
+        """
+        qc = self.qc
+        st = self._cont_state()
+        sched = st.sched
         while self.queue:
-            wave = self._next_wave()
-            ids, sims = self.query_batch([r.profile for r in wave])
+            sched.submit(self.queue.popleft())
+        graph_ids, rev_ids, words, card = self._sync()
+        n_done = 0
+        admitted = sched.admit()
+        while admitted:
+            items, offsets = profiles_to_csr([r.profile for _, r in admitted])
+            qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
+                                       self.index.fp_seed)
+            seeds = route(self.index, items, offsets, qc.seeds_per_config)
+            A = st.admit_cap
+            for lo in range(0, len(admitted), A):
+                chunk = admitted[lo:lo + A]
+                new_w = np.zeros((A, st.q_words.shape[1]), np.uint32)
+                new_c = np.zeros(A, np.int32)
+                new_s = np.full((A, st.seed_cols), PAD_ID, np.int32)
+                # n_slots = one-past-the-end sentinel; the admit scatter
+                # drops those rows (mode="drop").
+                idx = np.full(A, sched.n_slots, np.int32)
+                for j, (slot, req) in enumerate(chunk):
+                    new_w[j] = qgf.words[lo + j]
+                    new_c[j] = int(qgf.card[lo + j])
+                    new_s[j] = seeds[lo + j]
+                    idx[j] = slot
+                    st.hops_done[slot] = 0
+                    st.budget[slot] = (req.hops if req.hops is not None
+                                       else qc.hops)
+                st.q_words, st.q_card, st.beam_ids, st.beam_sims = \
+                    slot_admit(words, card, jnp.asarray(new_w),
+                               jnp.asarray(new_c), jnp.asarray(new_s),
+                               jnp.asarray(idx), st.q_words, st.q_card,
+                               st.beam_ids, st.beam_sims, beam=st.beam)
+            # A zero-hop budget completes on its seed-initialized beam
+            # without entering the hop (wave parity: a hops=0 wave runs a
+            # length-0 scan). The freed slots may admit further queued
+            # requests, hence the loop.
+            zero = [(s, r) for s, r in admitted if st.budget[s] <= 0]
+            if not zero:
+                break
+            bids = np.asarray(st.beam_ids)
+            bsims = np.asarray(st.beam_sims)
             now = time.perf_counter()
-            for j, r in enumerate(wave):
-                r.ids, r.sims = ids[j], sims[j]
-                r.t_done = now
-                self.done.append(r)
-            n_waves += 1
-            n_new_done += len(wave)
+            for slot, req in zero:
+                sched.release(slot)
+                req.ids = bids[slot, : qc.k].copy()
+                req.sims = bsims[slot, : qc.k].copy()
+                req.t_done = now
+                self.done.append(req)
+                n_done += 1
+            admitted = sched.admit()
+        active = sched.active_mask()
+        if not active.any():
+            return n_done
+        st.beam_ids, st.beam_sims, changed = slot_hop(
+            graph_ids, rev_ids, words, card, st.q_words, st.q_card,
+            st.beam_ids, st.beam_sims, jnp.asarray(active))
+        st.hops_done[active] += 1
+        self.n_ticks += 1
+        finished = active & (
+            (st.hops_done >= st.budget) | ~np.asarray(changed))
+        if not finished.any():
+            return n_done
+        # The beam is sim-descending, deduped, and PAD-masked (merge_topk
+        # output), so the final top-k is its prefix — byte-identical to
+        # the wave kernel's closing merge_topk(beam, k).
+        bids = np.asarray(st.beam_ids)
+        bsims = np.asarray(st.beam_sims)
+        now = time.perf_counter()
+        for slot in np.flatnonzero(finished):
+            req = sched.release(int(slot))
+            req.ids = bids[slot, : qc.k].copy()
+            req.sims = bsims[slot, : qc.k].copy()
+            req.t_done = now
+            self.done.append(req)
+            n_done += 1
+        return n_done
+
+    def run(self, on_tick=None) -> dict:
+        """Drain the queue (waves, or continuous ticks when
+        ``QueryConfig.continuous``); returns aggregate serving stats.
+
+        ``on_tick`` (continuous only): host callback ``f(engine, tick)``
+        invoked between scheduler steps — the hook the interleaved
+        insert-under-load tests (and any mid-stream mutation) use.
+        """
+        t0 = time.perf_counter()
+        n_steps = 0
+        n_new_done = 0
+        if self.qc.continuous:
+            while self.busy():
+                if on_tick is not None:
+                    on_tick(self, n_steps)
+                n_new_done += self.tick()
+                n_steps += 1
+        else:
+            while self.queue:
+                n_new_done += self._serve_wave()
+                n_steps += 1
         dt = max(time.perf_counter() - t0, 1e-9)
         lats = [r.latency for r in self.done[-n_new_done:]] if n_new_done else []
         return {
             "requests": n_new_done,
-            "waves": n_waves,
+            "mode": "continuous" if self.qc.continuous else "wave",
+            "waves": n_steps,
             "qps": n_new_done / dt,
             "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
             "p50_latency_s": float(np.percentile(lats, 50)) if lats else 0.0,

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.knn.topk import merge_topk
+from repro.sched import trace
 from repro.sketch.goldfinger import jaccard_pairwise
 from repro.types import NEG_INF, PAD_ID
 
@@ -36,6 +37,44 @@ def _scorer(words, card):
     return jax.vmap(score_row)
 
 
+def descent_init(words, card, q_words, q_card, seed_ids, *, beam: int):
+    """Score routed seeds and select the initial beam per query.
+
+    Returns (beam_ids int32[q, beam], beam_sims float32[q, beam]),
+    sim-descending, PAD_ID padded.
+    """
+    score = _scorer(words, card)
+    return merge_topk(seed_ids, score(q_words, q_card, seed_ids), beam)
+
+
+def descent_step(graph_ids, rev_ids, words, card,
+                 q_words, q_card, beam_ids, beam_sims):
+    """One descent hop: expand every query's beam by its friends-of-friends.
+
+    Gathers forward + reverse neighbors of the current beam, scores them
+    against the query fingerprints, and re-selects the beam. Rows are
+    independent — the hop for query i depends only on row i's beam and
+    the (shared, read-only) index arrays — which is what lets the
+    continuous-batching slot program advance in-flight queries hop by
+    hop while fresh admissions re-init other rows (``slot_step``), with
+    results identical to running the whole wave in lockstep.
+    """
+    nq = q_words.shape[0]
+    kg, kr = graph_ids.shape[1], rev_ids.shape[1]
+    score = _scorer(words, card)
+    safe = jnp.where(beam_ids == PAD_ID, 0, beam_ids)
+    fwd = graph_ids[safe].reshape(nq, -1)
+    fwd = jnp.where((beam_ids == PAD_ID).repeat(kg, axis=1), PAD_ID, fwd)
+    rev = rev_ids[safe].reshape(nq, -1)
+    rev = jnp.where((beam_ids == PAD_ID).repeat(kr, axis=1), PAD_ID, rev)
+    cand = jnp.concatenate([fwd, rev], axis=1)      # [q, beam·(kg+kr)]
+    cand_sims = score(q_words, q_card, cand)
+    return merge_topk(
+        jnp.concatenate([beam_ids, cand], axis=1),
+        jnp.concatenate([beam_sims, cand_sims], axis=1),
+        beam_ids.shape[1])
+
+
 def descent_kernel(graph_ids, rev_ids, words, card,
                    q_words, q_card, seed_ids, *,
                    k: int, beam: int, hops: int):
@@ -47,29 +86,17 @@ def descent_kernel(graph_ids, rev_ids, words, card,
     seed_ids int32[q, S]: routed seed candidates (PAD_ID padded).
     Returns (ids int32[q, k], sims float32[q, k]), sim-descending.
 
-    Unjitted so callers can compose it (``batched_descent`` jits it
-    directly; ``query/sharded.py`` vmaps/shard_maps it over shards).
+    Composed from :func:`descent_init` + ``hops`` × :func:`descent_step`
+    (the continuous path runs the same pieces tick-by-tick). Unjitted so
+    callers can compose it (``batched_descent`` jits it directly;
+    ``query/sharded.py`` vmaps/shard_maps it over shards).
     """
-    nq = q_words.shape[0]
-    kg, kr = graph_ids.shape[1], rev_ids.shape[1]
-    score = _scorer(words, card)
-
-    beam_ids, beam_sims = merge_topk(
-        seed_ids, score(q_words, q_card, seed_ids), beam)
+    beam_ids, beam_sims = descent_init(
+        words, card, q_words, q_card, seed_ids, beam=beam)
 
     def hop(state, _):
-        bids, bsims = state
-        safe = jnp.where(bids == PAD_ID, 0, bids)
-        fwd = graph_ids[safe].reshape(nq, -1)
-        fwd = jnp.where((bids == PAD_ID).repeat(kg, axis=1), PAD_ID, fwd)
-        rev = rev_ids[safe].reshape(nq, -1)
-        rev = jnp.where((bids == PAD_ID).repeat(kr, axis=1), PAD_ID, rev)
-        cand = jnp.concatenate([fwd, rev], axis=1)      # [q, beam·(kg+kr)]
-        cand_sims = score(q_words, q_card, cand)
-        nids, nsims = merge_topk(
-            jnp.concatenate([bids, cand], axis=1),
-            jnp.concatenate([bsims, cand_sims], axis=1), beam)
-        return (nids, nsims), None
+        return descent_step(graph_ids, rev_ids, words, card,
+                            q_words, q_card, *state), None
 
     (beam_ids, beam_sims), _ = jax.lax.scan(
         hop, (beam_ids, beam_sims), None, length=hops)
@@ -78,6 +105,61 @@ def descent_kernel(graph_ids, rev_ids, words, card,
 
 batched_descent = functools.partial(
     jax.jit, static_argnames=("k", "beam", "hops"))(descent_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("beam",),
+                   donate_argnames=("q_words", "q_card",
+                                    "beam_ids", "beam_sims"))
+def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
+               q_words, q_card, beam_ids, beam_sims, *, beam: int):
+    """Admit up to A requests into the persistent slot state.
+
+    ``new_*`` are A-row admission buckets (A is a small fixed capacity,
+    so one program compiles per bucket shape no matter how many requests
+    stream in); ``slot_idx`` int32[A] names the target slot per row, with
+    ``n_slots`` (one past the end) marking unused bucket rows — the
+    out-of-bounds scatter drops them (``mode="drop"``). Each admitted
+    row's beam is re-initialized from its routed seeds
+    (:func:`descent_init`) and its fingerprint is parked in the
+    device-resident ``q_words``/``q_card`` so subsequent hops never
+    re-upload per-slot query state.
+    """
+    trace.bump(("query_slot_admit", new_words.shape[0],
+                beam_ids.shape[0], beam))
+    init_ids, init_sims = descent_init(
+        words, card, new_words, new_card, new_seeds, beam=beam)
+    return (q_words.at[slot_idx].set(new_words, mode="drop"),
+            q_card.at[slot_idx].set(new_card, mode="drop"),
+            beam_ids.at[slot_idx].set(init_ids, mode="drop"),
+            beam_sims.at[slot_idx].set(init_sims, mode="drop"))
+
+
+@functools.partial(jax.jit, donate_argnames=("beam_ids", "beam_sims"))
+def slot_hop(graph_ids, rev_ids, words, card,
+             q_words, q_card, beam_ids, beam_sims, active):
+    """One continuous-batching tick over the fixed slot array.
+
+    All slot-axis inputs have the static capacity ``n_slots`` so one
+    program compiles per (n_slots, beam, index capacity) and is reused
+    for every tick regardless of how requests stream in (asserted by the
+    compile-count regression via ``sched.trace``). ``active`` rows take
+    one :func:`descent_step` hop; inactive rows pass through untouched
+    (their state is garbage the host ignores).
+
+    Returns (beam_ids, beam_sims, changed) where ``changed[i]`` is False
+    when row i's beam reached a fixed point this hop — since the hop is
+    a deterministic function of the beam, an unchanged beam can never
+    change again, so the host may complete the request early without
+    affecting its result (exact wave equivalence).
+    """
+    trace.bump(("query_slot_hop", beam_ids.shape[0], beam_ids.shape[1],
+                graph_ids.shape[0]))
+    nids, nsims = descent_step(graph_ids, rev_ids, words, card,
+                               q_words, q_card, beam_ids, beam_sims)
+    changed = jnp.any(nids != beam_ids, axis=1) & active
+    out_ids = jnp.where(active[:, None], nids, beam_ids)
+    out_sims = jnp.where(active[:, None], nsims, beam_sims)
+    return out_ids, out_sims, changed
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

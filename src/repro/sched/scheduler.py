@@ -1,0 +1,116 @@
+"""Slot-based continuous-batching scheduler shared by both serving engines.
+
+Wave batching (the pre-PR-3 discipline of ``query/engine.py`` and
+``serve/engine.py``) closes a batch before admitting new requests: one
+slow descent or one long decode stalls everything queued behind it. The
+fix mirrors what C² does at build time by pre-clustering — bound the
+cost any single straggler can impose. Here the bound comes from *slots*:
+the compiled program always runs at fixed capacity ``n_slots``, each
+slot carries one in-flight request, and a slot frees the moment its
+request completes (beam converged / hop budget exhausted on the query
+side; EOS / max_new on the LM side). Freed slots are refilled from the
+FIFO queue *mid-flight* — admission never waits for the rest of the
+batch.
+
+The scheduler itself is engine-agnostic host bookkeeping: it owns the
+pending FIFO, the slot → request assignment, and the active mask, and it
+enforces the invariants the property suite locks down
+(``tests/test_sched_properties.py``):
+
+* a slot is never double-assigned (``admit`` only hands out free slots);
+* admission is FIFO — requests enter slots in submission order;
+* every submitted request is admitted exactly once and released exactly
+  once (``n_submitted == n_completed`` when the scheduler drains);
+* the active mask equals the set of occupied slots at every step.
+
+Freed slots are reused lowest-index-first so admission is deterministic
+given the submit/complete interleaving — which is what makes the
+continuous-vs-wave equivalence tests exact rather than statistical.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Any, Optional
+
+import numpy as np
+
+
+class SlotScheduler:
+    """FIFO admission queue + fixed-capacity slot assignment."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self.pending: deque[Any] = deque()
+        self._occupant: list[Optional[Any]] = [None] * n_slots
+        self._free: list[int] = list(range(n_slots))  # min-heap
+        heapq.heapify(self._free)
+        self.n_submitted = 0
+        self.n_admitted = 0
+        self.n_completed = 0
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, item: Any):
+        """Enqueue a request; it enters a slot at a later ``admit``."""
+        self.pending.append(item)
+        self.n_submitted += 1
+
+    def admit(self) -> list[tuple[int, Any]]:
+        """Move queued requests into free slots (FIFO, lowest slot first).
+
+        Returns the ``(slot, item)`` pairs admitted this call — the
+        engine initializes per-slot device state for exactly these rows.
+        """
+        admitted: list[tuple[int, Any]] = []
+        while self.pending and self._free:
+            slot = heapq.heappop(self._free)
+            assert self._occupant[slot] is None, \
+                f"slot {slot} double-assignment"
+            item = self.pending.popleft()
+            self._occupant[slot] = item
+            self.n_admitted += 1
+            admitted.append((slot, item))
+        return admitted
+
+    def release(self, slot: int) -> Any:
+        """Free a slot whose request completed; returns the occupant."""
+        item = self._occupant[slot]
+        assert item is not None, f"release of free slot {slot}"
+        self._occupant[slot] = None
+        heapq.heappush(self._free, slot)
+        self.n_completed += 1
+        return item
+
+    # -- introspection -----------------------------------------------------
+
+    def occupant(self, slot: int) -> Optional[Any]:
+        return self._occupant[slot]
+
+    @property
+    def active_slots(self) -> list[int]:
+        return [s for s, it in enumerate(self._occupant) if it is not None]
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def active_mask(self) -> np.ndarray:
+        """bool[n_slots]: True where a request is in flight."""
+        return np.array([it is not None for it in self._occupant], dtype=bool)
+
+    def has_work(self) -> bool:
+        """True while anything is queued or in flight."""
+        return bool(self.pending) or self.n_active > 0
+
+    def check_invariants(self):
+        """Structural consistency (exercised by the property suite)."""
+        occupied = set(self.active_slots)
+        free = set(self._free)
+        assert occupied.isdisjoint(free), occupied & free
+        assert occupied | free == set(range(self.n_slots))
+        assert len(self._free) == len(free), "free-heap duplicate"
+        assert self.n_admitted == self.n_completed + self.n_active
+        assert self.n_submitted == self.n_admitted + len(self.pending)

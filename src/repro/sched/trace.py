@@ -1,0 +1,45 @@
+"""Jit-trace counters for compile-count regressions.
+
+A continuous-batching engine must compile its step program ONCE per
+static configuration and then reuse it for every tick, no matter how
+requests stream in — a silent retrace per admission would turn the
+latency win into a compile storm. The counter exploits that a jitted
+function's *Python body* runs only while JAX traces it: the engine calls
+:func:`bump` inside the traced body, so the count equals the number of
+traces (= compiles, modulo cache eviction) for that key.
+
+``tests/test_continuous.py`` asserts the count stays at 1 across
+arbitrary admission interleavings.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Hashable
+
+_TRACES: Counter = Counter()
+
+
+def bump(key: Hashable):
+    """Record one trace of the program identified by ``key``.
+
+    Call ONLY from inside a jit-traced function body.
+    """
+    _TRACES[key] += 1
+
+
+def count(key: Hashable) -> int:
+    """Traces recorded for ``key`` since process start (or last reset)."""
+    return _TRACES[key]
+
+
+def counts(prefix: str | None = None) -> dict:
+    """Snapshot of all counters, optionally filtered by key[0] == prefix."""
+    if prefix is None:
+        return dict(_TRACES)
+    return {k: v for k, v in _TRACES.items()
+            if isinstance(k, tuple) and k and k[0] == prefix}
+
+
+def reset():
+    """Clear all counters (test isolation)."""
+    _TRACES.clear()

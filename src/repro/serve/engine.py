@@ -1,18 +1,24 @@
-"""Batched serving engine: request queue → prefill waves → batched decode.
+"""Batched serving engine: request queue → prefill → batched decode, in
+*wave* mode (the original static batching) or *continuous* mode
+(slot-based streaming admission, ``ServeConfig.continuous``).
 
-A deliberately production-shaped (if compact) serving layer over
-serve/steps.py: requests arrive in a queue, are grouped into waves of up
-to ``max_batch`` equal-position sequences (left-padded prompts), prefetch
-one jitted prefill + one jitted decode step per (batch, alloc) shape, and
-stream tokens until EOS/max_new. Per-request latency and aggregate
-throughput are reported.
+Wave mode groups up to ``max_batch`` left-padded prompts, runs one jitted
+prefill + one jitted decode step per shape, and streams tokens until
+EOS/max_new — but a slot that hits EOS early sits idle (padding to wave
+end) until the whole wave closes, so one long decode stalls every
+request behind it.
 
-Design notes (honest scope): this is *static* (wave) batching — slots
-join only between waves. Continuous batching needs per-slot decode
-positions (cache ``pos`` per batch row); the cache schema supports the
-extension but the validated dry-run cells pin the current layout, so it
-is left as the documented next step. Straggler behavior inside a wave is
-bounded by max_new (the same capped-cost argument as the paper's N).
+Continuous mode shares the slot scheduler with the query engine
+(``repro/sched/``): a fixed array of ``slots`` decode rows advances one
+token per tick through ONE compiled decode program (per-row cache
+positions — ``models/layers.apply_attn``'s vector ``cur_index`` path);
+the moment a row emits EOS or exhausts its budget, the scheduler
+releases the slot, a queued request is prefilled (batch-1 program),
+its cache rows are scattered into the shared decode cache, and the slot
+rejoins the next tick mid-flight. The PR 1 per-row EOS early-exit thus
+actually *recycles* capacity into new decodes instead of padding.
+Straggler cost stays bounded by max_new (the same capped-cost argument
+as the paper's N).
 """
 from __future__ import annotations
 
@@ -27,6 +33,8 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.layers import ShardCtx
+from repro.models.model import init_cache
+from repro.sched import SlotScheduler, trace
 from repro.serve.steps import decode_step, prefill_step
 
 
@@ -46,12 +54,33 @@ class Request:
         return self.t_done - self.t_submit
 
 
+def _adopt_cache(cache, fresh, slot):
+    """Scatter a batch-1 prefill cache into row ``slot`` of the shared
+    continuous decode cache.
+
+    Leaves: [n_groups, slots, ...] ← [n_groups, 1, ...]; the attention
+    ``pos`` leaf has no batch axis in the prefill cache ([n_groups,
+    alloc]) and gains one here. ``slot`` is a traced scalar so one
+    compiled program serves every slot.
+    """
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    def upd(path, big, small):
+        if isinstance(path[-1], DictKey) and path[-1].key == "pos":
+            small = small[:, None, :]
+        return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
+
+    return tree_map_with_path(upd, cache, fresh)
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
     max_prompt: int = 128
     max_new: int = 64
     pad_id: int = 0
+    continuous: bool = False   # slot-based streaming admission (sched/)
+    slots: int = 0             # decode slots in continuous mode (0→max_batch)
 
 
 class Engine:
@@ -63,12 +92,22 @@ class Engine:
         self.ctx = ctx or ShardCtx()
         self.queue: deque[Request] = deque()
         self.done: list[Request] = []
+        self.n_decode_steps = 0   # decode program invocations (all modes)
+        self.n_prefills = 0       # prefill program invocations
         self._prefill = jax.jit(
             lambda p, t: prefill_step(
                 p, t, self.cfg, self.ctx,
                 s_alloc=sc.max_prompt + sc.max_new))
         self._decode = jax.jit(
             lambda p, c, t, i: decode_step(p, c, t, i, self.cfg, self.ctx))
+        n_slots = sc.slots or sc.max_batch
+
+        def _cont_decode(p, c, t, i):
+            trace.bump(("lm_cont_decode", n_slots))
+            return decode_step(p, c, t, i, self.cfg, self.ctx)
+
+        self._decode_cont = jax.jit(_cont_decode)
+        self._adopt = jax.jit(_adopt_cache, donate_argnums=(0,))
 
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()
@@ -89,6 +128,7 @@ class Engine:
         for j, r in enumerate(wave):  # left-pad so last position is real
             toks[j, S - len(r.prompt):] = r.prompt
         logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        self.n_prefills += 1
         tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         max_new = min(sc.max_new, max(r.max_new for r in wave))
         outs = [np.asarray(tok)[:, 0]]
@@ -102,12 +142,14 @@ class Engine:
             if row_done.all():
                 break
             logits, cache = self._decode(self.params, cache, tok, S + i)
+            self.n_decode_steps += 1
             tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
             outs.append(np.asarray(tok)[:, 0])
             row_done |= (outs[-1] == eos_ids) & (eos_ids >= 0)
             row_done |= max_per_row <= len(outs)
         gen = np.stack(outs, axis=1)  # [B, n_emitted]
         now = time.perf_counter()
+        n_real = 0
         for j, r in enumerate(wave):
             seq = gen[j, : r.max_new]
             if r.eos_id >= 0:
@@ -117,24 +159,133 @@ class Engine:
             r.output = seq
             r.t_done = now
             self.done.append(r)
-        return gen.size
+            n_real += len(seq)
+        # Count delivered tokens, not decode-grid cells: rows already done
+        # keep decoding as padding until the wave closes, and counting
+        # that padding would inflate wave tokens_per_s against the
+        # continuous mode (which never decodes padding).
+        return n_real
+
+    # -- continuous (slot) serving -----------------------------------------
+
+    def _continuous_cache(self, slots: int):
+        """A shared decode cache with PER-ROW positions: attention ``pos``
+        leaves widen from [n_groups, alloc] to [n_groups, slots, alloc] so
+        every slot carries its own timeline (vector ``cur_index`` path in
+        ``apply_attn``)."""
+        cache = init_cache(self.cfg, slots,
+                           self.sc.max_prompt + self.sc.max_new)
+        out = {}
+        for name, sub in cache.items():
+            if isinstance(sub, dict) and "pos" in sub:
+                sub = dict(sub)
+                G, alloc = sub["pos"].shape
+                sub["pos"] = jnp.broadcast_to(
+                    sub["pos"][:, None, :], (G, slots, alloc)).copy()
+            out[name] = sub
+        return out
+
+    def _run_continuous(self) -> tuple[int, int]:
+        """Slot-scheduled serving loop; returns (tokens, ticks).
+
+        One decode tick advances every occupied slot by one token. A slot
+        that finishes (EOS / max_new) is released and immediately
+        refilled from the queue: the new request is prefilled through the
+        batch-1 program and its cache rows scattered into the shared
+        decode cache (``_adopt_cache``) — admission never waits for the
+        other slots.
+        """
+        sc = self.sc
+        slots = sc.slots or sc.max_batch
+        sched = SlotScheduler(slots)
+        cache = self._continuous_cache(slots)
+        tok = np.zeros((slots, 1), np.int32)
+        pos = np.zeros(slots, np.int32)       # next decode index per slot
+        outs: list[list[int]] = [[] for _ in range(slots)]
+        n_tokens = 0
+        n_ticks = 0
+
+        def emit(slot: int, token: int) -> bool:
+            """Append one token; True when the slot's request is done."""
+            r = sched.occupant(slot)
+            outs[slot].append(token)
+            budget = min(r.max_new, sc.max_new)
+            return ((r.eos_id >= 0 and token == r.eos_id)
+                    or len(outs[slot]) >= budget)
+
+        def finish(slot: int):
+            nonlocal n_tokens
+            r = sched.release(slot)
+            budget = max(0, min(r.max_new, sc.max_new))
+            r.output = np.array(outs[slot][:budget], dtype=np.int32)
+            r.t_done = time.perf_counter()
+            n_tokens += len(outs[slot])
+            outs[slot] = []
+            self.done.append(r)
+
+        while self.queue or sched.has_work():
+            while self.queue:
+                sched.submit(self.queue.popleft())
+            # Admit until slots are full or the queue drains; a request
+            # whose first (prefill) token already completes it frees its
+            # slot for the next admission in the same tick.
+            while True:
+                admitted = sched.admit()
+                if not admitted:
+                    break
+                for slot, r in admitted:
+                    toks = np.full((1, sc.max_prompt), sc.pad_id, np.int32)
+                    toks[0, sc.max_prompt - len(r.prompt):] = r.prompt
+                    logits, c1 = self._prefill(self.params,
+                                               jnp.asarray(toks))
+                    self.n_prefills += 1
+                    cache = self._adopt(cache, c1, slot)
+                    first = int(np.asarray(
+                        jnp.argmax(logits[0, -1])).astype(np.int32))
+                    tok[slot, 0] = first
+                    pos[slot] = sc.max_prompt
+                    if emit(slot, first):
+                        finish(slot)
+            active = sched.active_mask()
+            if not active.any():
+                continue
+            logits, cache = self._decode_cont(
+                self.params, cache, jnp.asarray(tok), jnp.asarray(pos))
+            self.n_decode_steps += 1
+            n_ticks += 1
+            nxt = np.asarray(
+                jnp.argmax(logits[:, -1, :], axis=-1)).astype(np.int32)
+            tok = nxt[:, None].copy()
+            for slot in np.flatnonzero(active):
+                pos[slot] += 1
+                if emit(int(slot), int(nxt[slot])):
+                    finish(int(slot))
+        return n_tokens, n_ticks
 
     def run(self) -> dict:
         """Drain the queue; returns aggregate stats."""
         t0 = time.perf_counter()
+        n_done0 = len(self.done)
         n_tokens = 0
         n_waves = 0
-        while self.queue:
-            wave = self._next_wave()
-            n_tokens += self._run_wave(wave)
-            n_waves += 1
+        if self.sc.continuous:
+            n_tokens, n_waves = self._run_continuous()
+        else:
+            while self.queue:
+                wave = self._next_wave()
+                n_tokens += self._run_wave(wave)
+                n_waves += 1
         dt = max(time.perf_counter() - t0, 1e-9)
         lats = [r.latency for r in self.done]
         return {
             "requests": len(self.done),
+            "mode": "continuous" if self.sc.continuous else "wave",
             "waves": n_waves,
+            "completed": len(self.done) - n_done0,
             "tokens": int(n_tokens),
             "tokens_per_s": n_tokens / dt,
+            "decode_steps": self.n_decode_steps,
+            "prefills": self.n_prefills,
             "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
             "p95_latency_s": float(np.percentile(lats, 95)) if lats else 0.0,
         }

@@ -1,0 +1,412 @@
+"""Continuous-batching test battery (query + LM serving).
+
+Locks down the PR-3 scheduler: wave/continuous equivalence on both
+engines, compile-count regressions (one step program per static config,
+never retraced on admission), interleaved insert+query under streaming
+load, and LM slot recycling on skewed-length batches.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import build_index
+from repro.sched import trace
+from repro.types import PAD_ID
+
+K, BEAM, HOPS = 10, 16, 3
+
+
+@pytest.fixture(scope="module")
+def index():
+    ds = make_dataset("synth", scale=0.1, seed=3)
+    return build_index(ds, C2Params(k=10, b=64, t=8, max_cluster=48))
+
+
+@pytest.fixture(scope="module")
+def query_profiles():
+    qds = make_dataset("synth", scale=0.1, seed=77)
+    return [qds.profile(u) for u in range(48)]
+
+
+def _submit_all(engine, profiles):
+    for rid, p in enumerate(profiles):
+        engine.submit(QueryRequest(rid=rid, profile=p))
+
+
+def _by_rid(engine):
+    return {r.rid: (r.ids, r.sims) for r in engine.done}
+
+
+# -- continuous vs wave equivalence (query side) ---------------------------
+
+def test_query_continuous_matches_wave_exactly(index, query_profiles):
+    """Identical query sets produce identical (ids, sims) per request —
+    streaming admission must not change a single result."""
+    wave = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          max_wave=64))
+    _submit_all(wave, query_profiles)
+    ws = wave.run()
+
+    # slots < n_queries forces several admission generations mid-flight.
+    cont = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          continuous=True, slots=7))
+    _submit_all(cont, query_profiles)
+    cs = cont.run()
+
+    assert ws["requests"] == cs["requests"] == len(query_profiles)
+    assert cs["mode"] == "continuous"
+    # Recycling happened: more ticks than a single full-wave pass, fewer
+    # than one per request (slots advance in parallel).
+    assert cs["waves"] > HOPS
+    w, c = _by_rid(wave), _by_rid(cont)
+    assert set(w) == set(c)
+    for rid in w:
+        np.testing.assert_array_equal(w[rid][0], c[rid][0],
+                                      err_msg=f"ids rid={rid}")
+        np.testing.assert_array_equal(w[rid][1], c[rid][1],
+                                      err_msg=f"sims rid={rid}")
+
+
+def test_query_continuous_streaming_submission(index, query_profiles):
+    """Requests submitted *while* the scheduler runs (between ticks) are
+    admitted into freed slots and produce wave-identical results."""
+    wave = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          max_wave=64))
+    _submit_all(wave, query_profiles)
+    wave.run()
+
+    cont = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          continuous=True, slots=5))
+    pending = list(enumerate(query_profiles))
+
+    def drip(engine, tick):
+        # Two new arrivals per tick — admission interleaves with descent.
+        for rid, p in pending[:2]:
+            engine.submit(QueryRequest(rid=rid, profile=p))
+        del pending[:2]
+
+    cont.submit(QueryRequest(rid=pending[0][0], profile=pending[0][1]))
+    del pending[0]
+    cont.run(on_tick=drip)
+    assert not pending
+    w, c = _by_rid(wave), _by_rid(cont)
+    assert set(w) == set(c)
+    for rid in w:
+        np.testing.assert_array_equal(w[rid][0], c[rid][0])
+        np.testing.assert_array_equal(w[rid][1], c[rid][1])
+
+
+def test_query_continuous_per_request_hop_budgets(index, query_profiles):
+    """Mixed hop budgets: continuous serves each request at ITS budget —
+    request results match a uniform wave run at that same budget exactly
+    (wave mode would convoy the whole wave to the deepest member)."""
+    deep = 2 * HOPS
+    ref = {}
+    for hops in (0, HOPS, deep):  # 0 = seed-only lookup, no hop
+        eng = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=hops,
+                                             max_wave=64))
+        _submit_all(eng, query_profiles)
+        eng.run()
+        ref[hops] = _by_rid(eng)
+
+    cont = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          continuous=True, slots=6))
+    budgets = [deep if rid % 3 == 0 else (0 if rid % 5 == 0 else HOPS)
+               for rid in range(len(query_profiles))]
+    for rid, p in enumerate(query_profiles):
+        cont.submit(QueryRequest(rid=rid, profile=p, hops=budgets[rid]))
+    cont.run()
+    assert len(cont.done) == len(query_profiles)
+    for r in cont.done:
+        want_ids, want_sims = ref[budgets[r.rid]][r.rid]
+        np.testing.assert_array_equal(r.ids, want_ids,
+                                      err_msg=f"rid={r.rid}")
+        np.testing.assert_array_equal(r.sims, want_sims,
+                                      err_msg=f"rid={r.rid}")
+
+
+# -- compile-count regression ----------------------------------------------
+
+def test_query_slot_step_compiles_once_across_admissions(index,
+                                                         query_profiles):
+    """One step program per (slots, beam, index capacity); admission
+    interleavings never retrace it."""
+    qc = QueryConfig(k=K, beam=BEAM, hops=HOPS, continuous=True, slots=6)
+    engine = QueryEngine(index, qc)
+    beam = max(qc.beam, qc.k)
+
+    def count(prefix, slot_pos, want):
+        return sum(v for k, v in trace.counts(prefix).items()
+                   if k[slot_pos] == want)
+
+    def hops():   # step program traces for this (slots, beam)
+        return count("query_slot_hop", 1, 6)
+
+    def admits():  # admission program traces for this slot capacity
+        return count("query_slot_admit", 2, 6)
+
+    base_h, base_a = hops(), admits()
+    # First run may compile the programs — at most once each (another
+    # test in this process may already have warmed the jit cache).
+    _submit_all(engine, query_profiles[:9])
+    engine.run()
+    after_h, after_a = hops(), admits()
+    assert after_h <= base_h + 1
+    assert after_a <= base_a + 1
+    # Different queue shapes / admission orders / one-at-a-time streams.
+    _submit_all(engine, query_profiles[9:20])
+    engine.run()
+    for p in query_profiles[20:27]:
+        engine.submit(QueryRequest(rid=99, profile=p))
+        engine.run()
+    # No retrace on any admission pattern — neither the per-tick hop
+    # program nor the bucketed admission program.
+    assert (hops(), admits()) == (after_h, after_a)
+    assert after_h >= 1 and after_a >= 1  # the counters are really wired
+
+
+def test_lm_decode_compiles_once_across_admissions():
+    from repro.configs import get_config
+    from repro.models.config import scaled_down
+    from repro.models.model import init_params
+    from repro.serve.engine import Engine, Request, ServeConfig
+
+    cfg = scaled_down(get_config("gemma-2b"))
+    params = init_params(jax.random.key(0), cfg)
+    eng = Engine(params, cfg, ServeConfig(max_batch=2, max_prompt=8,
+                                          max_new=6, continuous=True,
+                                          slots=2))
+    rng = np.random.default_rng(0)
+
+    def serve(n, max_new):
+        for rid in range(n):
+            eng.submit(Request(
+                rid=rid, prompt=rng.integers(0, 50, 5).astype(np.int32),
+                max_new=max_new))
+        eng.run()
+
+    base = trace.count(("lm_cont_decode", 2))
+    serve(3, 4)
+    assert trace.count(("lm_cont_decode", 2)) == base + 1
+    serve(5, 3)   # different queue length + budgets: same program
+    serve(1, 6)
+    assert trace.count(("lm_cont_decode", 2)) == base + 1
+
+
+# -- scheduler-level behavior through the engine ---------------------------
+
+def test_continuous_slot_recycling_and_fifo(index, query_profiles):
+    """Slots free mid-stream and are reused; completion covers every
+    request exactly once."""
+    cont = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          continuous=True, slots=3))
+    _submit_all(cont, query_profiles[:11])
+    stats = cont.run()
+    assert stats["requests"] == 11
+    sched = cont._cont.sched
+    sched.check_invariants()
+    assert sched.n_submitted == sched.n_admitted == sched.n_completed == 11
+    assert not sched.has_work()
+    rids = sorted(r.rid for r in cont.done)
+    assert rids == list(range(11))  # exactly once each
+
+
+def test_continuous_rejects_sharded_config(index):
+    with pytest.raises(ValueError):
+        QueryEngine(index, QueryConfig(continuous=True, shards=2))
+
+
+# -- interleaved insert + query under continuous load ----------------------
+
+def test_interleaved_insert_under_continuous_load(index, query_profiles):
+    """Cohort refresh mid-stream keeps reverse-adjacency consistency and
+    recall within tolerance of the drain-then-insert baseline."""
+    ins_ds = make_dataset("synth", scale=0.1, seed=99)
+    n_ins = 12
+
+    # Baseline: drain all queries first (wave), then insert.
+    ix_base = copy.deepcopy(index)
+    base = QueryEngine(ix_base, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                            max_wave=64, refresh_every=6))
+    _submit_all(base, query_profiles)
+    base.run()
+    base_recall = base.recall_vs_brute_force()
+    for m in range(n_ins):
+        base.insert(ins_ds.profile(m))
+
+    # Continuous: inserts (and the cohort refreshes they trigger) land
+    # between ticks while queries are in flight.
+    ix_cont = copy.deepcopy(index)
+    cont = QueryEngine(ix_cont, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                            continuous=True, slots=5,
+                                            refresh_every=6))
+    inserted = []
+
+    def check_adjacency(u):
+        # Reverse-adjacency consistency right after the insert (later
+        # inserts may displace entries of BOUNDED reverse lists, so the
+        # mirror property is an at-insert-time invariant): u→v must be
+        # mirrored in rev(v), and every w∈rev(u) must really edge to u.
+        fwd = ix_cont.graph_ids[u]
+        for v in fwd[fwd != PAD_ID]:
+            assert u in ix_cont.rev_ids[int(v)], (u, int(v))
+        rev = ix_cont.rev_ids[u]
+        for w in rev[rev != PAD_ID]:
+            assert u in ix_cont.graph_ids[int(w)], (u, int(w))
+
+    def insert_some(engine, tick):
+        if tick % 2 == 0 and len(inserted) < n_ins:
+            u = engine.insert(ins_ds.profile(len(inserted)))
+            inserted.append(u)
+            check_adjacency(u)
+
+    _submit_all(cont, query_profiles)
+    stats = cont.run(on_tick=insert_some)
+    while len(inserted) < n_ins:
+        u = cont.insert(ins_ds.profile(len(inserted)))
+        inserted.append(u)
+        check_adjacency(u)
+    assert stats["requests"] == len(query_profiles)
+    assert cont.n_refreshes >= 1  # the cohort refresh fired mid-stream
+
+    # Index state matches the baseline structurally...
+    assert ix_cont.n == ix_base.n
+    assert len(ix_cont.cluster_offsets) == ix_cont.n_clusters + 1
+    assert ix_cont.cluster_offsets[-1] == len(ix_cont.cluster_members)
+    # ...and serving quality stays within tolerance of drain-then-insert
+    # (results before/after a mid-stream mutation may differ; quality
+    # must not).
+    cont_recall = cont.recall_vs_brute_force()
+    assert cont_recall >= base_recall - 0.02, (cont_recall, base_recall)
+
+
+# -- Poisson open-loop bench (bench-adjacent → slow marker) ----------------
+
+@pytest.mark.slow
+def test_poisson_open_loop_bench_smoke(index, query_profiles):
+    """The query_bench open-loop driver completes a mixed-budget Poisson
+    run in both modes with recall parity (latency itself is asserted by
+    the committed BENCH_query.json, not CI timing)."""
+    import importlib.util
+    from pathlib import Path
+
+    bench = Path(__file__).resolve().parent.parent / "benchmarks"
+    spec = importlib.util.spec_from_file_location(
+        "query_bench", bench / "query_bench.py")
+    qb = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(qb)
+
+    rec = qb.run_continuous(index, query_profiles, k=K, beam=BEAM,
+                            hops=HOPS, slots=5, load=0.7, seed=0)
+    ol = rec["open_loop"]
+    assert ol["wave"]["p95_latency_ms"] > 0
+    assert ol["continuous"]["p95_latency_ms"] > 0
+    # Both modes completed the full run at the same offered load.
+    assert ol["wave"]["rate_qps"] == ol["continuous"]["rate_qps"]
+    assert abs(rec["open_loop_recall"]["delta"]) <= 0.005
+    # Closed-loop continuous rows match wave recall exactly (identical
+    # descent → identical results).
+    warm = rec["closed_loop"]["warm"]
+    assert warm[f"recall_at_{K}"] > 0.8
+
+
+# -- LM side: equivalence + EOS slot recycling -----------------------------
+
+@pytest.fixture(scope="module")
+def lm():
+    from repro.configs import get_config
+    from repro.models.config import scaled_down
+    from repro.models.model import init_params
+
+    cfg = scaled_down(get_config("gemma-2b"))
+    params = init_params(jax.random.key(0), cfg)
+    return params, cfg
+
+
+def _lm_engines(lm, **kw):
+    from repro.serve.engine import Engine, ServeConfig
+
+    params, cfg = lm
+    return Engine(params, cfg, ServeConfig(**kw))
+
+
+def test_lm_continuous_matches_wave_token_streams(lm):
+    """Identical token streams per request, wave vs continuous, including
+    left-padded prompts of different lengths and per-request budgets."""
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, 200, int(n)).astype(np.int32), int(mn))
+            for n, mn in zip(rng.integers(3, 12, 7), [9, 2, 5, 1, 7, 3, 2])]
+
+    wave = _lm_engines(lm, max_batch=3, max_prompt=12, max_new=10)
+    for rid, (p, mn) in enumerate(reqs):
+        wave.submit(Request(rid=rid, prompt=p, max_new=mn))
+    ws = wave.run()
+
+    cont = _lm_engines(lm, max_batch=3, max_prompt=12, max_new=10,
+                       continuous=True, slots=3)
+    for rid, (p, mn) in enumerate(reqs):
+        cont.submit(Request(rid=rid, prompt=p, max_new=mn))
+    cs = cont.run()
+
+    assert ws["requests"] == cs["requests"] == len(reqs)
+    w = {r.rid: r.output for r in wave.done}
+    c = {r.rid: r.output for r in cont.done}
+    for rid in w:
+        np.testing.assert_array_equal(w[rid], c[rid], err_msg=f"rid={rid}")
+
+
+def test_lm_eos_recycles_slots_into_new_decodes(lm):
+    """On a skewed-length batch, EOS'd slots admit queued requests
+    mid-flight: continuous finishes the same work in fewer decode steps
+    (higher requests-per-step throughput) with identical outputs."""
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 200, 6).astype(np.int32) for _ in range(6)]
+    # Learn each prompt's first greedy token, then use it as the EOS for
+    # the "short" requests — they terminate via EOS, not via max_new.
+    probe = _lm_engines(lm, max_batch=2, max_prompt=8, max_new=14)
+    for rid, p in enumerate(prompts):
+        probe.submit(Request(rid=rid, prompt=p, max_new=1))
+    probe.run()
+    first_tok = {r.rid: int(r.output[0]) for r in probe.done}
+
+    def build(rid, p):
+        # Requests 0 and 3 run long; the rest stop at their first token
+        # via EOS — the skew that makes wave batching pad to wave end.
+        if rid in (0, 3):
+            return Request(rid=rid, prompt=p, max_new=12)
+        return Request(rid=rid, prompt=p, max_new=12,
+                       eos_id=first_tok[rid])
+
+    wave = _lm_engines(lm, max_batch=2, max_prompt=8, max_new=14)
+    for rid, p in enumerate(prompts):
+        wave.submit(build(rid, p))
+    ws = wave.run()
+
+    cont = _lm_engines(lm, max_batch=2, max_prompt=8, max_new=14,
+                       continuous=True, slots=2)
+    for rid, p in enumerate(prompts):
+        cont.submit(build(rid, p))
+    cs = cont.run()
+
+    w = {r.rid: r.output for r in wave.done}
+    c = {r.rid: r.output for r in cont.done}
+    for rid in w:
+        np.testing.assert_array_equal(w[rid], c[rid], err_msg=f"rid={rid}")
+    for rid in range(6):
+        if rid not in (0, 3):
+            assert len(c[rid]) == 1  # EOS fired on the first token
+    # Slot recycling is the throughput win: strictly fewer decode steps
+    # for the same completed work.
+    assert cs["decode_steps"] < ws["decode_steps"], (cs, ws)
+    tput_c = cs["requests"] / max(cs["decode_steps"], 1)
+    tput_w = ws["requests"] / max(ws["decode_steps"], 1)
+    assert tput_c > tput_w

@@ -1,0 +1,110 @@
+"""Property-based tests for the slot scheduler (hypothesis).
+
+Random admit/finish interleavings against ``repro.sched.SlotScheduler``:
+no slot double-assignment, FIFO admission order, exactly-once
+completion, and active-mask/free-list consistency at every step.
+
+Skipped (not failed) when hypothesis isn't installed — same guard as
+tests/test_properties.py.
+"""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.sched import SlotScheduler  # noqa: E402
+
+# An interleaving script: each entry is ("submit",) or ("release", j) —
+# release the j-th currently-active slot (mod n_active).
+_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit")),
+        st.tuples(st.just("release"), st.integers(0, 63)),
+    ),
+    min_size=1, max_size=120,
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(n_slots=st.integers(1, 9), ops=_ops, admit_every=st.integers(1, 4))
+def test_scheduler_invariants_under_random_interleavings(n_slots, ops,
+                                                         admit_every):
+    sched = SlotScheduler(n_slots)
+    next_id = 0
+    admitted_order: list[int] = []
+    completed: list[int] = []
+    slot_of: dict[int, int] = {}
+
+    for step, op in enumerate(ops):
+        if op[0] == "submit":
+            sched.submit(next_id)
+            next_id += 1
+        else:
+            active = sched.active_slots
+            if active:
+                slot = active[op[1] % len(active)]
+                item = sched.release(slot)
+                completed.append(item)
+                assert slot_of.pop(item) == slot
+        if step % admit_every == 0:
+            for slot, item in sched.admit():
+                # No double assignment: the slot was free.
+                assert all(s != slot for s in slot_of.values())
+                slot_of[item] = slot
+                admitted_order.append(item)
+        sched.check_invariants()
+
+    # Drain: admit + release everything still pending/active.
+    while sched.has_work():
+        for slot, item in sched.admit():
+            assert all(s != slot for s in slot_of.values())
+            slot_of[item] = slot
+            admitted_order.append(item)
+        for slot in list(sched.active_slots):
+            item = sched.release(slot)
+            completed.append(item)
+            assert slot_of.pop(item) == slot
+        sched.check_invariants()
+
+    # FIFO admission: requests entered slots in submission order.
+    assert admitted_order == sorted(admitted_order)
+    # Every submitted request completed exactly once.
+    assert sorted(completed) == list(range(next_id))
+    assert sched.n_submitted == sched.n_completed == next_id
+
+
+@settings(max_examples=100, deadline=None)
+@given(n_slots=st.integers(1, 8), n_reqs=st.integers(0, 40))
+def test_scheduler_active_mask_matches_occupancy(n_slots, n_reqs):
+    sched = SlotScheduler(n_slots)
+    for i in range(n_reqs):
+        sched.submit(i)
+    seen = 0
+    while sched.has_work():
+        admitted = sched.admit()
+        mask = sched.active_mask()
+        assert mask.sum() == sched.n_active == min(n_slots,
+                                                   n_reqs - seen)
+        for slot, _ in admitted:
+            assert mask[slot]
+        # Lowest-index-first reuse: the active slots are a prefix when
+        # everything was admitted in one go.
+        assert np.array_equal(np.flatnonzero(mask),
+                              np.arange(mask.sum()))
+        for slot in list(sched.active_slots):
+            sched.release(slot)
+            seen += 1
+        sched.check_invariants()
+    assert seen == n_reqs
+
+
+def test_scheduler_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        SlotScheduler(0)
+
+
+def test_release_of_free_slot_asserts():
+    sched = SlotScheduler(2)
+    with pytest.raises(AssertionError):
+        sched.release(0)
