@@ -1,10 +1,27 @@
-"""Kernel micro-benchmarks: the three GoldFinger-similarity paths on an
-all-pairs KNN tile (CPU wall time; the Pallas path runs in interpret mode
-here — its TPU performance is characterized structurally in §Roofline,
-this table establishes correctness-path overheads and the popcount-vs-MXU
-layout tradeoff on real data)."""
+"""Kernel micro-benchmarks (CPU wall time; Pallas paths run in interpret
+mode here — their TPU performance is characterized structurally in
+§Roofline, these tables establish correctness-path overheads and the
+popcount-vs-MXU layout tradeoff on real data).
+
+Two sections:
+
+* **all-pairs** — the three GoldFinger-similarity paths on a KNN tile
+  (jnp popcount ref, jnp MXU bit-plane, fused goldfinger_knn kernel).
+* **descent** — the serving hot path, per beam width: the unfused jnp
+  hop (score every ``beam·(kg+kr)`` lane, dedup after, wide top-k) vs
+  the fused descent_score kernel, with the kernel's scored-lane counts
+  showing how much estimator work dedup-before-scoring removes.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke]
+
+``--smoke`` shrinks both sections for CI and fails loudly (exit 1) if
+the fused descent hop drifts from the jnp oracle by a single bit or
+stops reducing scored work.
+"""
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
@@ -61,5 +78,87 @@ def run(n: int = 1024, k: int = 10):
     return emit(rows, "kernel_bench")
 
 
-if __name__ == "__main__":
+def run_descent(scale: float = 0.1, n_queries: int = 128,
+                beams=(8, 16, 32), k: int = 10, seed: int = 5):
+    """Descent-hop rows: jnp vs fused per beam width + scored-lane stats.
+
+    Returns the rows; raises AssertionError on any jnp/fused bit drift
+    (the smoke gate turns that into a CI failure).
+    """
+    from repro.core.params import params_for
+    from repro.kernels.descent_score import ops as ds_ops
+    from repro.kernels.descent_score import ref as ds_ref
+    from repro.query.index import build_index
+    from repro.query.router import routed_queries
+    from repro.query.search import descent_init
+
+    ds = make_dataset("synth", scale=scale, seed=seed)
+    index = build_index(ds, params_for("synth", k=k,
+                                       b=max(64, ds.n_users // 16),
+                                       max_cluster=max(48,
+                                                       int(0.06 * ds.n_users))))
+    qds = make_dataset("synth", scale=scale, seed=seed + 1)
+    profiles = [qds.profile(u) for u in range(min(n_queries, qds.n_users))]
+    qw, qc, seeds = (jnp.asarray(x)
+                     for x in routed_queries(index, profiles, 16))
+    g, r = jnp.asarray(index.graph_ids), jnp.asarray(index.rev_ids)
+    w, c = jnp.asarray(index.words), jnp.asarray(index.card)
+    kg, kr = g.shape[1], r.shape[1]
+
+    jnp_hop = jax.jit(ds_ref.descent_hop_ref)
+    rows = []
+    for beam in beams:
+        bi, bs = descent_init(w, c, qw, qc, seeds, beam=beam)
+        bi, bs = jax.block_until_ready((bi, bs))
+        t_jnp = _time(jnp_hop, g, r, w, c, qw, qc, bi, bs)
+        t_pal = _time(lambda *a: ds_ops.descent_hop(*a),
+                      g, r, w, c, qw, qc, bi, bs)
+        ri, rs = jnp_hop(g, r, w, c, qw, qc, bi, bs)
+        ki, ks, nsc = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
+                                         with_counts=True)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+        total = beam * (kg + kr)
+        scored = float(np.asarray(nsc).mean())
+        rows.append({
+            "beam": beam, "n": index.n, "n_queries": len(profiles),
+            "candidates_per_hop": total,
+            "scored_per_hop_mean": round(scored, 1),
+            "scored_fraction": round(scored / total, 3),
+            "jnp_hop_ms": round(t_jnp * 1e3, 2),
+            "fused_interpret_ms": round(t_pal * 1e3, 2),
+        })
+    for row in rows:
+        print(f"[descent] beam={row['beam']:3d}: scored "
+              f"{row['scored_per_hop_mean']:7.1f}/{row['candidates_per_hop']}"
+              f" lanes ({row['scored_fraction']:.0%}) | jnp "
+              f"{row['jnp_hop_ms']:.1f} ms, fused(interpret) "
+              f"{row['fused_interpret_ms']:.1f} ms")
+    return emit(rows, "kernel_bench_descent")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run; exit 1 on fused-hop drift")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n=256)
+        try:
+            rows = run_descent(scale=0.05, n_queries=48, beams=(8, 16))
+        except AssertionError as e:
+            print(f"[kernel_bench] FAIL fused descent hop drifted from "
+                  f"the jnp oracle: {e}", file=sys.stderr)
+            sys.exit(1)
+        if not all(row["scored_fraction"] < 1.0 for row in rows):
+            print("[kernel_bench] FAIL dedup-before-scoring removed no "
+                  "work", file=sys.stderr)
+            sys.exit(1)
+        print("[kernel_bench] smoke OK")
+        return
     run()
+    run_descent()
+
+
+if __name__ == "__main__":
+    main()

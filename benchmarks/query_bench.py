@@ -1,6 +1,9 @@
 """Query-serving benchmark: QPS, latency percentiles, recall@k vs brute
 force, for cold (compile included) and warm waves, in single-device and
-sharded modes, plus online-insert throughput.
+sharded modes — each also through the fused Pallas descent-scoring
+kernel (``*_kernel`` rows + a ``descent_scoring`` block reporting
+scored-lane counts per hop vs the unfused ``beam·(kg+kr)``) — plus
+online-insert throughput.
 
     PYTHONPATH=src python benchmarks/query_bench.py [--dataset synth]
         [--scale 0.2] [--queries 256] [--shards 2] [--out BENCH_query.json]
@@ -225,6 +228,36 @@ def run_continuous(index, profiles, k: int, beam: int, hops: int,
     }
 
 
+def descent_scoring_stats(index, profiles, k: int, beam: int, hops: int,
+                          seeds_per_config: int = 16) -> dict:
+    """Per-hop scored-candidate counts through the fused kernel on the
+    same routed wave the serving rows answer: how many estimator lanes
+    survive dedup-before-scoring vs the unfused ``beam·(kg+kr)``."""
+    import jax.numpy as jnp
+
+    from repro.kernels.descent_score import ops as ds_ops
+    from repro.query.router import routed_queries
+    from repro.query.search import descent_init
+
+    qw, qc, seeds = (jnp.asarray(x) for x in
+                     routed_queries(index, profiles, seeds_per_config))
+    g, r = jnp.asarray(index.graph_ids), jnp.asarray(index.rev_ids)
+    w, c = jnp.asarray(index.words), jnp.asarray(index.card)
+    beam = max(beam, k)
+    bi, bs = descent_init(w, c, qw, qc, seeds, beam=beam)
+    per_hop = []
+    for _ in range(hops):
+        bi, bs, nsc = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
+                                         with_counts=True)
+        per_hop.append(float(np.asarray(nsc).mean()))
+    total = beam * (g.shape[1] + r.shape[1])
+    return {
+        "candidates_per_hop": total,
+        "scored_per_hop_mean": [round(x, 1) for x in per_hop],
+        "scored_fraction": round(float(np.mean(per_hop)) / total, 3),
+    }
+
+
 def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         k: int = 10, beam: int = 32, hops: int = 3, seed: int = 0,
         shards: int = 2, oversample: float = 1.25,
@@ -249,10 +282,21 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
                                              max_wave=n_queries,
                                              shards=shards,
                                              shard_oversample=oversample))
+    # Fused descent-scoring kernel rows, same index and query set — the
+    # acceptance bar is recall parity to ±0.000 (the kernel is bitwise
+    # transparent), so these rows isolate pure serving-path overheads.
+    single_kernel = QueryEngine(index, QueryConfig(
+        k=k, beam=beam, hops=hops, max_wave=n_queries, kernel=True))
+    sharded_kernel = QueryEngine(index, QueryConfig(
+        k=k, beam=beam, hops=hops, max_wave=n_queries, shards=shards,
+        shard_oversample=oversample, kernel=True))
     modes = {
         "single": _serve_waves(single, profiles, k),
         f"sharded_{shards}": _serve_waves(sharded, profiles, k),
+        "single_kernel": _serve_waves(single_kernel, profiles, k),
+        f"sharded_{shards}_kernel": _serve_waves(sharded_kernel, profiles, k),
     }
+    scoring = descent_scoring_stats(index, profiles, k, beam, hops)
     sd = sharded.sharded_state()
     sharded_exec = "mesh" if sd is not None and sd.mesh is not None else "vmap"
 
@@ -291,6 +335,15 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         "inserts_per_s": round(n_ins / max(t_ins, 1e-9), 1),
         "cohort_refreshes": single.n_refreshes,
         "index_capacity": index.capacity,
+        "descent_scoring": scoring,
+        "kernel_vs_jnp": {
+            "recall_delta": round(
+                modes["single_kernel"]["warm"][f"recall_at_{k}"]
+                - modes["single"]["warm"][f"recall_at_{k}"], 4),
+            "sharded_recall_delta": round(
+                modes[f"sharded_{shards}_kernel"]["warm"][f"recall_at_{k}"]
+                - modes[f"sharded_{shards}"]["warm"][f"recall_at_{k}"], 4),
+        },
         "sharded_vs_single": {
             "qps_ratio": round(sh["qps"] / max(sg["qps"], 1e-9), 3),
             "recall_delta": round(sh[f"recall_at_{k}"]
@@ -344,6 +397,21 @@ def main():
             sys.exit(1)
         print(f"[query_bench] smoke OK: qps_ratio={ratio} "
               f"recall_delta={delta}")
+        # The fused kernel is bitwise transparent: recall must match the
+        # jnp rows EXACTLY (±0.000), and dedup-before-scoring must have
+        # removed estimator work.
+        kd = rec["kernel_vs_jnp"]
+        frac = rec["descent_scoring"]["scored_fraction"]
+        if kd["recall_delta"] != 0.0 or kd["sharded_recall_delta"] != 0.0:
+            print(f"[query_bench] FAIL kernel recall drift: {kd}",
+                  file=sys.stderr)
+            sys.exit(1)
+        if not frac < 1.0:
+            print(f"[query_bench] FAIL kernel scored no fewer lanes: "
+                  f"{rec['descent_scoring']}", file=sys.stderr)
+            sys.exit(1)
+        print(f"[query_bench] kernel smoke OK: recall_delta=0.0 "
+              f"scored_fraction={frac}")
         if args.continuous:
             # Streaming admission must keep result quality: recall parity
             # with waves (identical descent ⇒ tight margin even on noisy

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.clustering import ClusterPlan
 from repro.core.params import C2Params
-from repro.sketch.goldfinger import GoldFinger, jaccard_pairwise
+from repro.sketch.goldfinger import GoldFinger, jaccard_pairwise_auto
 from repro.types import NEG_INF, PAD_ID
 
 
@@ -40,7 +40,10 @@ def _group_knn(words, card, member_ids, k: int):
     """
 
     def one_cluster(w, c, ids):
-        sims = jaccard_pairwise(w, c, w, c)  # [cap, cap]
+        # Width-dispatched estimator: VPU popcount for GoldFinger-width
+        # sketches, MXU bit-plane matmul for raw-incidence widths —
+        # identical results, different compute layout.
+        sims = jaccard_pairwise_auto(w, c, w, c)  # [cap, cap]
         valid = ids != PAD_ID
         cap = ids.shape[0]
         eye = jnp.eye(cap, dtype=bool)

@@ -4,6 +4,9 @@
 #                    (Step 2's similarity computations: the paper's
 #                    dominant cost, "most of the total computation time").
 # frh_minhash/     — fused multi-seed FastRandomHash min-reduce (Step 1).
+# descent_score/   — fused serving hop (query hot path): beam adjacency
+#                    gather + dedup-before-scoring + GoldFinger
+#                    estimator + in-register top-k merge.
 #
 # Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 # wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in

@@ -1,0 +1,1 @@
+from repro.kernels.descent_score import ops, ref  # noqa: F401

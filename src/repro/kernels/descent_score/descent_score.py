@@ -1,0 +1,193 @@
+"""Fused descent-hop (gather → suppress → score → merge) — Pallas TPU kernel.
+
+Serving's hot loop (``query/search.descent_step``) was an unfused chain:
+two adjacency gathers materialize a ``[q, beam·(kg+kr)]`` candidate
+tensor in HBM, the GoldFinger estimator scores *every* lane, a
+double-argsort ``dedup_mask`` then throws most of those scores away, and
+a wide ``lax.top_k`` re-sorts the lot. The friend-of-a-friend expansion
+is heavily duplicated — most popcounts re-score candidates already in
+the beam ("A Note on Graph-Based Nearest Neighbor Search": distance
+evaluations on revisited candidates dominate graph-search cost). This
+kernel does one hop per query-tile entirely in VMEM:
+
+* **Gather (a):** forward + reverse neighbor ids of the current beam —
+  ids only (``[bq, beam·(kg+kr)]`` int32); fingerprints are fetched per
+  score chunk, so the full candidate-fingerprint tensor never exists.
+* **Suppress before scoring (b):** PAD lanes, lanes under PAD beam rows,
+  and lanes already in the beam are retired in-tile *before* the
+  estimator runs. Suppressed lanes have their gather index zeroed (no
+  stray HBM row touch) and are excluded from the scored-lane count the
+  kernel reports (``n_scored``), which quantifies the dedup win per hop
+  against the unfused ``beam·(kg+kr)``.
+* **Score (c):** GoldFinger AND-popcount on the VPU in candidate chunks;
+  for wide sketches (raw-incidence mode) an int8 bit-plane variant
+  (``unpack_bits_int8``) turns the intersection into an MXU
+  ``dot_general`` — tile-dense: the chunk's candidates score against the
+  whole query tile in one matmul and the matching diagonal is kept
+  (redundant flops on the systolic array beat per-lane popcount loops
+  once W is thousands of words).
+* **Merge (d):** in-register top-``beam`` via
+  :func:`repro.knn.topk.select_topk` with winner-id retirement over
+  ``[beam | fwd | rev]`` in the reference column order. Retiring every
+  lane of a round's winning id also resolves duplicates *between*
+  candidate lanes exactly like ``dedup_mask`` + ``lax.top_k`` would:
+  duplicate lanes of an id carry identical sims, so the selected column
+  is always the id's first occurrence.
+
+Results are bitwise identical to ``ref.descent_hop_ref`` (the historical
+jnp path): same ids, same sims, same tie-breaks — asserted across PAD
+patterns and beam widths by ``tests/test_descent_kernel.py``. One
+precondition, which every real beam satisfies by construction (beams are
+``merge_topk``/``select_topk`` outputs): a beam row never repeats an id.
+A repeated beam id at two different sims would be ranked at its *first*
+lane by the reference's dedup and at its *max* lane here.
+
+The index arrays ride in whole (index_map pins block 0): the descent
+touches the fingerprint table essentially at random anyway, and at this
+repo's serving capacities it fits VMEM (n·W·4 bytes ≈ 0.2 MB at
+n=1600, W=32). A >VMEM-scale deployment would switch them to HBM
+refs with per-chunk DMA of the gathered rows — the chunked scoring loop
+is already shaped for that split.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.knn.topk import select_topk
+from repro.sketch.goldfinger import unpack_bits_int8
+from repro.types import NEG_INF, PAD_ID
+
+
+def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref,
+                qw_ref, qc_ref, bi_ref, bs_ref,
+                out_ids_ref, out_sims_ref, nsc_ref,
+                *, chunk: int, mxu: bool):
+    beam_ids = bi_ref[...]                              # [bq, B] i32
+    beam_sims = bs_ref[...]                             # [bq, B] f32
+    bq, B = beam_ids.shape
+    kg = graph_ref.shape[1]
+    kr = rev_ref.shape[1]
+    W = words_ref.shape[1]
+
+    # (a) adjacency gather — candidate *ids* only.
+    flat = jnp.where(beam_ids == PAD_ID, 0, beam_ids).reshape(-1)
+    dead = beam_ids[:, :, None] == PAD_ID               # [bq, B, 1]
+    fwd = jnp.take(graph_ref[...], flat, axis=0).reshape(bq, B, kg)
+    fwd = jnp.where(dead, PAD_ID, fwd).reshape(bq, B * kg)
+    rev = jnp.take(rev_ref[...], flat, axis=0).reshape(bq, B, kr)
+    rev = jnp.where(dead, PAD_ID, rev).reshape(bq, B * kr)
+    cand = jnp.concatenate([fwd, rev], axis=1)          # [bq, C]
+    C = cand.shape[1]
+
+    # (b) suppression BEFORE scoring: PAD lanes and lanes already in the
+    # beam (merge would retire them as duplicates of columns 0..B-1 —
+    # scoring them first is the waste this kernel removes).
+    need = (cand != PAD_ID) & ~jnp.any(
+        cand[:, :, None] == beam_ids[:, None, :], axis=-1)
+    nsc_ref[...] = jnp.sum(need, axis=1, dtype=jnp.int32).reshape(bq, 1)
+
+    # (c) score surviving lanes, in chunks — the gathered fingerprint
+    # block is [bq, chunk, W], never [bq, C, W].
+    qw = qw_ref[...]                                    # [bq, W] u32
+    qcf = qc_ref[...].astype(jnp.float32)               # [bq, 1]
+    words = words_ref[...]
+    card = card_ref[...]                                # [n, 1] i32
+    if mxu:
+        q_bits = unpack_bits_int8(qw)                   # [bq, W·32] i8
+    sims_chunks = []
+    for s in range(0, C, chunk):
+        ids_c = cand[:, s:s + chunk]
+        need_c = need[:, s:s + chunk]
+        ch = ids_c.shape[1]
+        safe = jnp.where(need_c, ids_c, 0).reshape(-1)
+        cw = jnp.take(words, safe, axis=0)              # [bq·ch, W]
+        cc = jnp.where(need_c,
+                       jnp.take(card, safe, axis=0).reshape(bq, ch),
+                       0).astype(jnp.float32)
+        if mxu:
+            # Tile-dense bit-plane matmul: chunk candidates × ALL tile
+            # queries on the MXU, keep the per-row diagonal.
+            c_bits = unpack_bits_int8(cw)               # [bq·ch, W·32]
+            inter3 = jax.lax.dot_general(
+                c_bits, q_bits, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            ).reshape(bq, ch, bq)
+            own = jax.lax.broadcasted_iota(jnp.int32, (bq, ch, bq), 0)
+            qid = jax.lax.broadcasted_iota(jnp.int32, (bq, ch, bq), 2)
+            inter = jnp.sum(jnp.where(own == qid, inter3, 0),
+                            axis=-1).astype(jnp.float32)
+        else:
+            inter = jnp.sum(
+                jax.lax.population_count(qw[:, None, :]
+                                         & cw.reshape(bq, ch, W)),
+                axis=-1).astype(jnp.float32)            # [bq, ch]
+        union = qcf + cc - inter
+        s_c = jnp.where(union > 0, inter / jnp.maximum(union, 1.0), 0.0)
+        sims_chunks.append(jnp.where(need_c, s_c, NEG_INF))
+    cand_sims = jnp.concatenate(sims_chunks, axis=1)
+
+    # (d) in-register merge over [beam | fwd | rev] — the reference
+    # column order, so tie-breaks land exactly where lax.top_k puts them.
+    top_sims, top_ids = select_topk(
+        jnp.concatenate([beam_sims, cand_sims], axis=1),
+        jnp.concatenate([beam_ids, cand], axis=1),
+        B, dedup_ids=True)
+    out_ids_ref[...] = jnp.where(top_sims == NEG_INF, PAD_ID, top_ids)
+    out_sims_ref[...] = top_sims
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "chunk", "mxu", "interpret"),
+)
+def hop_pallas(graph_ids, rev_ids, words, card, q_words, q_card,
+               beam_ids, beam_sims, *,
+               block_q: int = 64, chunk: int = 256,
+               mxu: bool = False, interpret: bool = True):
+    """One fused descent hop for a wave of queries (see ref.descent_hop_ref).
+
+    graph_ids i32[n, kg], rev_ids i32[n, kr]; words u32[n, W],
+    card i32[n, 1]; q_words u32[q, W], q_card i32[q, 1];
+    beam_ids i32[q, B], beam_sims f32[q, B]. q % block_q == 0 (ops.py
+    pads). Returns (beam_ids i32[q, B], beam_sims f32[q, B],
+    n_scored i32[q, 1]) — the beam after the hop plus the per-query count
+    of candidate lanes that survived suppression and were scored.
+    """
+    q, B = beam_ids.shape
+    n, W = words.shape
+    kg, kr = graph_ids.shape[1], rev_ids.shape[1]
+    bq = min(block_q, q)
+    assert q % bq == 0, (q, bq)
+    grid = (q // bq,)
+
+    out_ids, out_sims, n_scored = pl.pallas_call(
+        functools.partial(_hop_kernel, chunk=chunk, mxu=mxu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, kg), lambda i: (0, 0)),
+            pl.BlockSpec((n, kr), lambda i: (0, 0)),
+            pl.BlockSpec((n, W), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bq, W), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bq, B), lambda i: (i, 0)),
+            pl.BlockSpec((bq, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, B), lambda i: (i, 0)),
+            pl.BlockSpec((bq, B), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, B), jnp.int32),
+            jax.ShapeDtypeStruct((q, B), jnp.float32),
+            jax.ShapeDtypeStruct((q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(graph_ids, rev_ids, words, card, q_words, q_card,
+      beam_ids, beam_sims)
+    return out_ids, out_sims, n_scored

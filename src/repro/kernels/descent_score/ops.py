@@ -1,0 +1,68 @@
+"""jit'd public wrappers for the descent_score kernel.
+
+Handles query-row padding to block multiples, card reshaping to the
+kernel's 2-D layout, and the popcount-vs-MXU layout choice by sketch
+width. ``interpret`` defaults to True (this container is CPU; on TPU
+pass interpret=False), mirroring ``goldfinger_knn/ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.descent_score.descent_score import hop_pallas
+from repro.sketch.goldfinger import MXU_MIN_WORDS
+from repro.types import NEG_INF, PAD_ID
+
+INTERPRET = True  # flipped to False on real TPU deployments
+
+
+def _pad_rows(x, to: int, fill):
+    n = x.shape[0]
+    if n % to == 0:
+        return x
+    pad = to - n % to
+    return jnp.concatenate(
+        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "mxu", "with_counts"))
+def descent_hop(graph_ids, rev_ids, words, card, q_words, q_card,
+                beam_ids, beam_sims, *, block_q: int | None = None,
+                mxu: bool | None = None, with_counts: bool = False):
+    """One fused descent hop; same contract as ref.descent_hop_ref.
+
+    Padded query rows (PAD beams) produce PAD/−inf rows and score
+    nothing; they are sliced off before returning. With ``with_counts``
+    also returns n_scored i32[q] — candidate lanes that survived
+    in-tile suppression and were actually scored (the unfused path
+    always scores ``beam·(kg+kr)`` per query).
+    """
+    q = beam_ids.shape[0]
+    W = words.shape[1]
+    if mxu is None:
+        mxu = W >= MXU_MIN_WORDS
+    if block_q is None:
+        # Wide sketches blow up 8× when unpacked to bit-planes — keep
+        # the per-tile candidate block small; narrow sketches amortize
+        # grid overhead with bigger tiles. Capped at the actual row
+        # count so small waves / slot arrays (continuous serving runs
+        # q = n_slots every tick) never do dense estimator work on
+        # padding.
+        block_q = min(8 if mxu else 64, max(q, 1))
+    qw = _pad_rows(jnp.asarray(q_words), block_q, 0)
+    qc = _pad_rows(jnp.asarray(q_card).reshape(-1, 1).astype(jnp.int32),
+                   block_q, 0)
+    bi = _pad_rows(beam_ids, block_q, PAD_ID)
+    bs = _pad_rows(beam_sims, block_q, NEG_INF)
+    out_ids, out_sims, n_scored = hop_pallas(
+        jnp.asarray(graph_ids), jnp.asarray(rev_ids), jnp.asarray(words),
+        jnp.asarray(card).reshape(-1, 1).astype(jnp.int32),
+        qw, qc, bi, bs,
+        block_q=block_q, mxu=mxu, interpret=INTERPRET)
+    if with_counts:
+        return out_ids[:q], out_sims[:q], n_scored[:q, 0]
+    return out_ids[:q], out_sims[:q]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the fused descent-hop kernel.
+
+This is the historical ``query/search.descent_step`` body, verbatim
+semantics: gather forward + reverse neighbors of the beam, score every
+candidate lane with the GoldFinger estimator, then let ``merge_topk``
+mask duplicates/PADs and run one wide ``lax.top_k``. The fused kernel
+must match it bit for bit (ids and sims); ``query/search`` also serves
+through it when ``QueryConfig(kernel=False)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.knn.topk import merge_topk
+from repro.sketch.goldfinger import jaccard_pairwise_auto
+from repro.types import NEG_INF, PAD_ID
+
+
+def row_scorer(words, card):
+    """Row scorer: sims of one query against a PAD_ID-padded id list.
+
+    The estimator layout is width-dispatched (``jaccard_pairwise_auto``):
+    VPU popcount for narrow sketches, int8 bit-plane MXU matmul for wide
+    raw-incidence ones — bitwise-identical results either way.
+    """
+
+    def score_row(qw, qc, cids):
+        safe = jnp.where(cids == PAD_ID, 0, cids)
+        cw = words[safe]
+        cc = jnp.where(cids == PAD_ID, 0, card[safe])
+        s = jaccard_pairwise_auto(qw[None], qc[None], cw, cc)[0]
+        return jnp.where(cids == PAD_ID, NEG_INF, s)
+
+    return jax.vmap(score_row)
+
+
+def descent_hop_ref(graph_ids, rev_ids, words, card,
+                    q_words, q_card, beam_ids, beam_sims):
+    """One friend-of-a-friend hop, unfused: gather → score ALL lanes →
+    dedup after the fact → wide top-k. Returns (beam_ids, beam_sims)."""
+    nq = q_words.shape[0]
+    kg, kr = graph_ids.shape[1], rev_ids.shape[1]
+    score = row_scorer(words, card)
+    safe = jnp.where(beam_ids == PAD_ID, 0, beam_ids)
+    fwd = graph_ids[safe].reshape(nq, -1)
+    fwd = jnp.where((beam_ids == PAD_ID).repeat(kg, axis=1), PAD_ID, fwd)
+    rev = rev_ids[safe].reshape(nq, -1)
+    rev = jnp.where((beam_ids == PAD_ID).repeat(kr, axis=1), PAD_ID, rev)
+    cand = jnp.concatenate([fwd, rev], axis=1)      # [q, beam·(kg+kr)]
+    cand_sims = score(q_words, q_card, cand)
+    return merge_topk(
+        jnp.concatenate([beam_ids, cand], axis=1),
+        jnp.concatenate([beam_sims, cand_sims], axis=1),
+        beam_ids.shape[1])

@@ -29,29 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.knn.topk import select_topk
 from repro.types import NEG_INF, PAD_ID
-
-
-def _select_topk(cand_sims, cand_ids, k: int):
-    """k rounds of (max, first-occurrence mask) selection. No gathers.
-
-    cand_sims f32[bq, c], cand_ids i32[bq, c] → (f32[bq, k], i32[bq, k]).
-    Ties resolve to the lowest column index, matching ``lax.top_k``.
-    """
-    bq, c = cand_sims.shape
-    col = jax.lax.broadcasted_iota(jnp.int32, (bq, c), 1)
-    sel_sims = []
-    sel_ids = []
-    for _ in range(k):
-        m = jnp.max(cand_sims, axis=1)                      # [bq]
-        hit = cand_sims == m[:, None]
-        first_col = jnp.min(jnp.where(hit, col, c), axis=1)  # [bq]
-        first = col == first_col[:, None]
-        sel_sims.append(m)
-        sel_ids.append(jnp.sum(jnp.where(first, cand_ids, 0), axis=1))
-        cand_sims = jnp.where(first, NEG_INF, cand_sims)
-    return (jnp.stack(sel_sims, axis=1),
-            jnp.stack(sel_ids, axis=1).astype(jnp.int32))
 
 
 def _knn_kernel(q_bits_ref, q_card_ref, q_ids_ref,
@@ -84,7 +63,7 @@ def _knn_kernel(q_bits_ref, q_card_ref, q_ids_ref,
     cand_sims = jnp.concatenate([out_sims_ref[...], sims], axis=1)
     cand_ids = jnp.concatenate(
         [out_ids_ref[...], jnp.broadcast_to(d_ids.T, sims.shape)], axis=1)
-    new_sims, new_ids = _select_topk(cand_sims, cand_ids, k)
+    new_sims, new_ids = select_topk(cand_sims, cand_ids, k)
     out_sims_ref[...] = new_sims
     out_ids_ref[...] = new_ids
 

@@ -31,6 +31,42 @@ def dedup_mask(ids: jax.Array) -> jax.Array:
     return jnp.take_along_axis(first, inv, axis=-1)
 
 
+def select_topk(cand_sims: jax.Array, cand_ids: jax.Array, k: int,
+                *, dedup_ids: bool = False):
+    """In-register top-k: k rounds of (max, first-occurrence) selection.
+
+    cand_sims f32[n, c], cand_ids i32[n, c] → (f32[n, k], i32[n, k]).
+    Ties resolve to the lowest column index, matching ``lax.top_k``. With
+    ``dedup_ids`` every column carrying a round's winning id retires with
+    the winner, so an id is selected at most once — because duplicate
+    columns of an id always carry the same sim, this reproduces the
+    ``dedup_mask`` + ``lax.top_k`` semantics of :func:`merge_topk`
+    exactly (the winning column is the id's first occurrence).
+
+    No gathers, no sort — everything lowers to plain VPU reduce/eltwise
+    ops, so this is safe inside Pallas kernel bodies (the goldfinger_knn
+    streaming merge and the descent_score beam merge both use it).
+    """
+    n, c = cand_sims.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (n, c), 1)
+    sel_sims = []
+    sel_ids = []
+    for _ in range(k):
+        m = jnp.max(cand_sims, axis=1)                      # [n]
+        hit = cand_sims == m[:, None]
+        first_col = jnp.min(jnp.where(hit, col, c), axis=1)  # [n]
+        first = col == first_col[:, None]
+        win = jnp.sum(jnp.where(first, cand_ids, 0), axis=1)
+        sel_sims.append(m)
+        sel_ids.append(win)
+        kill = first
+        if dedup_ids:
+            kill = kill | (cand_ids == win[:, None])
+        cand_sims = jnp.where(kill, NEG_INF, cand_sims)
+    return (jnp.stack(sel_sims, axis=1),
+            jnp.stack(sel_ids, axis=1).astype(jnp.int32))
+
+
 def merge_topk(ids: jax.Array, sims: jax.Array, k: int,
                self_ids: jax.Array | None = None):
     """Per-row top-k with dedup / self-edge / PAD masking.

@@ -9,9 +9,12 @@ Pass ``--index path.npz`` to serve a previously built artifact
 online insertion before the query wave, ``--shards S`` to serve
 through the LPT cluster shards (shard_map when a device per shard
 exists, vmapped on one device otherwise — see repro/query/sharded.py),
-and ``--continuous`` to stream requests through the slot-based
+``--continuous`` to stream requests through the slot-based
 continuous-batching scheduler (``repro/sched/``) instead of closed
-waves — same results, but admission happens mid-descent.
+waves — same results, but admission happens mid-descent — and
+``--kernel`` to run each hop through the fused Pallas descent-scoring
+kernel (``repro/kernels/descent_score``; identical results, candidates
+deduped before the estimator runs).
 """
 from __future__ import annotations
 
@@ -42,6 +45,9 @@ def main(argv=None):
                     help="in-flight slot capacity in continuous mode")
     ap.add_argument("--shards", type=int, default=1,
                     help="serve across this many LPT cluster shards")
+    ap.add_argument("--kernel", action="store_true",
+                    help="fused Pallas descent-scoring hop "
+                         "(kernels/descent_score; identical results)")
     ap.add_argument("--insert", type=int, default=0,
                     help="insert this many users online before querying")
     ap.add_argument("--index", default=None, help="load a saved index")
@@ -69,7 +75,8 @@ def main(argv=None):
 
     engine = QueryEngine(index, QueryConfig(
         k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
-        shards=args.shards, continuous=args.continuous, slots=args.slots))
+        shards=args.shards, continuous=args.continuous, slots=args.slots,
+        kernel=args.kernel))
 
     # Unseen profiles from the same distribution (different seed).
     qds = make_dataset(args.dataset, scale=args.scale, seed=args.seed + 1)

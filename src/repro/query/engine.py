@@ -71,6 +71,9 @@ class QueryConfig:
     refresh_every: int = 64    # cohort size triggering re-clustering
     continuous: bool = False   # slot-based streaming admission (sched/)
     slots: int = 32            # in-flight capacity in continuous mode
+    kernel: bool = False       # fused Pallas descent-scoring hop
+                               # (kernels/descent_score; bitwise-identical
+                               # results, interpret mode off-TPU)
 
 
 class _ContinuousState:
@@ -213,13 +216,14 @@ class QueryEngine:
         qseeds[:qn] = seeds
         if qc.shards > 1 and not single:
             ids, sims = self._sync_sharded().descend(
-                qw, qcard, qseeds, k=k, beam=beam, hops=hops)
+                qw, qcard, qseeds, k=k, beam=beam, hops=hops,
+                kernel=qc.kernel)
         else:
             graph_ids, rev_ids, words, card = self._sync()
             ids, sims = batched_descent(
                 graph_ids, rev_ids, words, card,
                 jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
-                k=k, beam=beam, hops=hops)
+                k=k, beam=beam, hops=hops, kernel=qc.kernel)
         return np.asarray(ids)[:qn], np.asarray(sims)[:qn]
 
     # -- queue / wave serving ----------------------------------------------
@@ -342,7 +346,8 @@ class QueryEngine:
             return n_done
         st.beam_ids, st.beam_sims, changed = slot_hop(
             graph_ids, rev_ids, words, card, st.q_words, st.q_card,
-            st.beam_ids, st.beam_sims, jnp.asarray(active))
+            st.beam_ids, st.beam_sims, jnp.asarray(active),
+            kernel=qc.kernel)
         st.hops_done[active] += 1
         self.n_ticks += 1
         finished = active & (

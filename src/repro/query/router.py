@@ -40,6 +40,22 @@ def fingerprint_profiles(items: np.ndarray, offsets: np.ndarray,
     return fingerprint_dataset(ds, n_bits=n_bits, seed=seed)
 
 
+def routed_queries(index: KNNIndex, profiles,
+                   seeds_per_config: int = 16):
+    """Marshal raw profiles into a routed wave.
+
+    Returns host arrays (q_words uint32[q, W], q_card int32[q],
+    seeds int32[q, t·seeds_per_config]) — the unpadded inputs
+    ``descent_init``/``descent_step`` take. The engine layers its own
+    capacity padding on top; benchmarks drive the descent with these
+    directly.
+    """
+    items, offsets = profiles_to_csr(profiles)
+    qgf = fingerprint_profiles(items, offsets, index.n_bits, index.fp_seed)
+    seeds = route(index, items, offsets, seeds_per_config)
+    return np.asarray(qgf.words), np.asarray(qgf.card), seeds
+
+
 def query_hash_tables(index: KNNIndex, items: np.ndarray,
                       offsets: np.ndarray) -> np.ndarray:
     """Ascending distinct FRH values per (config, query): int32[t, q, depth]."""

@@ -6,9 +6,22 @@ a fixed-width beam of its best candidates so far; each hop gathers the
 forward AND reverse neighbors of the beam (neighbors-of-neighbors, the
 Hyrec/NNDescent friend-of-a-friend principle), scores them against the
 query fingerprint with the GoldFinger Jaccard estimator, and re-selects
-the beam with ``merge_topk``. Beam width, hop count, and k are static,
-so the engine compiles one program per (wave capacity, beam, hops, k)
-and reuses it across waves — no divergence, no per-query control flow.
+the beam. Beam width, hop count, and k are static, so the engine
+compiles one program per (wave capacity, beam, hops, k) and reuses it
+across waves — no divergence, no per-query control flow.
+
+The hop itself (:func:`descent_step`) has two implementations with
+bitwise-identical results, selected by the static ``kernel`` flag
+(``QueryConfig(kernel=)`` threads it through all three serving modes):
+
+* ``kernel=False`` — the unfused jnp reference
+  (``kernels/descent_score/ref.py``): gather, score every candidate
+  lane, dedup after the fact, wide ``lax.top_k``.
+* ``kernel=True`` — the fused Pallas hop
+  (``kernels/descent_score/ops.py``): one ``pallas_call`` per hop that
+  suppresses duplicate/PAD/already-in-beam lanes *before* the estimator
+  runs and merges with an in-register top-k, never materializing the
+  ``[q, beam·(kg+kr)]`` candidate tensor.
 """
 from __future__ import annotations
 
@@ -18,23 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.descent_score import ops as ds_ops
+from repro.kernels.descent_score import ref as ds_ref
 from repro.knn.topk import merge_topk
 from repro.sched import trace
-from repro.sketch.goldfinger import jaccard_pairwise
+from repro.sketch.goldfinger import jaccard_pairwise_auto
 from repro.types import NEG_INF, PAD_ID
-
-
-def _scorer(words, card):
-    """Row scorer: sims of one query against a PAD_ID-padded id list."""
-
-    def score_row(qw, qc, cids):
-        safe = jnp.where(cids == PAD_ID, 0, cids)
-        cw = words[safe]
-        cc = jnp.where(cids == PAD_ID, 0, card[safe])
-        s = jaccard_pairwise(qw[None], qc[None], cw, cc)[0]
-        return jnp.where(cids == PAD_ID, NEG_INF, s)
-
-    return jax.vmap(score_row)
 
 
 def descent_init(words, card, q_words, q_card, seed_ids, *, beam: int):
@@ -43,12 +45,13 @@ def descent_init(words, card, q_words, q_card, seed_ids, *, beam: int):
     Returns (beam_ids int32[q, beam], beam_sims float32[q, beam]),
     sim-descending, PAD_ID padded.
     """
-    score = _scorer(words, card)
+    score = ds_ref.row_scorer(words, card)
     return merge_topk(seed_ids, score(q_words, q_card, seed_ids), beam)
 
 
 def descent_step(graph_ids, rev_ids, words, card,
-                 q_words, q_card, beam_ids, beam_sims):
+                 q_words, q_card, beam_ids, beam_sims, *,
+                 kernel: bool = False):
     """One descent hop: expand every query's beam by its friends-of-friends.
 
     Gathers forward + reverse neighbors of the current beam, scores them
@@ -56,28 +59,22 @@ def descent_step(graph_ids, rev_ids, words, card,
     independent — the hop for query i depends only on row i's beam and
     the (shared, read-only) index arrays — which is what lets the
     continuous-batching slot program advance in-flight queries hop by
-    hop while fresh admissions re-init other rows (``slot_step``), with
+    hop while fresh admissions re-init other rows (``slot_hop``), with
     results identical to running the whole wave in lockstep.
+
+    ``kernel`` is static: False runs the unfused jnp reference, True the
+    fused Pallas hop — bitwise-identical (ids and sims) either way.
     """
-    nq = q_words.shape[0]
-    kg, kr = graph_ids.shape[1], rev_ids.shape[1]
-    score = _scorer(words, card)
-    safe = jnp.where(beam_ids == PAD_ID, 0, beam_ids)
-    fwd = graph_ids[safe].reshape(nq, -1)
-    fwd = jnp.where((beam_ids == PAD_ID).repeat(kg, axis=1), PAD_ID, fwd)
-    rev = rev_ids[safe].reshape(nq, -1)
-    rev = jnp.where((beam_ids == PAD_ID).repeat(kr, axis=1), PAD_ID, rev)
-    cand = jnp.concatenate([fwd, rev], axis=1)      # [q, beam·(kg+kr)]
-    cand_sims = score(q_words, q_card, cand)
-    return merge_topk(
-        jnp.concatenate([beam_ids, cand], axis=1),
-        jnp.concatenate([beam_sims, cand_sims], axis=1),
-        beam_ids.shape[1])
+    if kernel:
+        return ds_ops.descent_hop(graph_ids, rev_ids, words, card,
+                                  q_words, q_card, beam_ids, beam_sims)
+    return ds_ref.descent_hop_ref(graph_ids, rev_ids, words, card,
+                                  q_words, q_card, beam_ids, beam_sims)
 
 
 def descent_kernel(graph_ids, rev_ids, words, card,
                    q_words, q_card, seed_ids, *,
-                   k: int, beam: int, hops: int):
+                   k: int, beam: int, hops: int, kernel: bool = False):
     """Beam search over the index graph for a wave of queries.
 
     graph_ids int32[n, kg], rev_ids int32[n, r]: forward/reverse adjacency.
@@ -96,7 +93,7 @@ def descent_kernel(graph_ids, rev_ids, words, card,
 
     def hop(state, _):
         return descent_step(graph_ids, rev_ids, words, card,
-                            q_words, q_card, *state), None
+                            q_words, q_card, *state, kernel=kernel), None
 
     (beam_ids, beam_sims), _ = jax.lax.scan(
         hop, (beam_ids, beam_sims), None, length=hops)
@@ -104,7 +101,7 @@ def descent_kernel(graph_ids, rev_ids, words, card,
 
 
 batched_descent = functools.partial(
-    jax.jit, static_argnames=("k", "beam", "hops"))(descent_kernel)
+    jax.jit, static_argnames=("k", "beam", "hops", "kernel"))(descent_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("beam",),
@@ -134,17 +131,20 @@ def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
             beam_sims.at[slot_idx].set(init_sims, mode="drop"))
 
 
-@functools.partial(jax.jit, donate_argnames=("beam_ids", "beam_sims"))
+@functools.partial(jax.jit, static_argnames=("kernel",),
+                   donate_argnames=("beam_ids", "beam_sims"))
 def slot_hop(graph_ids, rev_ids, words, card,
-             q_words, q_card, beam_ids, beam_sims, active):
+             q_words, q_card, beam_ids, beam_sims, active, *,
+             kernel: bool = False):
     """One continuous-batching tick over the fixed slot array.
 
     All slot-axis inputs have the static capacity ``n_slots`` so one
-    program compiles per (n_slots, beam, index capacity) and is reused
-    for every tick regardless of how requests stream in (asserted by the
-    compile-count regression via ``sched.trace``). ``active`` rows take
-    one :func:`descent_step` hop; inactive rows pass through untouched
-    (their state is garbage the host ignores).
+    program compiles per (n_slots, beam, index capacity, kernel) and is
+    reused for every tick regardless of how requests stream in (asserted
+    by the compile-count regression via ``sched.trace``). ``active``
+    rows take one :func:`descent_step` hop (fused Pallas hop when
+    ``kernel``); inactive rows pass through untouched (their state is
+    garbage the host ignores).
 
     Returns (beam_ids, beam_sims, changed) where ``changed[i]`` is False
     when row i's beam reached a fixed point this hop — since the hop is
@@ -153,9 +153,10 @@ def slot_hop(graph_ids, rev_ids, words, card,
     affecting its result (exact wave equivalence).
     """
     trace.bump(("query_slot_hop", beam_ids.shape[0], beam_ids.shape[1],
-                graph_ids.shape[0]))
+                graph_ids.shape[0], kernel))
     nids, nsims = descent_step(graph_ids, rev_ids, words, card,
-                               q_words, q_card, beam_ids, beam_sims)
+                               q_words, q_card, beam_ids, beam_sims,
+                               kernel=kernel)
     changed = jnp.any(nids != beam_ids, axis=1) & active
     out_ids = jnp.where(active[:, None], nids, beam_ids)
     out_sims = jnp.where(active[:, None], nsims, beam_sims)
@@ -164,23 +165,35 @@ def slot_hop(graph_ids, rev_ids, words, card,
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def _exact_block(words, card, q_words, q_card, k: int):
-    sims = jaccard_pairwise(q_words, q_card, words, card)
+    trace.bump(("exact_block", words.shape[0], q_words.shape[0], k))
+    sims = jaccard_pairwise_auto(q_words, q_card, words, card)
     top_sims, top_ids = jax.lax.top_k(sims, k)
     top_ids = jnp.where(top_sims == NEG_INF, PAD_ID, top_ids.astype(jnp.int32))
     return top_ids, top_sims
 
 
 def exact_knn(words, card, q_words, q_card, k: int, block: int = 256):
-    """Brute-force query KNN (ground truth for recall), query-blocked."""
+    """Brute-force query KNN (ground truth for recall), query-blocked.
+
+    Every block — including the final partial one and short query sets —
+    is padded up to ``block`` rows, so ONE ``_exact_block`` shape
+    compiles per (index rows, block, k) no matter how many queries each
+    call brings (the same remainder-padding trick ``local_knn`` uses for
+    its capacity-group batches). Pad rows are zero-fingerprint and are
+    sliced off before returning.
+    """
     words, card = jnp.asarray(words), jnp.asarray(card)
     q = q_words.shape[0]
     ids_out = np.full((q, k), PAD_ID, dtype=np.int32)
     sims_out = np.full((q, k), NEG_INF, dtype=np.float32)
     for s in range(0, q, block):
         e = min(s + block, q)
-        ids, sims = _exact_block(words, card,
-                                 jnp.asarray(q_words[s:e]),
-                                 jnp.asarray(q_card[s:e]), k)
-        ids_out[s:e] = np.asarray(ids)
-        sims_out[s:e] = np.asarray(sims)
+        qw = np.zeros((block, q_words.shape[1]), dtype=np.uint32)
+        qw[: e - s] = np.asarray(q_words[s:e])
+        qc = np.zeros(block, dtype=np.int32)
+        qc[: e - s] = np.asarray(q_card[s:e])
+        ids, sims = _exact_block(words, card, jnp.asarray(qw),
+                                 jnp.asarray(qc), k)
+        ids_out[s:e] = np.asarray(ids)[: e - s]
+        sims_out[s:e] = np.asarray(sims)[: e - s]
     return ids_out, sims_out

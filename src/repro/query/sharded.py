@@ -186,12 +186,13 @@ class ShardedDescent:
         return np.where(owned, local, PAD_ID)
 
     def descend(self, q_words, q_card, seeds: np.ndarray, *,
-                k: int, beam: int, hops: int):
+                k: int, beam: int, hops: int, kernel: bool = False):
         """Route-seeded descent on every shard + cross-shard top-k merge.
 
         ``seeds`` are global ids (router output, PAD padded); ``beam`` is
         the single-device frontier width, divided among shards (with
-        ``self.oversample`` slack, floored at k). Returns
+        ``self.oversample`` slack, floored at k). ``kernel`` selects the
+        fused Pallas hop (bitwise-identical results). Returns
         (ids int32[q, k], sims float32[q, k]) in global ids.
         """
         l_seeds = jnp.asarray(self.shard_seeds(seeds))
@@ -201,36 +202,39 @@ class ShardedDescent:
                 l_seeds)
         if self.mesh is not None:
             program = _mesh_program(self.mesh, k=k, beam=shard_beam,
-                                    hops=hops)
+                                    hops=hops, kernel=kernel)
             ids, sims = program(*args)
         else:
             ids, sims = _vmapped_descent(*args, k=k, beam=shard_beam,
-                                         hops=hops)
+                                         hops=hops, kernel=kernel)
         return _merge_shard_topk(ids, sims, k)
 
 
 def _per_shard(graph, rev, words, card, l2g, q_words, q_card, seeds,
-               *, k, beam, hops):
+               *, k, beam, hops, kernel=False):
     """One shard's descent; results mapped back to global ids."""
     ids, sims = descent_kernel(graph, rev, words, card,
                                q_words, q_card, seeds,
-                               k=k, beam=beam, hops=hops)
+                               k=k, beam=beam, hops=hops, kernel=kernel)
     safe = jnp.where(ids == PAD_ID, 0, ids)
     return jnp.where(ids == PAD_ID, PAD_ID, l2g[safe]), sims
 
 
-@functools.partial(jax.jit, static_argnames=("k", "beam", "hops"))
+@functools.partial(jax.jit, static_argnames=("k", "beam", "hops", "kernel"))
 def _vmapped_descent(l_graph, l_rev, l_words, l_card, l2g,
-                     q_words, q_card, l_seeds, *, k, beam, hops):
-    """Single-device fallback: the shard axis is a vmap axis."""
+                     q_words, q_card, l_seeds, *, k, beam, hops,
+                     kernel=False):
+    """Single-device fallback: the shard axis is a vmap axis (the fused
+    Pallas hop batches through its pallas_call batching rule)."""
     return jax.vmap(
         lambda g, r, w, c, m, s: _per_shard(
-            g, r, w, c, m, q_words, q_card, s, k=k, beam=beam, hops=hops)
+            g, r, w, c, m, q_words, q_card, s, k=k, beam=beam, hops=hops,
+            kernel=kernel)
     )(l_graph, l_rev, l_words, l_card, l2g, l_seeds)
 
 
 @functools.lru_cache(maxsize=64)
-def _mesh_program(mesh, *, k, beam, hops):
+def _mesh_program(mesh, *, k, beam, hops, kernel=False):
     """SPMD path: one shard per device, no collectives inside (the merge
     happens after the shard-parallel top-k, mirroring
     distributed_local_knn's reduce phase). Returns a jitted callable.
@@ -244,7 +248,7 @@ def _mesh_program(mesh, *, k, beam, hops):
 
     def device_fn(g, r, w, c, m, qw, qc, s):
         ids, sims = _per_shard(g[0], r[0], w[0], c[0], m[0], qw, qc, s[0],
-                               k=k, beam=beam, hops=hops)
+                               k=k, beam=beam, hops=hops, kernel=kernel)
         return ids[None], sims[None]
 
     in_specs = (P("shards", None, None), P("shards", None, None),

@@ -153,3 +153,25 @@ def jaccard_pairwise_mxu(words_a, card_a, words_b, card_b):
     ).astype(jnp.float32)
     union = card_a[:, None].astype(jnp.float32) + card_b[None, :].astype(jnp.float32) - inter
     return jnp.where(union > 0, inter / jnp.maximum(union, 1.0), 0.0)
+
+
+# Sketches at least this many uint32 words wide score through the MXU
+# bit-plane matmul instead of the VPU popcount loop. 64 words = 2048 bits
+# is where jaccard_pairwise starts chunk-scanning the AND tensor — beyond
+# it the raw-incidence layouts (W = |I|/32, thousands of words) amortize
+# the 8× unpack blow-up against the systolic array's throughput.
+MXU_MIN_WORDS = 64
+
+
+def jaccard_pairwise_auto(words_a, card_a, words_b, card_b):
+    """Width-dispatched estimator: popcount for narrow sketches, bit-plane
+    MXU matmul for wide (raw-incidence) ones.
+
+    Results are bitwise identical either way — the intersection is an
+    exact integer in both layouts and the f32 epilogue is the same ops in
+    the same order — so callers (descent scoring, ``_group_knn``) switch
+    purely on the compute layout.
+    """
+    if words_a.shape[-1] >= MXU_MIN_WORDS:
+        return jaccard_pairwise_mxu(words_a, card_a, words_b, card_b)
+    return jaccard_pairwise(words_a, card_a, words_b, card_b)

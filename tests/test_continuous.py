@@ -130,6 +130,30 @@ def test_query_continuous_per_request_hop_budgets(index, query_profiles):
                                       err_msg=f"rid={r.rid}")
 
 
+def test_query_continuous_kernel_matches_jnp_wave(index, query_profiles):
+    """The fused Pallas hop behind QueryConfig(kernel=True) is bitwise
+    transparent: a continuous kernel run equals the plain jnp wave run
+    per request — same ids, same sims — across streaming admissions."""
+    wave = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          max_wave=64))
+    _submit_all(wave, query_profiles)
+    wave.run()
+
+    cont = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          continuous=True, slots=9,
+                                          kernel=True))
+    _submit_all(cont, query_profiles)
+    cs = cont.run()
+    assert cs["requests"] == len(query_profiles)
+    w, c = _by_rid(wave), _by_rid(cont)
+    assert set(w) == set(c)
+    for rid in w:
+        np.testing.assert_array_equal(w[rid][0], c[rid][0],
+                                      err_msg=f"ids rid={rid}")
+        np.testing.assert_array_equal(w[rid][1], c[rid][1],
+                                      err_msg=f"sims rid={rid}")
+
+
 # -- compile-count regression ----------------------------------------------
 
 def test_query_slot_step_compiles_once_across_admissions(index,
@@ -168,6 +192,32 @@ def test_query_slot_step_compiles_once_across_admissions(index,
     # program nor the bucketed admission program.
     assert (hops(), admits()) == (after_h, after_a)
     assert after_h >= 1 and after_a >= 1  # the counters are really wired
+
+
+def test_query_slot_hop_kernel_compiles_once(index, query_profiles):
+    """kernel=True keeps the compile-once property: exactly one fused
+    step program per (slots, beam, index capacity, kernel) — admission
+    interleavings never retrace the pallas program."""
+    qc = QueryConfig(k=K, beam=BEAM, hops=HOPS, continuous=True,
+                     slots=11, kernel=True)
+    engine = QueryEngine(index, qc)
+
+    def hops():
+        return sum(v for key, v in trace.counts("query_slot_hop").items()
+                   if key[1] == 11 and key[4] is True)
+
+    base = hops()
+    _submit_all(engine, query_profiles[:8])
+    engine.run()
+    after = hops()
+    assert after <= base + 1
+    _submit_all(engine, query_profiles[8:17])
+    engine.run()
+    for p in query_profiles[17:22]:
+        engine.submit(QueryRequest(rid=98, profile=p))
+        engine.run()
+    assert hops() == after
+    assert after >= 1
 
 
 def test_lm_decode_compiles_once_across_admissions():

@@ -1,0 +1,208 @@
+"""Fused descent-scoring kernel vs the jnp oracle (interpret mode).
+
+The contract under test is *bitwise* equality of (ids, sims) with
+``kernels/descent_score/ref.descent_hop_ref`` — the historical
+``descent_step`` body — across PAD patterns, beam widths, degenerate
+rows, and both estimator layouts (VPU popcount and the wide-sketch MXU
+bit-plane variant), plus the end-to-end serving paths behind
+``QueryConfig(kernel=True)`` and the compile-shape regressions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.kernels.descent_score import ops as ds_ops
+from repro.kernels.descent_score import ref as ds_ref
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import build_index
+from repro.query.search import exact_knn
+from repro.sched import trace
+from repro.types import NEG_INF, PAD_ID
+
+
+def _random_words(rng, n, W):
+    w = rng.integers(0, 2**32, size=(n, W), dtype=np.uint64)
+    w = (w & rng.integers(0, 2**32, size=(n, W), dtype=np.uint64))
+    w = w.astype(np.uint32)
+    card = np.unpackbits(w.view(np.uint8), axis=1).sum(1).astype(np.int32)
+    return w, card
+
+
+def _random_hop_inputs(rng, n, kg, kr, W, q, B, *, pad_frac=0.2):
+    """Well-formed hop inputs: adjacency with PAD tails, beams with
+    distinct ids (the merge_topk invariant every real beam satisfies),
+    sim-descending with NEG_INF under PAD."""
+    g = rng.integers(-1, n, size=(n, kg)).astype(np.int32)
+    r = rng.integers(-1, n, size=(n, kr)).astype(np.int32)
+    w, c = _random_words(rng, n, W)
+    qw, qc = _random_words(rng, q, W)
+    bi = np.full((q, B), PAD_ID, np.int32)
+    for i in range(q):
+        m = int(rng.integers(0, min(n, B) + 1))
+        if rng.random() < pad_frac:
+            m = 0  # fully-dead row (e.g. an unadmitted slot)
+        bi[i, :m] = rng.choice(n, size=m, replace=False)
+    bs = np.where(bi == PAD_ID, NEG_INF,
+                  -np.sort(-rng.random((q, B)))).astype(np.float32)
+    return tuple(jnp.asarray(x)
+                 for x in (g, r, w, c, qw, qc, bi, bs))
+
+
+def _assert_hop_parity(args):
+    ri, rs = ds_ref.descent_hop_ref(*args)
+    ki, ks = ds_ops.descent_hop(*args)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+
+
+@pytest.mark.parametrize("n,q,B", [(60, 5, 4), (200, 33, 16),
+                                   (128, 64, 8), (50, 1, 1)])
+@pytest.mark.parametrize("kg,kr", [(6, 9), (10, 16), (3, 1)])
+def test_hop_matches_ref_shapes(n, q, B, kg, kr):
+    rng = np.random.default_rng(n * 1000 + q + B + kg + kr)
+    _assert_hop_parity(_random_hop_inputs(rng, n, kg, kr, 4, q, B))
+
+
+@pytest.mark.parametrize("W", [1, 32, 64, 80])
+def test_hop_matches_ref_sketch_widths(W):
+    """Crosses the MXU_MIN_WORDS boundary: W≥64 scores through the int8
+    bit-plane matmul, below it the VPU popcount — identical bits."""
+    rng = np.random.default_rng(W)
+    _assert_hop_parity(_random_hop_inputs(rng, 90, 5, 7, W, 17, 6))
+
+
+def test_hop_degenerate_rows():
+    """All-PAD beams, empty-adjacency rows, zero-cardinality sketches."""
+    rng = np.random.default_rng(11)
+    g, r, w, c, qw, qc, bi, bs = _random_hop_inputs(
+        rng, 40, 4, 5, 4, 12, 5)
+    g = g.at[:10].set(PAD_ID)            # rows with no forward edges
+    r = r.at[5:15].set(PAD_ID)
+    w = w.at[3].set(0)                   # empty-profile fingerprint
+    c = c.at[3].set(0)
+    bi = bi.at[0].set(PAD_ID)            # dead query rows
+    bs = bs.at[0].set(NEG_INF)
+    qw = qw.at[1].set(0)
+    qc = qc.at[1].set(0)
+    _assert_hop_parity((g, r, w, c, qw, qc, bi, bs))
+
+
+def test_hop_counts_bounded_and_reduced():
+    """n_scored counts exactly the lanes surviving PAD / dead-beam-row /
+    already-in-beam suppression — and on a graph with mutual edges the
+    reduction vs the unfused beam·(kg+kr) is real."""
+    rng = np.random.default_rng(2)
+    n, kg, kr, B = 64, 8, 8, 12
+    # Ring-ish mutual adjacency: heavy friend-of-a-friend duplication.
+    g = np.stack([(np.arange(n) + j + 1) % n for j in range(kg)],
+                 axis=1).astype(np.int32)
+    r = np.stack([(np.arange(n) - j - 1) % n for j in range(kr)],
+                 axis=1).astype(np.int32)
+    w, c = _random_words(rng, n, 4)
+    qw, qc = _random_words(rng, 9, 4)
+    bi = np.stack([np.arange(i, i + B) % n for i in range(9)]).astype(np.int32)
+    bs = -np.sort(-rng.random((9, B))).astype(np.float32)
+    args = tuple(jnp.asarray(x) for x in (g, r, w, c, qw, qc, bi, bs))
+    ki, ks, nsc = ds_ops.descent_hop(*args, with_counts=True)
+    nsc = np.asarray(nsc)
+    total = B * (kg + kr)
+    # Host-side truth: lanes not PAD and not already in the beam.
+    cand = np.concatenate([g[bi].reshape(9, -1), r[bi].reshape(9, -1)], 1)
+    live = (cand != PAD_ID) & ~(cand[:, :, None] == bi[:, None, :]).any(-1)
+    np.testing.assert_array_equal(nsc, live.sum(1))
+    assert (nsc <= total).all()
+    # Contiguous beams on a ring re-meet constantly: the dedup must bite.
+    assert nsc.mean() < 0.75 * total
+    _assert_hop_parity(args)
+
+
+def test_hop_wide_block_padding():
+    """q not a multiple of block_q exercises the row-padding path."""
+    rng = np.random.default_rng(3)
+    args = _random_hop_inputs(rng, 70, 4, 6, 4, 7, 5)
+    ki, ks = ds_ops.descent_hop(*args, block_q=4)
+    ri, rs = ds_ref.descent_hop_ref(*args)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+
+
+# -- end-to-end serving parity (QueryConfig(kernel=True)) ------------------
+
+@pytest.fixture(scope="module")
+def index():
+    ds = make_dataset("synth", scale=0.08, seed=13)
+    return build_index(ds, C2Params(k=8, b=64, t=4, max_cluster=40))
+
+
+@pytest.fixture(scope="module")
+def query_profiles():
+    qds = make_dataset("synth", scale=0.08, seed=14)
+    return [qds.profile(u) for u in range(24)]
+
+
+def _serve(index, profiles, **kw):
+    eng = QueryEngine(index, QueryConfig(k=8, beam=12, hops=3,
+                                         max_wave=32, **kw))
+    for rid, p in enumerate(profiles):
+        eng.submit(QueryRequest(rid=rid, profile=p))
+    eng.run()
+    return {r.rid: (r.ids, r.sims) for r in eng.done}
+
+
+def test_wave_serving_kernel_matches_jnp(index, query_profiles):
+    ref = _serve(index, query_profiles)
+    got = _serve(index, query_profiles, kernel=True)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid][0], got[rid][0],
+                                      err_msg=f"ids rid={rid}")
+        np.testing.assert_array_equal(ref[rid][1], got[rid][1],
+                                      err_msg=f"sims rid={rid}")
+
+
+def test_sharded_serving_kernel_matches_jnp(index, query_profiles):
+    """vmapped-over-shards composition of the pallas hop (the CPU/CI
+    sharded execution) is bitwise-identical to the jnp sharded path."""
+    ref = _serve(index, query_profiles, shards=2)
+    got = _serve(index, query_profiles, shards=2, kernel=True)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid][0], got[rid][0])
+        np.testing.assert_array_equal(ref[rid][1], got[rid][1])
+
+
+# -- compile-shape regressions ---------------------------------------------
+
+def test_exact_knn_partial_block_compiles_one_shape():
+    """exact_knn pads the final partial query block up to ``block``: one
+    _exact_block shape per (index rows, block, k), regardless of how
+    many queries each call brings."""
+    rng = np.random.default_rng(5)
+    n = 123  # unique row count → trace keys not shared with other tests
+    w, c = _random_words(rng, n, 4)
+    k = 7
+
+    def shapes():
+        return {key for key in trace.counts("exact_block")
+                if key[1] == n and key[3] == k}
+
+    base = shapes()
+    for q in (8, 40, 300, 256, 1):   # partials, exact multiple, tiny
+        qw, qc = _random_words(rng, q, 4)
+        ids, sims = exact_knn(w, c, qw, qc, k)
+        assert ids.shape == (q, k)
+        assert (ids[:, 0] != PAD_ID).all()
+    new = shapes() - base
+    assert len(new) == 1, new            # exactly one block shape ever
+    assert next(iter(new))[2] == 256     # ...the full block
+
+
+def test_exact_knn_results_unaffected_by_padding():
+    rng = np.random.default_rng(6)
+    w, c = _random_words(rng, 123, 4)
+    qw, qc = _random_words(rng, 40, 4)
+    ids_a, sims_a = exact_knn(w, c, qw, qc, 5, block=16)
+    ids_b, sims_b = exact_knn(w, c, qw, qc, 5, block=256)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(sims_a, sims_b)

@@ -1,0 +1,64 @@
+"""Hypothesis property tests for the fused descent-scoring kernel:
+bitwise hop parity with the jnp oracle on arbitrary well-formed inputs
+(random adjacency/PAD patterns, beam widths, sketch widths spanning the
+popcount→MXU boundary, degenerate rows)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # [test] extra; skip, don't break collection
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.descent_score import ops as ds_ops
+from repro.kernels.descent_score import ref as ds_ref
+from repro.types import NEG_INF, PAD_ID
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.data())
+def test_hop_parity_on_arbitrary_inputs(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    n = data.draw(st.integers(2, 80))
+    kg = data.draw(st.integers(1, 8))
+    kr = data.draw(st.integers(1, 8))
+    W = data.draw(st.sampled_from([1, 2, 4, 64, 65]))
+    q = data.draw(st.integers(1, 20))
+    B = data.draw(st.integers(1, 10))
+
+    # Adjacency with random PAD tails (including fully-PAD rows).
+    g = rng.integers(-1, n, size=(n, kg)).astype(np.int32)
+    r = rng.integers(-1, n, size=(n, kr)).astype(np.int32)
+    dead_rows = rng.random(n) < 0.15
+    g[dead_rows] = PAD_ID
+    w = (rng.integers(0, 2**32, size=(n, W), dtype=np.uint64)
+         & rng.integers(0, 2**32, size=(n, W), dtype=np.uint64)
+         ).astype(np.uint32)
+    c = np.unpackbits(w.view(np.uint8), axis=1).sum(1).astype(np.int32)
+    qw = rng.integers(0, 2**32, size=(q, W),
+                      dtype=np.uint64).astype(np.uint32)
+    qc = np.unpackbits(qw.view(np.uint8), axis=1).sum(1).astype(np.int32)
+    zero_q = rng.random(q) < 0.2          # empty-profile queries
+    qw[zero_q] = 0
+    qc[zero_q] = 0
+
+    # Beams: per-row distinct ids (the merge_topk invariant), PAD tails,
+    # sim-descending, NEG_INF under PAD. Sims need not equal the
+    # estimator's value — the hop must still agree bitwise.
+    bi = np.full((q, B), PAD_ID, np.int32)
+    for i in range(q):
+        m = int(rng.integers(0, min(n, B) + 1))
+        bi[i, :m] = rng.choice(n, size=m, replace=False)
+    bs = np.where(bi == PAD_ID, NEG_INF,
+                  -np.sort(-rng.random((q, B)))).astype(np.float32)
+
+    args = tuple(jnp.asarray(x) for x in (g, r, w, c, qw, qc, bi, bs))
+    ri, rs = ds_ref.descent_hop_ref(*args)
+    ki, ks, nsc = ds_ops.descent_hop(*args, with_counts=True)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+    # The count never exceeds the unfused path's fixed scoring work, and
+    # dead beam rows score nothing.
+    nsc = np.asarray(nsc)
+    assert (nsc <= B * (kg + kr)).all()
+    assert (nsc[(bi == PAD_ID).all(axis=1)] == 0).all()
