@@ -15,11 +15,15 @@ shard_map; ``--devices 0`` forces the single-device vmap fallback.
 continuous rows plus a Poisson-arrival *open-loop* run (requests are
 submitted at their arrival times, not all at once) reporting p50/p95
 under load for wave vs continuous serving — the tail-latency case
-continuous batching exists for. ``--smoke`` shrinks the workload for
-CI: it still exercises build, both serving modes, and insertion, and
-fails loudly (exit 1) if the sharded mode regresses against
-single-device beyond the allowed margins (with ``--continuous``: if
-streaming admission loses results or recall parity with waves).
+continuous batching exists for — both single-device AND under the
+sharded placement (the ``sharded_N_continuous`` block: per-shard slot
+arrays with a release-time cross-shard merge, same Poisson protocol).
+``--smoke`` shrinks the workload for CI: it still exercises build,
+every serving plan, and insertion, and fails loudly (exit 1) if the
+sharded mode regresses against single-device beyond the allowed
+margins (with ``--continuous``: if streaming admission loses results,
+recall parity with waves, or — sharded × continuous — bitwise
+closed-loop equality with the sharded wave).
 """
 from __future__ import annotations
 
@@ -141,7 +145,8 @@ def open_loop(engine: QueryEngine, profiles, rate_qps: float,
 
 def run_continuous(index, profiles, k: int, beam: int, hops: int,
                    slots: int, load: float = 0.85, deep_frac: float = 0.2,
-                   seed: int = 0) -> dict:
+                   seed: int = 0, shards: int = 1,
+                   oversample: float = 1.25) -> dict:
     """Wave vs continuous under identical Poisson load + closed-loop rows.
 
     The open-loop workload is heterogeneous — ``deep_frac`` of the
@@ -149,10 +154,16 @@ def run_continuous(index, profiles, k: int, beam: int, hops: int,
     descent" of the PR motivation). Wave batching convoys every wave
     containing a deep request to the deep budget; continuous serving
     frees each slot at its own budget, which is where the tail-latency
-    gap comes from.
+    gap comes from. ``shards > 1`` runs BOTH modes under the sharded
+    placement (the sharded × continuous plan composition): batching is
+    results-transparent for a fixed placement, so the closed-loop
+    parity check below must hold bitwise — and the smoke gate fails if
+    it drifts by even one bit.
     """
+    place = dict(shards=shards, shard_oversample=oversample)
     cont = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
-                                          continuous=True, slots=slots))
+                                          continuous=True, slots=slots,
+                                          **place))
     closed = _serve_waves(cont, profiles, k)
 
     # A sustained arrival stream (2× the profile set) and a few
@@ -169,8 +180,21 @@ def run_continuous(index, profiles, k: int, beam: int, hops: int,
     # throughput on this mixed workload (one drain = one deep-budget
     # wave), then run below the knee so neither mode saturates outright.
     wave_ol = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
-                                             max_wave=len(stream)))
+                                             max_wave=len(stream),
+                                             **place))
     _warm_wave_capacities(wave_ol, stream, hop_set=(hops, deep_hops))
+    # Closed-loop parity vs wave on the SAME placement: batching must be
+    # results-transparent, i.e. bitwise-equal (ids AND sims) per request.
+    for rid, p in enumerate(profiles):
+        wave_ol.submit(QueryRequest(rid=rid, profile=p))
+    wave_ol.run()
+    wave_closed_recall = wave_ol.recall_vs_brute_force()
+    w_by = {r.rid: r for r in wave_ol.done}
+    c_by = {r.rid: r for r in cont.done[-len(profiles):]}
+    bitwise = all(np.array_equal(w_by[rid].ids, c_by[rid].ids)
+                  and np.array_equal(w_by[rid].sims, c_by[rid].sims)
+                  for rid in c_by)
+    wave_ol.done.clear()
     for rid, p in enumerate(stream):
         wave_ol.submit(QueryRequest(rid=rid, profile=p,
                                     hops=int(budgets[rid])))
@@ -179,7 +203,8 @@ def run_continuous(index, profiles, k: int, beam: int, hops: int,
     rate = max(load * mixed_qps, 1.0)
 
     cont_ol = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
-                                             continuous=True, slots=slots))
+                                             continuous=True, slots=slots,
+                                             **place))
     for rid, p in enumerate(stream[: 2 * slots]):
         cont_ol.submit(QueryRequest(rid=-1 - rid, profile=p))  # warm ticks
     cont_ol.run()
@@ -206,7 +231,14 @@ def run_continuous(index, profiles, k: int, beam: int, hops: int,
     cont_recall = cont_ol.recall_vs_brute_force()
     return {
         "slots": slots,
+        "shards": shards,
+        "plan": cont.plan.describe(),
         "closed_loop": closed,
+        "closed_loop_vs_wave": {
+            "bitwise_equal": bitwise,
+            "recall_delta": round(
+                closed["warm"][f"recall_at_{k}"] - wave_closed_recall, 4),
+        },
         "open_loop_workload": {
             "deep_frac": deep_frac,
             "hops": hops,
@@ -304,9 +336,16 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
     # shared index, so wave and continuous are measured on the same
     # index state and their recall numbers are directly comparable.
     cont = None
+    cont_sharded = None
     if continuous:
         cont = run_continuous(index, profiles, k, beam, hops, slots,
                               seed=seed)
+        # The sharded × continuous plan composition: same Poisson
+        # open-loop protocol, per-shard slot arrays + release-time
+        # cross-shard merge, gated bitwise against the sharded wave.
+        cont_sharded = run_continuous(index, profiles, k, beam, hops,
+                                      slots, seed=seed, shards=shards,
+                                      oversample=oversample)
 
     # Online insertion through the amortized-growth path (single engine;
     # the index is shared, so the sharded engine reshards lazily).
@@ -350,6 +389,8 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
                                   - sg[f"recall_at_{k}"], 4),
         },
         **({"continuous": cont} if cont is not None else {}),
+        **({f"sharded_{shards}_continuous": cont_sharded}
+           if cont_sharded is not None else {}),
     }
 
 
@@ -424,6 +465,22 @@ def main():
             print(f"[query_bench] continuous smoke OK: recall_delta={cd} "
                   f"p95_improvement="
                   f"{rec['continuous']['p95_improvement']}")
+            # Sharded × continuous composition: batching is results-
+            # transparent under a fixed placement, so closed-loop results
+            # must equal the sharded wave BITWISE (recall delta ±0.000).
+            sc = rec[f"sharded_{args.shards}_continuous"]
+            scw = sc["closed_loop_vs_wave"]
+            if not scw["bitwise_equal"] or scw["recall_delta"] != 0.0:
+                print(f"[query_bench] FAIL sharded-continuous drift vs "
+                      f"sharded wave: {scw}", file=sys.stderr)
+                sys.exit(1)
+            scd = sc["open_loop_recall"]["delta"]
+            if abs(scd) > 0.005:
+                print(f"[query_bench] FAIL sharded-continuous open-loop "
+                      f"recall drift: delta={scd}", file=sys.stderr)
+                sys.exit(1)
+            print(f"[query_bench] sharded-continuous smoke OK: "
+                  f"closed-loop bitwise, open-loop recall_delta={scd}")
 
 
 if __name__ == "__main__":

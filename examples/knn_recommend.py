@@ -7,7 +7,15 @@ This is the build → serve path a production deployment takes: the
 recommender never touches the raw graph, only the query engine.
 
     PYTHONPATH=src python examples/knn_recommend.py
+
+``--shards`` / ``--continuous`` / ``--kernel`` select the serving plan
+(placement × batching × scorer, repro/query/plan.py) — the same axes
+the benchmarks measure, so the example can exercise any plan the
+serving stack supports. Recommendation quality is plan-independent for
+a fixed placement (batching and scorer are results-transparent).
 """
+import argparse
+
 import numpy as np
 
 from repro.core.params import C2Params
@@ -20,7 +28,18 @@ from repro.sketch.goldfinger import fingerprint_dataset
 from repro.types import KNNGraph
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve across this many LPT cluster shards")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching")
+    ap.add_argument("--slots", type=int, default=32,
+                    help="in-flight slot capacity in continuous mode")
+    ap.add_argument("--kernel", action="store_true",
+                    help="fused Pallas descent-scoring hop")
+    args = ap.parse_args(argv)
+
     ds = make_dataset("ml1M", scale=0.2, seed=1)
     train, test_rows = train_test_split(ds, test_frac=0.2, seed=1)
     gf = fingerprint_dataset(train)
@@ -28,7 +47,10 @@ def main():
     # Build the servable index once (Step 1–3 + routing tables).
     params = C2Params(k=10, b=256, t=8, max_cluster=120)
     index = build_index(train, params, gf=gf)
-    engine = QueryEngine(index, QueryConfig(k=11, beam=32, hops=3))
+    engine = QueryEngine(index, QueryConfig(
+        k=11, beam=32, hops=3, shards=args.shards,
+        continuous=args.continuous, slots=args.slots, kernel=args.kernel))
+    print(f"serving plan: {engine.plan.describe()}")
 
     # Serve every user's own profile; mask the self-match to recover its
     # neighborhood, exactly what a live recommender would do.

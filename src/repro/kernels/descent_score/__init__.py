@@ -1,1 +1,14 @@
+"""Fused descent-scoring hop (ops) + its jnp oracle (ref).
+
+``ops.descent_hop`` is one ``pallas_call`` per hop — adjacency gather,
+dedup-before-scoring lane suppression, GoldFinger popcount / MXU
+bit-plane scoring, in-register top-k merge — bitwise-identical to
+``ref.descent_hop_ref``. Both are selected by the plan's *scorer* axis
+(``query/plan.py``) and compose with the other two axes through the
+hop's row independence: the wave AND continuous slot programs call it
+directly, and the sharded placement vmaps it over the shard axis (the
+pallas_call batching rule) in both ``sharded._vmapped_descent`` and
+the per-shard slot programs ``search.shard_slot_admit`` /
+``search.shard_slot_hop``.
+"""
 from repro.kernels.descent_score import ops, ref  # noqa: F401

@@ -6,15 +6,20 @@ of unseen query profiles, report QPS / latency / recall vs brute force.
 
 Pass ``--index path.npz`` to serve a previously built artifact
 (``launch/knn_build --index-out``), ``--insert M`` to also exercise
-online insertion before the query wave, ``--shards S`` to serve
-through the LPT cluster shards (shard_map when a device per shard
-exists, vmapped on one device otherwise — see repro/query/sharded.py),
-``--continuous`` to stream requests through the slot-based
-continuous-batching scheduler (``repro/sched/``) instead of closed
-waves — same results, but admission happens mid-descent — and
-``--kernel`` to run each hop through the fused Pallas descent-scoring
-kernel (``repro/kernels/descent_score``; identical results, candidates
-deduped before the estimator runs).
+online insertion before the query wave, and any combination of the
+three plan axes (``repro/query/plan.py`` — the flags compose freely
+and invalid values fail loudly instead of silently dropping a flag):
+
+* ``--shards S`` — placement: LPT cluster shards (shard_map when a
+  device per shard exists, vmapped on one device otherwise — see
+  repro/query/sharded.py; inserts delta-reshard instead of rebuilding);
+* ``--continuous`` — batching: stream requests through the slot-based
+  scheduler (``repro/sched/``) instead of closed waves — same results,
+  but admission happens mid-descent; composes with ``--shards`` (per-
+  shard slot arrays, cross-shard merge at slot release);
+* ``--kernel`` — scorer: the fused Pallas descent-scoring hop
+  (``repro/kernels/descent_score``; identical results, candidates
+  deduped before the estimator runs).
 """
 from __future__ import annotations
 
@@ -77,6 +82,7 @@ def main(argv=None):
         k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
         shards=args.shards, continuous=args.continuous, slots=args.slots,
         kernel=args.kernel))
+    print(f"[serve] plan: {engine.plan.describe()}")
 
     # Unseen profiles from the same distribution (different seed).
     qds = make_dataset(args.dataset, scale=args.scale, seed=args.seed + 1)

@@ -1,25 +1,31 @@
-"""Queue → wave query engine over a :class:`~repro.query.index.KNNIndex`.
+"""Plan-driven query engine over a :class:`~repro.query.index.KNNIndex`.
 
-Modeled on ``serve/engine.py``: requests queue up, are drained in waves
-of up to ``max_wave``, and each wave runs one jitted
-:func:`~repro.query.search.batched_descent`. Wave row-counts and the
-index row-count are padded to power-of-two capacities so each (capacity,
-beam, hops, k) shape compiles once and is reused across waves — the same
-padded-capacity-group discipline as ``core/local_knn.py``.
+The engine is host bookkeeping around ONE serving abstraction: a
+:class:`~repro.query.plan.DescentPlan` — the cross-product of placement
+(single device | N LPT cluster shards), batching (closed waves |
+continuous slots), and scorer (jnp | fused Pallas hop). Every request
+takes the same path: ``submit → plan.step → collect``. The plan owns
+the device state and compiled programs for its combination; this module
+owns the queue, completion records, serving stats, and online mutation
+(insertion + cohort refresh).
+
+:class:`QueryConfig` is the flag-pile-compatible front door (CLI flags
+map straight onto it); :meth:`QueryConfig.spec` maps it onto the
+validated :class:`~repro.query.plan.PlanSpec` the plan is built from —
+unsupported values fail loudly there instead of silently dropping a
+flag.
 
 Online insertion: :meth:`QueryEngine.insert` searches for the new
-profile's neighbors, appends its fingerprint + forward edges to the
-index (O(degree) — the index grows into spare capacity), patches reverse
-edges (bounded-heap displacement), and registers the user in its FRH
-clusters so subsequent queries route to it. Inserted profiles accumulate
-in a *cohort*; once it exceeds ``QueryConfig.refresh_every`` the engine
-re-runs C² clustering on the cohort (:meth:`KNNIndex.refresh_cohort`) so
-drifting insert streams grow fresh routable clusters.
-
-Sharded serving (``QueryConfig.shards > 1``): descent runs per LPT
-cluster shard with a cross-shard top-k merge (repro/query/sharded.py) —
-``shard_map`` over the mesh when a device per shard exists, vmapped on
-one device otherwise.
+profile's neighbors *through the engine's own plan* (the sharded
+placement repairs its per-shard tensors incrementally per version bump
+— ``ShardedDescent.sync`` — so a sharded engine no longer needs the
+full-index device copy inserts used to route through), appends the
+fingerprint + forward edges to the index (O(degree) into spare
+capacity), patches reverse edges, and registers the user with the FRH
+router. Inserted profiles accumulate in a *cohort*; once it exceeds
+``QueryConfig.refresh_every`` the engine re-runs C² clustering on the
+cohort (:meth:`KNNIndex.refresh_cohort`) so drifting insert streams
+grow fresh routable clusters.
 """
 from __future__ import annotations
 
@@ -28,18 +34,14 @@ import time
 from collections import deque
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.local_knn import capacity_of
 from repro.eval.metrics import knn_recall
 from repro.query.index import KNNIndex
+from repro.query.plan import DescentPlan, PlanSpec
 from repro.query.router import (fingerprint_profiles, placements,
-                                profiles_to_csr, route)
-from repro.query.search import (batched_descent, exact_knn, slot_admit,
-                                slot_hop)
-from repro.sched import SlotScheduler
-from repro.types import NEG_INF, PAD_ID
+                                profiles_to_csr)
+from repro.query.search import exact_knn
 
 
 @dataclasses.dataclass
@@ -75,195 +77,56 @@ class QueryConfig:
                                # (kernels/descent_score; bitwise-identical
                                # results, interpret mode off-TPU)
 
-
-class _ContinuousState:
-    """Per-slot state for the continuous-batching path.
-
-    Beam state and query fingerprints are DEVICE-resident at the fixed
-    capacity ``QueryConfig.slots`` — admissions scatter into them
-    (:func:`~repro.query.search.slot_admit`, bucketed to ``admit_cap``
-    rows) and :func:`~repro.query.search.slot_hop` advances them in
-    place, so a steady-state tick moves no per-slot query state across
-    the host boundary. Hop counters and the scheduler stay on host.
-    """
-
-    def __init__(self, index: KNNIndex, qc: QueryConfig):
-        n_slots, beam = qc.slots, max(qc.beam, qc.k)
-        self.beam = beam
-        self.admit_cap = int(np.clip(n_slots // 4, 8, 32))
-        self.seed_cols = index.t * qc.seeds_per_config
-        self.sched = SlotScheduler(n_slots)
-        self.q_words = jnp.zeros((n_slots, index.words.shape[1]),
-                                 jnp.uint32)
-        self.q_card = jnp.zeros(n_slots, jnp.int32)
-        self.beam_ids = jnp.full((n_slots, beam), PAD_ID, jnp.int32)
-        self.beam_sims = jnp.full((n_slots, beam), NEG_INF, jnp.float32)
-        self.hops_done = np.zeros(n_slots, np.int64)
-        self.budget = np.full(n_slots, qc.hops, np.int64)  # per-slot hops
+    def spec(self) -> PlanSpec:
+        """Map the flag pile onto a validated plan on the three axes."""
+        return PlanSpec(
+            placement=self.shards,
+            batching="continuous" if self.continuous else "wave",
+            scorer="pallas" if self.kernel else "jnp",
+            k=self.k, beam=self.beam, hops=self.hops,
+            max_wave=self.max_wave, slots=self.slots,
+            seeds_per_config=self.seeds_per_config,
+            shard_oversample=self.shard_oversample)
 
 
 class QueryEngine:
     def __init__(self, index: KNNIndex, qc: QueryConfig | None = None):
         self.index = index
         self.qc = qc or QueryConfig()
-        if self.qc.continuous and self.qc.shards > 1:
-            raise ValueError(
-                "continuous mode streams through the single-device slot "
-                "program; sharded continuous serving is a ROADMAP item")
+        self.plan = DescentPlan(index, self.qc.spec())
         self.queue: deque[QueryRequest] = deque()
         self.done: list[QueryRequest] = []
         self.n_inserted = 0
         self.n_refreshes = 0
-        self.n_ticks = 0          # continuous slot_step invocations
-        self._dev = None          # (version, n_cap, device arrays)
-        self._sharded = None      # cached ShardedDescent (version keyed)
-        self._cont: _ContinuousState | None = None
         self._cohort: list[tuple[int, np.ndarray]] = []  # (uid, profile)
 
-    # -- device state ------------------------------------------------------
+    @property
+    def n_ticks(self) -> int:
+        """Continuous slot-step invocations (0 for wave plans)."""
+        return self.plan.n_ticks
 
-    def _sync(self):
-        """Device copies of the index, padded to a power-of-two row count.
-
-        Stale copies are repaired incrementally when possible: an insert
-        touches only the new row plus its patched neighbors (the index
-        journals them — :meth:`KNNIndex.rows_changed_since`), so those
-        rows are scattered into the resident device arrays instead of
-        re-padding and re-uploading all n rows per version bump. The full
-        upload happens only on first use, capacity crossings, or after
-        enough mutations that the journal no longer helps."""
-        ix = self.index
-        if self._dev is not None and self._dev[0] == ix.version:
-            return self._dev[2]
-        n, cap = ix.n, capacity_of(ix.n, minimum=64)
-        if self._dev is not None and self._dev[1] == cap:
-            changed = ix.rows_changed_since(self._dev[0])
-            if changed is not None and len(changed) <= max(64, n // 8):
-                arrays = self._dev[2]
-                if changed:
-                    rows = np.fromiter(sorted(changed), dtype=np.int64,
-                                       count=len(changed))
-                    idx = jnp.asarray(rows)
-                    g, r, w, c = arrays
-                    arrays = (
-                        g.at[idx].set(jnp.asarray(ix.graph_ids[rows])),
-                        r.at[idx].set(jnp.asarray(ix.rev_ids[rows])),
-                        w.at[idx].set(jnp.asarray(ix.words[rows])),
-                        c.at[idx].set(jnp.asarray(ix.card[rows])),
-                    )
-                self._dev = (ix.version, cap, arrays)
-                return arrays
-        pad = cap - n
-        arrays = (
-            jnp.asarray(np.pad(ix.graph_ids, ((0, pad), (0, 0)),
-                               constant_values=PAD_ID)),
-            jnp.asarray(np.pad(ix.rev_ids, ((0, pad), (0, 0)),
-                               constant_values=PAD_ID)),
-            jnp.asarray(np.pad(ix.words, ((0, pad), (0, 0)))),
-            jnp.asarray(np.pad(ix.card, (0, pad))),
-        )
-        self._dev = (ix.version, cap, arrays)
-        return arrays
-
-    def _sync_sharded(self):
-        """Cached per-shard subgraphs; rebuilt lazily after mutations, so
-        an insert burst costs one reshard at the next query wave."""
-        from repro.query.sharded import ShardedDescent
-
-        ix = self.index
-        if (self._sharded is None
-                or self._sharded.version != ix.version
-                or self._sharded.n_shards != self.qc.shards):
-            self._sharded = ShardedDescent(
-                ix, self.qc.shards, oversample=self.qc.shard_oversample)
-        return self._sharded
-
-    def sharded_state(self):
-        """The current ShardedDescent (built on demand), or None when the
-        engine serves single-device. Public accessor for diagnostics."""
-        return self._sync_sharded() if self.qc.shards > 1 else None
-
-    # -- core batched path -------------------------------------------------
+    # -- batched search (the plan's raw wave program) ----------------------
 
     def query_batch(self, profiles, k: int | None = None,
                     hops: int | None = None):
         """Answer a batch of raw profiles: (ids int32[q, k], sims f32[q, k])."""
-        items, offsets = profiles_to_csr(profiles)
-        qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
-                                   self.index.fp_seed)
-        return self._descend(items, offsets, qgf, k or self.qc.k, hops=hops)
+        return self.plan.query_batch(profiles, k=k, hops=hops)
 
-    def _descend(self, items, offsets, qgf, k: int, placed=None,
-                 single: bool = False, hops: int | None = None):
-        """Route + beam-descend already-fingerprinted query profiles.
+    def sharded_state(self):
+        """The plan's delta-synced ShardedDescent (built on demand), or
+        None when it serves single-device. Public accessor for
+        diagnostics."""
+        return self.plan.sharded_state()
 
-        ``single=True`` forces the single-device path even when the
-        engine serves sharded — used by :meth:`insert`, whose neighbor
-        search must not trigger a full reshard per version bump.
-        """
-        qc = self.qc
-        beam = max(qc.beam, k)
-        hops = qc.hops if hops is None else hops
-        seeds = route(self.index, items, offsets, qc.seeds_per_config,
-                      placed=placed)
-        qn = len(offsets) - 1
-        qcap = capacity_of(qn, minimum=8)
-        qw = np.zeros((qcap, qgf.words.shape[1]), dtype=np.uint32)
-        qw[:qn] = qgf.words
-        qcard = np.zeros(qcap, dtype=np.int32)
-        qcard[:qn] = qgf.card
-        qseeds = np.full((qcap, seeds.shape[1]), PAD_ID, dtype=np.int32)
-        qseeds[:qn] = seeds
-        if qc.shards > 1 and not single:
-            ids, sims = self._sync_sharded().descend(
-                qw, qcard, qseeds, k=k, beam=beam, hops=hops,
-                kernel=qc.kernel)
-        else:
-            graph_ids, rev_ids, words, card = self._sync()
-            ids, sims = batched_descent(
-                graph_ids, rev_ids, words, card,
-                jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
-                k=k, beam=beam, hops=hops, kernel=qc.kernel)
-        return np.asarray(ids)[:qn], np.asarray(sims)[:qn]
-
-    # -- queue / wave serving ----------------------------------------------
+    # -- queue / serving loop ----------------------------------------------
 
     def submit(self, req: QueryRequest):
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
-    def _next_wave(self) -> list[QueryRequest]:
-        wave = []
-        while self.queue and len(wave) < self.qc.max_wave:
-            wave.append(self.queue.popleft())
-        return wave
-
-    def _serve_wave(self) -> int:
-        """Close one wave from the queue; returns requests completed.
-
-        A wave runs to the MAX hop budget of its members (the compiled
-        program has one static hop count) — one deep request convoys
-        every shallow request behind it. Continuous mode per-slot hop
-        budgets are the fix.
-        """
-        wave = self._next_wave()
-        if not wave:
-            return 0
-        hops = max(r.hops if r.hops is not None else self.qc.hops
-                   for r in wave)
-        ids, sims = self.query_batch([r.profile for r in wave], hops=hops)
-        now = time.perf_counter()
-        for j, r in enumerate(wave):
-            r.ids, r.sims = ids[j], sims[j]
-            r.t_done = now
-            self.done.append(r)
-        return len(wave)
-
     def busy(self) -> bool:
         """True while requests are queued or (continuous) in flight."""
-        if self.queue:
-            return True
-        return self._cont is not None and self._cont.sched.has_work()
+        return bool(self.queue) or self.plan.busy()
 
     def step(self) -> int:
         """Serve one scheduler step — one wave, or one continuous tick.
@@ -271,130 +134,38 @@ class QueryEngine:
         The open-loop benchmark drives this directly so arrivals can be
         interleaved with service; :meth:`run` loops it until drained.
         """
-        return self.tick() if self.qc.continuous else self._serve_wave()
-
-    # -- continuous (slot) serving -----------------------------------------
-
-    def _cont_state(self) -> _ContinuousState:
-        if self._cont is None:
-            self._cont = _ContinuousState(self.index, self.qc)
-        return self._cont
+        return self.plan.step(self.queue, self.done)
 
     def tick(self) -> int:
-        """One continuous tick: admit into free slots, advance every
-        in-flight beam one hop, complete converged/exhausted slots.
-
-        Returns the number of requests completed this tick. Admission is
-        mid-flight: rows freed by a previous tick take fresh requests
-        while the remaining rows keep descending — no wave barrier.
-        """
-        qc = self.qc
-        st = self._cont_state()
-        sched = st.sched
-        while self.queue:
-            sched.submit(self.queue.popleft())
-        graph_ids, rev_ids, words, card = self._sync()
-        n_done = 0
-        admitted = sched.admit()
-        while admitted:
-            items, offsets = profiles_to_csr([r.profile for _, r in admitted])
-            qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
-                                       self.index.fp_seed)
-            seeds = route(self.index, items, offsets, qc.seeds_per_config)
-            A = st.admit_cap
-            for lo in range(0, len(admitted), A):
-                chunk = admitted[lo:lo + A]
-                new_w = np.zeros((A, st.q_words.shape[1]), np.uint32)
-                new_c = np.zeros(A, np.int32)
-                new_s = np.full((A, st.seed_cols), PAD_ID, np.int32)
-                # n_slots = one-past-the-end sentinel; the admit scatter
-                # drops those rows (mode="drop").
-                idx = np.full(A, sched.n_slots, np.int32)
-                for j, (slot, req) in enumerate(chunk):
-                    new_w[j] = qgf.words[lo + j]
-                    new_c[j] = int(qgf.card[lo + j])
-                    new_s[j] = seeds[lo + j]
-                    idx[j] = slot
-                    st.hops_done[slot] = 0
-                    st.budget[slot] = (req.hops if req.hops is not None
-                                       else qc.hops)
-                st.q_words, st.q_card, st.beam_ids, st.beam_sims = \
-                    slot_admit(words, card, jnp.asarray(new_w),
-                               jnp.asarray(new_c), jnp.asarray(new_s),
-                               jnp.asarray(idx), st.q_words, st.q_card,
-                               st.beam_ids, st.beam_sims, beam=st.beam)
-            # A zero-hop budget completes on its seed-initialized beam
-            # without entering the hop (wave parity: a hops=0 wave runs a
-            # length-0 scan). The freed slots may admit further queued
-            # requests, hence the loop.
-            zero = [(s, r) for s, r in admitted if st.budget[s] <= 0]
-            if not zero:
-                break
-            bids = np.asarray(st.beam_ids)
-            bsims = np.asarray(st.beam_sims)
-            now = time.perf_counter()
-            for slot, req in zero:
-                sched.release(slot)
-                req.ids = bids[slot, : qc.k].copy()
-                req.sims = bsims[slot, : qc.k].copy()
-                req.t_done = now
-                self.done.append(req)
-                n_done += 1
-            admitted = sched.admit()
-        active = sched.active_mask()
-        if not active.any():
-            return n_done
-        st.beam_ids, st.beam_sims, changed = slot_hop(
-            graph_ids, rev_ids, words, card, st.q_words, st.q_card,
-            st.beam_ids, st.beam_sims, jnp.asarray(active),
-            kernel=qc.kernel)
-        st.hops_done[active] += 1
-        self.n_ticks += 1
-        finished = active & (
-            (st.hops_done >= st.budget) | ~np.asarray(changed))
-        if not finished.any():
-            return n_done
-        # The beam is sim-descending, deduped, and PAD-masked (merge_topk
-        # output), so the final top-k is its prefix — byte-identical to
-        # the wave kernel's closing merge_topk(beam, k).
-        bids = np.asarray(st.beam_ids)
-        bsims = np.asarray(st.beam_sims)
-        now = time.perf_counter()
-        for slot in np.flatnonzero(finished):
-            req = sched.release(int(slot))
-            req.ids = bids[slot, : qc.k].copy()
-            req.sims = bsims[slot, : qc.k].copy()
-            req.t_done = now
-            self.done.append(req)
-            n_done += 1
-        return n_done
+        """One continuous tick (alias of :meth:`step` for slot plans)."""
+        if not self.qc.continuous:
+            raise ValueError("tick() is the continuous step; this engine "
+                             f"serves {self.plan.describe()}")
+        return self.step()
 
     def run(self, on_tick=None) -> dict:
-        """Drain the queue (waves, or continuous ticks when
-        ``QueryConfig.continuous``); returns aggregate serving stats.
+        """Drain the queue through the plan; returns aggregate stats.
 
-        ``on_tick`` (continuous only): host callback ``f(engine, tick)``
-        invoked between scheduler steps — the hook the interleaved
-        insert-under-load tests (and any mid-stream mutation) use.
+        ``on_tick`` (continuous plans only): host callback
+        ``f(engine, tick)`` invoked between scheduler steps — the hook
+        the interleaved insert-under-load tests (and any mid-stream
+        mutation) use.
         """
         t0 = time.perf_counter()
         n_steps = 0
         n_new_done = 0
-        if self.qc.continuous:
-            while self.busy():
-                if on_tick is not None:
-                    on_tick(self, n_steps)
-                n_new_done += self.tick()
-                n_steps += 1
-        else:
-            while self.queue:
-                n_new_done += self._serve_wave()
-                n_steps += 1
+        continuous = self.qc.continuous
+        while self.busy():
+            if continuous and on_tick is not None:
+                on_tick(self, n_steps)
+            n_new_done += self.step()
+            n_steps += 1
         dt = max(time.perf_counter() - t0, 1e-9)
         lats = [r.latency for r in self.done[-n_new_done:]] if n_new_done else []
         return {
             "requests": n_new_done,
-            "mode": "continuous" if self.qc.continuous else "wave",
+            "mode": "continuous" if continuous else "wave",
+            "plan": self.plan.describe(),
             "waves": n_steps,
             "qps": n_new_done / dt,
             "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
@@ -412,20 +183,17 @@ class QueryEngine:
 
         Links the user via its own search result (graph-degree k), then
         registers it with the FRH router so later queries seed from it.
+        The neighbor search runs through the engine's own plan: under a
+        sharded placement each insert costs one O(degree) delta reshard
+        (row + membership journals), NOT a rebuild — and no full-index
+        device copy is ever materialized.
         """
         ix = self.index
         items, offsets = profiles_to_csr([profile])
         qgf = fingerprint_profiles(items, offsets, ix.n_bits, ix.fp_seed)
         placed = placements(ix, items, offsets)
-        # Single-device search: each insert bumps the index version, and
-        # searching through the sharded path would rebuild the whole
-        # shard state per insert. The reshard happens once, lazily, at
-        # the next sharded query wave. Cost of this choice: a sharded
-        # engine that inserts holds BOTH the full device copy (repaired
-        # incrementally per insert) and the per-shard subgraphs — ~2x
-        # index memory; see the resharding follow-up in ROADMAP.md.
-        ids, sims = self._descend(items, offsets, qgf, ix.k, placed=placed,
-                                  single=True)
+        ids, sims = self.plan.search(items, offsets, qgf, ix.k,
+                                     placed=placed)
         u = ix.append_user(np.asarray(qgf.words)[0], int(qgf.card[0]),
                            ids[0], sims[0])
         for matched in placed[0]:

@@ -92,6 +92,20 @@ class KNNIndex:
         # re-uploading the whole index per insert.
         self._row_log: list[tuple[int, tuple[int, ...]]] = []
         self._row_log_base = self.version
+        # Journal of cluster-membership additions: (version, cluster, uid)
+        # per registration — the membership counterpart of the row journal,
+        # consumed by the sharded placement's delta reshard
+        # (query/sharded.py) to grow per-shard resident sets without
+        # re-deriving the whole plan. Membership is append-only, so the
+        # journal fully determines residency growth.
+        self._member_log: list[tuple[int, int, int]] = []
+        # Readers replay entries >= their synced version (see
+        # members_added_since), so the reachability floor sits one BELOW
+        # the current version — unlike the row journal, whose replay is
+        # strictly >. After a trim the floor is the last dropped entry's
+        # version itself: entries logged AT that version may be split
+        # across the drop boundary, so readers synced there must resync.
+        self._member_log_base = self.version - 1
 
     # -- row buffers (views over spare capacity) ---------------------------
 
@@ -176,6 +190,34 @@ class KNNIndex:
 
     def add_cluster_member(self, ci: int, user: int):
         self._extra_members.setdefault(ci, []).append(int(user))
+        self._log_member(ci, user)
+
+    def _log_member(self, ci: int, user: int):
+        self._member_log.append((self.version, int(ci), int(user)))
+        if len(self._member_log) > 8192:  # bounded, like the row journal
+            drop = self._member_log[:4096]
+            self._member_log = self._member_log[4096:]
+            self._member_log_base = drop[-1][0]
+
+    def members_added_since(self, version: int
+                            ) -> list[tuple[int, int]] | None:
+        """(cluster, uid) registrations after ``version`` in order, or
+        None when the membership journal no longer reaches back that far
+        (caller must re-derive residency from the full cluster tables).
+
+        Entries logged at exactly ``version`` are included: membership
+        registration does not bump :attr:`version` by itself (the row
+        append or cohort refresh around it does), so a reader synced to
+        version v has seen the rows of v but not members logged *at* v
+        afterwards. Registrations always precede or accompany a version
+        bump, so replaying ``> version - 1`` never misses one and the
+        (idempotent) union absorbs any replayed duplicates. The trimmed
+        floor is accordingly inclusive: a trim can split the entries of
+        its boundary version, so readers synced at (or below) it resync.
+        """
+        if version <= self._member_log_base:
+            return None
+        return [(ci, u) for v, ci, u in self._member_log if v >= version]
 
     # -- online insertion --------------------------------------------------
 
@@ -298,6 +340,10 @@ class KNNIndex:
                     new_paths.append((cfg, path))
                     new_members.append(users)
         if new_members:
+            base_ci = self.n_clusters
+            for i, mem in enumerate(new_members):  # journal new clusters
+                for u in mem:
+                    self._log_member(base_ci + i, int(u))
             depth = self.cluster_paths.shape[1] if self.n_clusters else \
                 self.split_depth
             add_paths = np.full((len(new_paths), depth), NO_HASH,

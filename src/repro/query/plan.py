@@ -1,0 +1,493 @@
+"""Composable descent plans: placement × batching × scorer.
+
+A :class:`DescentPlan` is the one serving abstraction behind
+:class:`~repro.query.engine.QueryEngine`. Where the engine used to
+enumerate hand-rolled paths (single-device wave, continuous slots,
+sharded wave) a plan is the CROSS-PRODUCT of three independent axes:
+
+* **placement** — ``1`` (single device) or ``N`` LPT cluster shards
+  (``query/sharded.py``: owner-partitioned seeds, per-shard local
+  subgraphs, cross-shard top-k merge);
+* **batching** — ``"wave"`` (closed batches, one jitted program per
+  wave capacity) or ``"continuous"`` (slot scheduler from ``sched/``,
+  streaming admission, per-slot hop budgets);
+* **scorer** — ``"jnp"`` (unfused reference hop) or ``"pallas"`` (the
+  fused ``kernels/descent_score`` hop; bitwise-identical results).
+
+Any combination is a valid plan; every axis composes with every other
+because the hop itself is row-independent (``query/search.py``) — the
+shard axis vmaps over it, the slot axis scatters into it, and the
+scorer swaps inside it. Each plan compiles one program per (plan,
+shape) — tagged with :attr:`PlanSpec.key` in the ``sched.trace``
+counters so ``trace.compile_count(plan.key)`` can assert compile-once
+across admissions and reshards — and OWNS its device state:
+
+* single placement: journal-repaired padded index copies (the former
+  ``QueryEngine._sync``);
+* sharded placement: a delta-reshardable
+  :class:`~repro.query.sharded.ShardedDescent` — no full-index device
+  copy exists in sharded mode (which halves sharded serving's index
+  memory vs the pre-plan engine).
+
+Result invariants (locked down by ``tests/test_plan.py``): for a fixed
+placement, batching and scorer NEVER change a result — continuous ==
+wave and pallas == jnp, bitwise on (ids, sims). Placement is the one
+axis that trades results for scale (disjoint seed basins + dropped
+cross-shard edges), and it does so identically under every batching ×
+scorer combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.local_knn import capacity_of
+from repro.query.index import KNNIndex
+from repro.query.router import (fingerprint_profiles, placements,
+                                profiles_to_csr, route)
+from repro.query.search import (batched_descent, shard_slot_admit,
+                                shard_slot_hop, shard_slot_topk,
+                                slot_admit, slot_hop)
+from repro.sched import SlotScheduler
+from repro.types import NEG_INF, PAD_ID
+
+BATCHINGS = ("wave", "continuous")
+SCORERS = ("jnp", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """Static description of a descent plan (hashable, validated).
+
+    ``QueryConfig.spec()`` maps the engine's flag pile onto one of
+    these; benchmarks and tests can also build them directly.
+    """
+
+    placement: int = 1          # shards (1 = single device)
+    batching: str = "wave"      # "wave" | "continuous"
+    scorer: str = "jnp"         # "jnp" | "pallas"
+    k: int = 10
+    beam: int = 32
+    hops: int = 3
+    max_wave: int = 256         # wave batching: queries per program
+    slots: int = 32             # continuous batching: in-flight capacity
+    seeds_per_config: int = 16
+    shard_oversample: float = 1.5
+
+    def __post_init__(self):
+        if self.placement < 1:
+            raise ValueError(
+                f"plan placement must be >= 1 shard, got {self.placement}")
+        if self.batching not in BATCHINGS:
+            raise ValueError(
+                f"unknown batching {self.batching!r}; supported: "
+                f"{BATCHINGS} (every batching composes with every "
+                f"placement and scorer)")
+        if self.scorer not in SCORERS:
+            raise ValueError(
+                f"unknown scorer {self.scorer!r}; supported: {SCORERS}")
+        if self.batching == "continuous" and self.slots < 1:
+            raise ValueError(f"continuous plans need slots >= 1, "
+                             f"got {self.slots}")
+        if self.batching == "wave" and self.max_wave < 1:
+            raise ValueError(f"wave plans need max_wave >= 1, "
+                             f"got {self.max_wave}")
+        if self.k < 1 or self.hops < 0:
+            raise ValueError(f"invalid k={self.k} / hops={self.hops}")
+
+    @property
+    def kernel(self) -> bool:
+        return self.scorer == "pallas"
+
+    @property
+    def key(self) -> tuple:
+        """The plan's identity on the serving axes — the jit-trace tag
+        (``sched.trace.compile_count``) and the bench row key."""
+        return (self.placement, self.batching, self.scorer)
+
+    def describe(self) -> str:
+        place = ("single" if self.placement == 1
+                 else f"sharded({self.placement})")
+        batch = ("wave" if self.batching == "wave"
+                 else f"continuous(slots={self.slots})")
+        return f"{place} x {batch} x {self.scorer}"
+
+
+class _SlotState:
+    """Device-resident per-slot state for a continuous plan.
+
+    Mirrors PR 3's single-device slot arrays, with one twist: under a
+    sharded placement the beams carry a leading shard axis
+    (``[S, n_slots, shard_beam]``) — every shard advances its own beam
+    per slot, and the cross-shard merge happens at release time. Query
+    fingerprints, hop counters, and the scheduler stay shard-agnostic.
+    """
+
+    def __init__(self, index: KNNIndex, spec: PlanSpec, beam: int,
+                 pin=None):
+        n_slots = spec.slots
+        self.beam = beam
+        self.admit_cap = int(np.clip(n_slots // 4, 8, 32))
+        self.seed_cols = index.t * spec.seeds_per_config
+        self.sched = SlotScheduler(n_slots)
+        self.q_words = jnp.zeros((n_slots, index.words.shape[1]),
+                                 jnp.uint32)
+        self.q_card = jnp.zeros(n_slots, jnp.int32)
+        if spec.placement > 1:
+            shape = (spec.placement, n_slots, beam)
+        else:
+            shape = (n_slots, beam)
+        beam_ids = np.full(shape, PAD_ID, np.int32)
+        beam_sims = np.full(shape, NEG_INF, np.float32)
+        # On a mesh, per-shard beams live on their shard's device.
+        self.beam_ids = pin(beam_ids) if pin else jnp.asarray(beam_ids)
+        self.beam_sims = pin(beam_sims) if pin else jnp.asarray(beam_sims)
+        self.hops_done = np.zeros(n_slots, np.int64)
+        self.budget = np.full(n_slots, spec.hops, np.int64)
+
+
+class DescentPlan:
+    """One placement × batching × scorer combination, compiled once per
+    shape, owning its device state and serving loop.
+
+    The engine's whole serving surface is ``submit → plan.step(queue,
+    done) → collect``; ``search``/``query_batch`` expose the raw wave
+    program (used for insert searches and benchmarks under any plan).
+    """
+
+    def __init__(self, index: KNNIndex, spec: PlanSpec):
+        self.index = index
+        self.spec = spec
+        self.key = spec.key
+        self.beam = max(spec.beam, spec.k)
+        self._single = None     # (version, cap, device arrays)
+        self._sharded = None    # ShardedDescent (delta-synced)
+        self._slots: Optional[_SlotState] = None
+        self.n_ticks = 0
+
+    def describe(self) -> str:
+        return self.spec.describe()
+
+    # -- device state ------------------------------------------------------
+
+    def sync(self):
+        """Repair this plan's device state to the index's version.
+
+        Single placement: journal-driven row scatter into the padded
+        full-index copy. Sharded placement: delta reshard
+        (:meth:`ShardedDescent.sync`) — the plan never materializes a
+        full-index device copy in sharded mode.
+        """
+        if self.spec.placement > 1:
+            return self._sync_sharded()
+        return self._sync_single()
+
+    def _sync_single(self):
+        """Device copies of the index, padded to a power-of-two row count.
+
+        Stale copies are repaired incrementally when possible: an insert
+        touches only the new row plus its patched neighbors (the index
+        journals them — :meth:`KNNIndex.rows_changed_since`), so those
+        rows are scattered into the resident device arrays instead of
+        re-padding and re-uploading all n rows per version bump. The full
+        upload happens only on first use, capacity crossings, or after
+        enough mutations that the journal no longer helps."""
+        ix = self.index
+        if self._single is not None and self._single[0] == ix.version:
+            return self._single[2]
+        n, cap = ix.n, capacity_of(ix.n, minimum=64)
+        if self._single is not None and self._single[1] == cap:
+            changed = ix.rows_changed_since(self._single[0])
+            if changed is not None and len(changed) <= max(64, n // 8):
+                arrays = self._single[2]
+                if changed:
+                    rows = np.fromiter(sorted(changed), dtype=np.int64,
+                                       count=len(changed))
+                    idx = jnp.asarray(rows)
+                    g, r, w, c = arrays
+                    arrays = (
+                        g.at[idx].set(jnp.asarray(ix.graph_ids[rows])),
+                        r.at[idx].set(jnp.asarray(ix.rev_ids[rows])),
+                        w.at[idx].set(jnp.asarray(ix.words[rows])),
+                        c.at[idx].set(jnp.asarray(ix.card[rows])),
+                    )
+                self._single = (ix.version, cap, arrays)
+                return arrays
+        pad = cap - n
+        arrays = (
+            jnp.asarray(np.pad(ix.graph_ids, ((0, pad), (0, 0)),
+                               constant_values=PAD_ID)),
+            jnp.asarray(np.pad(ix.rev_ids, ((0, pad), (0, 0)),
+                               constant_values=PAD_ID)),
+            jnp.asarray(np.pad(ix.words, ((0, pad), (0, 0)))),
+            jnp.asarray(np.pad(ix.card, (0, pad))),
+        )
+        self._single = (ix.version, cap, arrays)
+        return arrays
+
+    def _sync_sharded(self):
+        from repro.query.sharded import ShardedDescent
+
+        if (self._sharded is None
+                or self._sharded.n_shards != self.spec.placement):
+            self._sharded = ShardedDescent(
+                self.index, self.spec.placement,
+                oversample=self.spec.shard_oversample)
+        else:
+            self._sharded.sync()
+        return self._sharded
+
+    def sharded_state(self):
+        """The delta-synced ShardedDescent, or None for single-device
+        placements. Public accessor for diagnostics."""
+        return self._sync_sharded() if self.spec.placement > 1 else None
+
+    # -- raw wave-program search (any plan; insert + benchmarks use it) ----
+
+    def search(self, items, offsets, qgf, k: int, *,
+               hops: int | None = None, placed=None):
+        """Route + beam-descend already-fingerprinted query profiles
+        through this plan's placement (one closed wave, whatever the
+        plan's batching — the raw batch API)."""
+        spec = self.spec
+        beam = max(self.beam, k)
+        hops = spec.hops if hops is None else hops
+        seeds = route(self.index, items, offsets, spec.seeds_per_config,
+                      placed=placed)
+        qn = len(offsets) - 1
+        qcap = capacity_of(qn, minimum=8)
+        qw = np.zeros((qcap, qgf.words.shape[1]), dtype=np.uint32)
+        qw[:qn] = qgf.words
+        qcard = np.zeros(qcap, dtype=np.int32)
+        qcard[:qn] = qgf.card
+        qseeds = np.full((qcap, seeds.shape[1]), PAD_ID, dtype=np.int32)
+        qseeds[:qn] = seeds
+        if spec.placement > 1:
+            ids, sims = self._sync_sharded().descend(
+                qw, qcard, qseeds, k=k, beam=beam, hops=hops,
+                kernel=spec.kernel, tag=self.key)
+        else:
+            graph_ids, rev_ids, words, card = self._sync_single()
+            ids, sims = batched_descent(
+                graph_ids, rev_ids, words, card,
+                jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
+                k=k, beam=beam, hops=hops, kernel=spec.kernel,
+                tag=self.key)
+        return np.asarray(ids)[:qn], np.asarray(sims)[:qn]
+
+    def query_batch(self, profiles, k: int | None = None,
+                    hops: int | None = None):
+        """Answer raw profiles: (ids int32[q, k], sims float32[q, k])."""
+        items, offsets = profiles_to_csr(profiles)
+        qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
+                                   self.index.fp_seed)
+        return self.search(items, offsets, qgf, k or self.spec.k,
+                           hops=hops)
+
+    # -- the serving loop --------------------------------------------------
+
+    @property
+    def scheduler(self) -> Optional[SlotScheduler]:
+        """The continuous slot scheduler (None for wave plans)."""
+        return self._slots.sched if self._slots is not None else None
+
+    def busy(self) -> bool:
+        """True while this plan holds in-flight work (continuous slots)."""
+        return self._slots is not None and self._slots.sched.has_work()
+
+    def step(self, queue, done) -> int:
+        """Serve one scheduler step — one wave, or one continuous tick.
+
+        Drains/admits from ``queue`` (a deque of QueryRequest-likes),
+        appends completed requests to ``done`` with results + ``t_done``
+        stamped, and returns how many completed. This is the ONLY
+        serving path: every placement × batching × scorer combination
+        goes through it.
+        """
+        if self.spec.batching == "continuous":
+            return self._step_continuous(queue, done)
+        return self._step_wave(queue, done)
+
+    # -- wave batching -----------------------------------------------------
+
+    def _step_wave(self, queue, done) -> int:
+        """Close one wave from the queue; returns requests completed.
+
+        A wave runs to the MAX hop budget of its members (the compiled
+        program has one static hop count) — one deep request convoys
+        every shallow request behind it. Continuous batching's per-slot
+        hop budgets are the fix.
+        """
+        wave = []
+        while queue and len(wave) < self.spec.max_wave:
+            wave.append(queue.popleft())
+        if not wave:
+            return 0
+        hops = max(r.hops if r.hops is not None else self.spec.hops
+                   for r in wave)
+        ids, sims = self.query_batch([r.profile for r in wave], hops=hops)
+        now = time.perf_counter()
+        for j, r in enumerate(wave):
+            r.ids, r.sims = ids[j], sims[j]
+            r.t_done = now
+            done.append(r)
+        return len(wave)
+
+    # -- continuous batching -----------------------------------------------
+
+    def _slot_state(self) -> _SlotState:
+        if self._slots is None:
+            beam = self.beam
+            pin = None
+            if self.spec.placement > 1:
+                sd = self._sync_sharded()
+                beam = sd.shard_beam(self.beam, self.spec.k)
+                if sd.mesh is not None:
+                    pin = sd._pin
+            self._slots = _SlotState(self.index, self.spec, beam, pin=pin)
+        return self._slots
+
+    def _slot_results(self, st: _SlotState):
+        """(ids int32[n_slots, k], sims f32[n_slots, k]) host snapshots.
+
+        Single placement: the beam is canonical, so top-k is its prefix.
+        Sharded placement: per-shard prefixes merged cross-shard in
+        global ids (:func:`~repro.query.search.shard_slot_topk`) —
+        byte-identical to the wave path's closing merges either way.
+        """
+        k = self.spec.k
+        if self.spec.placement > 1:
+            ids, sims = shard_slot_topk(self._sharded._dev[4], st.beam_ids,
+                                        st.beam_sims, k=k, tag=self.key)
+            return np.asarray(ids), np.asarray(sims)
+        return (np.asarray(st.beam_ids)[:, :k],
+                np.asarray(st.beam_sims)[:, :k])
+
+    def _admit(self, st: _SlotState, admitted) -> None:
+        """Scatter an admission generation into the slot arrays,
+        bucketed to ``admit_cap`` rows so one program compiles per
+        bucket shape no matter how requests stream in."""
+        spec = self.spec
+        items, offsets = profiles_to_csr([r.profile for _, r in admitted])
+        qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
+                                   self.index.fp_seed)
+        seeds = route(self.index, items, offsets, spec.seeds_per_config)
+        A = st.admit_cap
+        sharded = spec.placement > 1
+        for lo in range(0, len(admitted), A):
+            chunk = admitted[lo:lo + A]
+            new_w = np.zeros((A, st.q_words.shape[1]), np.uint32)
+            new_c = np.zeros(A, np.int32)
+            new_s = np.full((A, st.seed_cols), PAD_ID, np.int32)
+            # n_slots = one-past-the-end sentinel; the admit scatter
+            # drops those rows (mode="drop").
+            idx = np.full(A, st.sched.n_slots, np.int32)
+            for j, (slot, req) in enumerate(chunk):
+                new_w[j] = qgf.words[lo + j]
+                new_c[j] = int(qgf.card[lo + j])
+                new_s[j] = seeds[lo + j]
+                idx[j] = slot
+                st.hops_done[slot] = 0
+                st.budget[slot] = (req.hops if req.hops is not None
+                                   else spec.hops)
+            if sharded:
+                l_seeds = self._sharded.shard_seeds(new_s)  # [S, A, cols]
+                st.q_words, st.q_card, st.beam_ids, st.beam_sims = \
+                    shard_slot_admit(
+                        self._sharded._dev[2], self._sharded._dev[3],
+                        jnp.asarray(new_w), jnp.asarray(new_c),
+                        jnp.asarray(l_seeds), jnp.asarray(idx),
+                        st.q_words, st.q_card, st.beam_ids, st.beam_sims,
+                        beam=st.beam, tag=self.key)
+            else:
+                words, card = self._sync_single()[2:4]
+                st.q_words, st.q_card, st.beam_ids, st.beam_sims = \
+                    slot_admit(words, card, jnp.asarray(new_w),
+                               jnp.asarray(new_c), jnp.asarray(new_s),
+                               jnp.asarray(idx), st.q_words, st.q_card,
+                               st.beam_ids, st.beam_sims, beam=st.beam,
+                               tag=self.key)
+
+    def _step_continuous(self, queue, done) -> int:
+        """One continuous tick: admit into free slots, advance every
+        in-flight beam one hop, complete converged/exhausted slots.
+
+        Returns the number of requests completed this tick. Admission is
+        mid-flight: rows freed by a previous tick take fresh requests
+        while the remaining rows keep descending — no wave barrier.
+        """
+        spec = self.spec
+        self.sync()  # placement state must be current before any program
+        had_state = self._slots is not None
+        st = self._slot_state()
+        if spec.placement > 1:
+            # A reshard since the last tick may have relabeled shard-
+            # local ids (per-shard rematerialization after a cohort
+            # refresh); in-flight beams hold locals, so relabel them too.
+            remap = self._sharded.take_beam_remap()
+            if remap is not None and had_state:
+                mp = jnp.asarray(remap)
+                safe = jnp.where(st.beam_ids == PAD_ID, 0, st.beam_ids)
+                st.beam_ids = jnp.where(
+                    st.beam_ids == PAD_ID, PAD_ID,
+                    jax.vmap(lambda m, b: m[b])(mp, safe))
+        sched = st.sched
+        while queue:
+            sched.submit(queue.popleft())
+        n_done = 0
+        admitted = sched.admit()
+        while admitted:
+            self._admit(st, admitted)
+            # A zero-hop budget completes on its seed-initialized beam
+            # without entering the hop (wave parity: a hops=0 wave runs a
+            # length-0 scan). The freed slots may admit further queued
+            # requests, hence the loop.
+            zero = [(s, r) for s, r in admitted if st.budget[s] <= 0]
+            if not zero:
+                break
+            ids, sims = self._slot_results(st)
+            now = time.perf_counter()
+            for slot, req in zero:
+                sched.release(slot)
+                req.ids = ids[slot].copy()
+                req.sims = sims[slot].copy()
+                req.t_done = now
+                done.append(req)
+                n_done += 1
+            admitted = sched.admit()
+        active = sched.active_mask()
+        if not active.any():
+            return n_done
+        if spec.placement > 1:
+            sd = self._sharded
+            st.beam_ids, st.beam_sims, changed = shard_slot_hop(
+                *sd._dev[:4], st.q_words, st.q_card,
+                st.beam_ids, st.beam_sims, jnp.asarray(active),
+                kernel=spec.kernel, tag=self.key)
+        else:
+            graph_ids, rev_ids, words, card = self._sync_single()
+            st.beam_ids, st.beam_sims, changed = slot_hop(
+                graph_ids, rev_ids, words, card, st.q_words, st.q_card,
+                st.beam_ids, st.beam_sims, jnp.asarray(active),
+                kernel=spec.kernel, tag=self.key)
+        st.hops_done[active] += 1
+        self.n_ticks += 1
+        finished = active & (
+            (st.hops_done >= st.budget) | ~np.asarray(changed))
+        if not finished.any():
+            return n_done
+        ids, sims = self._slot_results(st)
+        now = time.perf_counter()
+        slots = np.flatnonzero(finished)
+        for slot, req in zip(slots, sched.release_many(slots)):
+            req.ids = ids[slot].copy()
+            req.sims = sims[slot].copy()
+            req.t_done = now
+            done.append(req)
+            n_done += 1
+        return n_done

@@ -74,7 +74,8 @@ def descent_step(graph_ids, rev_ids, words, card,
 
 def descent_kernel(graph_ids, rev_ids, words, card,
                    q_words, q_card, seed_ids, *,
-                   k: int, beam: int, hops: int, kernel: bool = False):
+                   k: int, beam: int, hops: int, kernel: bool = False,
+                   tag=None):
     """Beam search over the index graph for a wave of queries.
 
     graph_ids int32[n, kg], rev_ids int32[n, r]: forward/reverse adjacency.
@@ -86,8 +87,14 @@ def descent_kernel(graph_ids, rev_ids, words, card,
     Composed from :func:`descent_init` + ``hops`` × :func:`descent_step`
     (the continuous path runs the same pieces tick-by-tick). Unjitted so
     callers can compose it (``batched_descent`` jits it directly;
-    ``query/sharded.py`` vmaps/shard_maps it over shards).
+    ``query/sharded.py`` vmaps/shard_maps it over shards). ``tag`` is a
+    hashable plan key recorded in the jit-trace counters
+    (``sched.trace.compile_count``) when set; composing callers pass
+    ``None`` and bump their own outer-program key instead.
     """
+    if tag is not None:
+        trace.bump(("query_wave", tag, q_words.shape[0],
+                    graph_ids.shape[0], k, beam, hops, kernel))
     beam_ids, beam_sims = descent_init(
         words, card, q_words, q_card, seed_ids, beam=beam)
 
@@ -101,14 +108,16 @@ def descent_kernel(graph_ids, rev_ids, words, card,
 
 
 batched_descent = functools.partial(
-    jax.jit, static_argnames=("k", "beam", "hops", "kernel"))(descent_kernel)
+    jax.jit,
+    static_argnames=("k", "beam", "hops", "kernel", "tag"))(descent_kernel)
 
 
-@functools.partial(jax.jit, static_argnames=("beam",),
+@functools.partial(jax.jit, static_argnames=("beam", "tag"),
                    donate_argnames=("q_words", "q_card",
                                     "beam_ids", "beam_sims"))
 def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
-               q_words, q_card, beam_ids, beam_sims, *, beam: int):
+               q_words, q_card, beam_ids, beam_sims, *, beam: int,
+               tag=None):
     """Admit up to A requests into the persistent slot state.
 
     ``new_*`` are A-row admission buckets (A is a small fixed capacity,
@@ -121,7 +130,7 @@ def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
     device-resident ``q_words``/``q_card`` so subsequent hops never
     re-upload per-slot query state.
     """
-    trace.bump(("query_slot_admit", new_words.shape[0],
+    trace.bump(("query_slot_admit", tag, new_words.shape[0],
                 beam_ids.shape[0], beam))
     init_ids, init_sims = descent_init(
         words, card, new_words, new_card, new_seeds, beam=beam)
@@ -131,11 +140,11 @@ def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
             beam_sims.at[slot_idx].set(init_sims, mode="drop"))
 
 
-@functools.partial(jax.jit, static_argnames=("kernel",),
+@functools.partial(jax.jit, static_argnames=("kernel", "tag"),
                    donate_argnames=("beam_ids", "beam_sims"))
 def slot_hop(graph_ids, rev_ids, words, card,
              q_words, q_card, beam_ids, beam_sims, active, *,
-             kernel: bool = False):
+             kernel: bool = False, tag=None):
     """One continuous-batching tick over the fixed slot array.
 
     All slot-axis inputs have the static capacity ``n_slots`` so one
@@ -152,8 +161,8 @@ def slot_hop(graph_ids, rev_ids, words, card,
     change again, so the host may complete the request early without
     affecting its result (exact wave equivalence).
     """
-    trace.bump(("query_slot_hop", beam_ids.shape[0], beam_ids.shape[1],
-                graph_ids.shape[0], kernel))
+    trace.bump(("query_slot_hop", tag, beam_ids.shape[0],
+                beam_ids.shape[1], graph_ids.shape[0], kernel))
     nids, nsims = descent_step(graph_ids, rev_ids, words, card,
                                q_words, q_card, beam_ids, beam_sims,
                                kernel=kernel)
@@ -161,6 +170,109 @@ def slot_hop(graph_ids, rev_ids, words, card,
     out_ids = jnp.where(active[:, None], nids, beam_ids)
     out_sims = jnp.where(active[:, None], nsims, beam_sims)
     return out_ids, out_sims, changed
+
+
+# -- shard-axis slot programs (sharded × continuous composition) -----------
+#
+# The single-device slot programs above lift verbatim over a leading
+# shard axis: every shard keeps its OWN per-slot beam over its local
+# subgraph (beam_ids/beam_sims are [S, n_slots, shard_beam]), while the
+# query fingerprints and the host-side scheduler stay shard-agnostic —
+# one SlotScheduler drives all S per-shard slot arrays in lockstep. The
+# cross-shard merge happens only at slot-release time
+# (:func:`shard_slot_topk`), reproducing the wave path's per-shard
+# ``merge_topk(beam, k)`` + ``_merge_shard_topk`` byte for byte, so a
+# sharded continuous plan returns bitwise-identical results to the
+# sharded wave plan. On a mesh the shard axis arrives pre-sharded
+# (NamedSharding over "shards") and GSPMD partitions the vmap; on one
+# device it is an ordinary batch axis.
+
+
+@functools.partial(jax.jit, static_argnames=("beam", "tag"),
+                   donate_argnames=("q_words", "q_card",
+                                    "beam_ids", "beam_sims"))
+def shard_slot_admit(l_words, l_card, new_words, new_card, new_seeds,
+                     slot_idx, q_words, q_card, beam_ids, beam_sims, *,
+                     beam: int, tag=None):
+    """Admit up to A requests into every shard's persistent slot state.
+
+    ``new_seeds`` int32[S, A, cols] are OWNER-PARTITIONED shard-local
+    seeds (:meth:`~repro.query.sharded.ShardedDescent.shard_seeds` of
+    the admission bucket): each shard re-initializes its slot rows from
+    the seeds it owns, exactly as the sharded wave path seeds its
+    per-shard descent. Unused bucket rows carry slot ``n_slots`` and are
+    dropped by the scatter, as in :func:`slot_admit`.
+    """
+    trace.bump(("query_shard_slot_admit", tag, l_words.shape[0],
+                new_words.shape[0], beam_ids.shape[1], beam))
+
+    def per_shard(words, card, seeds, bids, bsims):
+        init_ids, init_sims = descent_init(
+            words, card, new_words, new_card, seeds, beam=beam)
+        return (bids.at[slot_idx].set(init_ids, mode="drop"),
+                bsims.at[slot_idx].set(init_sims, mode="drop"))
+
+    beam_ids, beam_sims = jax.vmap(per_shard)(
+        l_words, l_card, new_seeds, beam_ids, beam_sims)
+    return (q_words.at[slot_idx].set(new_words, mode="drop"),
+            q_card.at[slot_idx].set(new_card, mode="drop"),
+            beam_ids, beam_sims)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "tag"),
+                   donate_argnames=("beam_ids", "beam_sims"))
+def shard_slot_hop(l_graph, l_rev, l_words, l_card, q_words, q_card,
+                   beam_ids, beam_sims, active, *,
+                   kernel: bool = False, tag=None):
+    """One continuous tick over every shard's fixed slot array.
+
+    The per-shard hop is :func:`descent_step` vmapped over the shard
+    axis (the fused Pallas hop batches through its pallas_call batching
+    rule, as in the sharded wave path). ``changed[i]`` is False only
+    when slot i's beam reached a fixed point on EVERY shard — each
+    shard's hop is a deterministic function of its own beam, so a slot
+    whose beams are all unchanged can never change again and the host
+    may release it early with wave-identical results.
+    """
+    trace.bump(("query_shard_slot_hop", tag, l_graph.shape[0],
+                beam_ids.shape[1], beam_ids.shape[2], l_graph.shape[1],
+                kernel))
+
+    def per_shard(g, r, w, c, bids, bsims):
+        nids, nsims = descent_step(g, r, w, c, q_words, q_card,
+                                   bids, bsims, kernel=kernel)
+        changed = jnp.any(nids != bids, axis=1)
+        return (jnp.where(active[:, None], nids, bids),
+                jnp.where(active[:, None], nsims, bsims), changed)
+
+    beam_ids, beam_sims, changed = jax.vmap(per_shard)(
+        l_graph, l_rev, l_words, l_card, beam_ids, beam_sims)
+    return beam_ids, beam_sims, jnp.any(changed, axis=0) & active
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tag"))
+def shard_slot_topk(l2g, beam_ids, beam_sims, *, k: int, tag=None):
+    """Cross-shard top-k of every slot's per-shard beams, in global ids.
+
+    Each shard's beam is canonical (sim-descending, deduped, PAD-masked
+    — merge_topk output), so its top-k is its k-prefix — byte-identical
+    to the wave path's per-shard closing ``merge_topk(beam, k)``. The
+    prefixes are remapped local→global and merged shard-major, exactly
+    mirroring ``sharded._merge_shard_topk`` — which is what makes the
+    sharded continuous plan bitwise-equal to the sharded wave plan.
+    Returns (ids int32[n_slots, k], sims float32[n_slots, k]).
+    """
+    trace.bump(("query_shard_slot_topk", tag, l2g.shape[0],
+                beam_ids.shape[1], k))
+    ids_k = beam_ids[:, :, :k]
+    sims_k = beam_sims[:, :, :k]
+    safe = jnp.where(ids_k == PAD_ID, 0, ids_k)
+    gids = jax.vmap(lambda m, ids, s: jnp.where(ids == PAD_ID, PAD_ID,
+                                                m[s]))(l2g, ids_k, safe)
+    S, n_slots, kk = gids.shape
+    flat_ids = jnp.swapaxes(gids, 0, 1).reshape(n_slots, S * kk)
+    flat_sims = jnp.swapaxes(sims_k, 0, 1).reshape(n_slots, S * kk)
+    return merge_topk(flat_ids, flat_sims, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

@@ -30,6 +30,26 @@ at k): the fleet's total frontier stays ~``oversample ×`` the
 single-device configuration, but every ``top_k`` row is ``n_shards ×``
 narrower — which is what makes the vmapped CPU path competitive and the
 mesh path a near-linear scale-out.
+
+Incremental resharding (:meth:`ShardedDescent.sync`): the partition is
+FROZEN at construction and *extended* — never re-balanced — as the index
+mutates, mirroring the online-update discipline of Debatty et al.'s
+incremental graph building. New clusters go round-robin to shards, new
+users to their home shard ``u % S`` plus wherever their clusters live,
+and both rules are pure functions of (base plan, current index), so a
+delta-maintained state is bitwise-equal to a from-scratch
+rematerialization under :func:`extend_plan` (property-tested in
+``tests/test_plan.py``). An insert burst therefore costs one O(degree)
+row scatter per shard — consuming the same row journal the single-device
+sync uses (:meth:`KNNIndex.rows_changed_since`) plus the membership
+journal (:meth:`KNNIndex.members_added_since`) — instead of a
+full-tensor rebuild, and the serving programs keep their compiled shapes
+(capacity rows double geometrically, like the index's own buffers). Full
+per-shard rematerialization happens only when a *pre-existing* user
+gains residency (cohort refresh registering it in a new cluster — its
+in-edges must be remapped, and bounded reverse adjacency cannot name
+them all), when capacity crosses a doubling boundary, or when a journal
+no longer reaches back to the synced version.
 """
 from __future__ import annotations
 
@@ -45,6 +65,7 @@ from repro.core.local_knn import capacity_of
 from repro.knn.topk import merge_topk
 from repro.query.index import KNNIndex
 from repro.query.search import descent_kernel
+from repro.sched import trace
 from repro.types import PAD_ID
 
 
@@ -57,6 +78,11 @@ class ShardPlan:
     residents: list[np.ndarray]   # sorted unique global user ids per shard
     owner: np.ndarray             # int64[n] — the one shard seeding each user
     imbalance: float              # max/mean assigned cluster-size load
+
+    @property
+    def base_n(self) -> int:
+        """Users covered by this plan (== index.n when it was derived)."""
+        return len(self.owner)
 
 
 def plan_shards(index: KNNIndex, n_shards: int) -> ShardPlan:
@@ -104,12 +130,51 @@ def plan_shards(index: KNNIndex, n_shards: int) -> ShardPlan:
                      residents=residents, owner=owner, imbalance=imbalance)
 
 
+def extend_plan(base: ShardPlan, index: KNNIndex) -> ShardPlan:
+    """Extend a frozen partition to the index's current state.
+
+    The base assignment never re-balances (that would reshuffle resident
+    tensors wholesale); growth follows deterministic rules that are pure
+    functions of (base, current index) — so incremental journal-driven
+    extension and this one-shot re-derivation agree exactly:
+
+    * clusters unseen by ``base`` go round-robin: shard ``ci % S``;
+    * users unseen by ``base`` live on (and are owned by) their home
+      shard ``u % S``, plus every shard whose clusters register them;
+    * membership is append-only, so resident sets only grow — a user
+      never migrates off a shard until a fresh :func:`plan_shards`.
+    """
+    S = base.n_shards
+    base_nc = len(base.cluster_shard)
+    n = index.n
+    cluster_shard = np.concatenate([
+        base.cluster_shard,
+        np.arange(base_nc, index.n_clusters, dtype=np.int64) % S])
+    owner = np.concatenate([
+        base.owner, np.arange(base.base_n, n, dtype=np.int64) % S])
+    home = np.arange(base.base_n, n, dtype=np.int64)
+    residents = []
+    for s in range(S):
+        parts = [base.residents[s], home[home % S == s]]
+        for ci in np.flatnonzero(cluster_shard == s):
+            mem = index.cluster_users(int(ci)).astype(np.int64)
+            parts.append(mem[(mem >= 0) & (mem < n)])
+        residents.append(np.unique(np.concatenate(parts)))
+    sizes = index.cluster_sizes().astype(np.float64)
+    loads = lpt_loads(sizes, cluster_shard, S)
+    imbalance = float(loads.max() / max(loads.mean(), 1e-9))
+    return ShardPlan(n_shards=S, cluster_shard=cluster_shard,
+                     residents=residents, owner=owner, imbalance=imbalance)
+
+
 class ShardedDescent:
     """Per-shard local subgraphs + the descent/merge program over them.
 
-    Rebuilt when the index version changes (the engine caches one per
-    (version, n_shards), so an insert burst costs one rebuild at the next
-    query wave, not one per insert).
+    Owned by a :class:`~repro.query.plan.DescentPlan`'s sharded
+    placement; :meth:`sync` repairs the resident tensors incrementally
+    after index mutations (see the module docstring) so an insert burst
+    costs row scatters, not a rebuild — and a sharded engine never holds
+    a full-index device copy.
     """
 
     def __init__(self, index: KNNIndex, n_shards: int,
@@ -118,53 +183,236 @@ class ShardedDescent:
         assert n_shards >= 1
         self.index = index
         self.oversample = oversample
-        self.plan = plan or plan_shards(index, n_shards)
+        self.base_plan = plan or plan_shards(index, n_shards)
+        self.plan = self.base_plan
         S = self.plan.n_shards
-        n = index.n
-        cap = max(capacity_of(len(r), minimum=64)
-                  for r in self.plan.residents)
-        kg, kr = index.k, index.rev_ids.shape[1]
-        W = index.words.shape[1]
-
-        l2g = np.full((S, cap), PAD_ID, dtype=np.int32)
-        g2l = np.full((S, n), PAD_ID, dtype=np.int32)
-        l_graph = np.full((S, cap, kg), PAD_ID, dtype=np.int32)
-        l_rev = np.full((S, cap, kr), PAD_ID, dtype=np.int32)
-        l_words = np.zeros((S, cap, W), dtype=np.uint32)
-        l_card = np.zeros((S, cap), dtype=np.int32)
-        for s, res in enumerate(self.plan.residents):
-            m = len(res)
-            l2g[s, :m] = res
-            g2l[s, res] = np.arange(m, dtype=np.int32)
-            l_graph[s, :m] = self._remap(g2l[s], index.graph_ids[res])
-            l_rev[s, :m] = self._remap(g2l[s], index.rev_ids[res])
-            l_words[s, :m] = index.words[res]
-            l_card[s, :m] = index.card[res]
-        self._g2l = g2l
-        self.version = index.version
         if use_mesh is None:  # auto: one device per shard when available
             use_mesh = S > 1 and jax.device_count() >= S
         self.mesh = None
-        arrays = (l_graph, l_rev, l_words, l_card, l2g)
+        self._sharding = None
         if use_mesh:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
             self.mesh = jax.sharding.Mesh(
                 np.asarray(jax.devices()[:S]), ("shards",))
-            # Pin each shard's subgraph to its device ONCE — per-call
-            # resharding would move the whole index every wave.
-            self._dev = tuple(
-                jax.device_put(a, NamedSharding(
-                    self.mesh, P("shards", *([None] * (a.ndim - 1)))))
-                for a in arrays)
-        else:
-            self._dev = tuple(jnp.asarray(a) for a in arrays)
+            self._sharding = lambda ndim: NamedSharding(
+                self.mesh, P("shards", *([None] * (ndim - 1))))
+        # Pending old-local → new-local id remap for in-flight slot
+        # beams ([S, cap-at-snapshot] or None); see take_beam_remap().
+        self._beam_remap: np.ndarray | None = None
+        self._materialize()
+
+    # -- tensor materialization / repair -----------------------------------
 
     @staticmethod
     def _remap(g2l_row: np.ndarray, ids: np.ndarray) -> np.ndarray:
         """Global → shard-local ids; non-resident targets become PAD."""
         safe = np.where(ids == PAD_ID, 0, ids)
         return np.where(ids == PAD_ID, PAD_ID, g2l_row[safe])
+
+    def _shard_block(self, s: int, cap: int):
+        """Host tensors of shard ``s`` at ``cap`` rows (rebuild unit)."""
+        ix = self.index
+        res = self.plan.residents[s]
+        m = len(res)
+        kg, kr = ix.k, ix.rev_ids.shape[1]
+        W = ix.words.shape[1]
+        l2g = np.full(cap, PAD_ID, dtype=np.int32)
+        l2g[:m] = res
+        # Capacity-width (not n-width): the map then grows only on the
+        # index's own doubling boundaries, so per-insert delta syncs
+        # never re-copy the whole [S, n] table.
+        g2l = np.full(ix.capacity, PAD_ID, dtype=np.int32)
+        g2l[res] = np.arange(m, dtype=np.int32)
+        graph = np.full((cap, kg), PAD_ID, dtype=np.int32)
+        rev = np.full((cap, kr), PAD_ID, dtype=np.int32)
+        words = np.zeros((cap, W), dtype=np.uint32)
+        card = np.zeros(cap, dtype=np.int32)
+        graph[:m] = self._remap(g2l, ix.graph_ids[res])
+        rev[:m] = self._remap(g2l, ix.rev_ids[res])
+        words[:m] = ix.words[res]
+        card[:m] = ix.card[res]
+        return l2g, g2l, graph, rev, words, card
+
+    def _materialize(self):
+        """Full (re)build of every shard's resident tensors.
+
+        First use, capacity crossings, and journal-expiry fall back here;
+        steady-state mutations go through :meth:`sync`'s delta path. Each
+        shard's subgraph is pinned to its device once when a mesh is
+        active — per-call resharding would move the whole index every
+        wave.
+        """
+        ix = self.index
+        S = self.plan.n_shards
+        cap = max(capacity_of(len(r), minimum=64)
+                  for r in self.plan.residents)
+        self.cap = cap
+        blocks = [self._shard_block(s, cap) for s in range(S)]
+        self._g2l = np.stack([b[1] for b in blocks])
+        arrays = (
+            np.stack([b[2] for b in blocks]),   # l_graph
+            np.stack([b[3] for b in blocks]),   # l_rev
+            np.stack([b[4] for b in blocks]),   # l_words
+            np.stack([b[5] for b in blocks]),   # l_card
+            np.stack([b[0] for b in blocks]),   # l2g
+        )
+        self._dev = tuple(self._pin(a) for a in arrays)
+        self.version = ix.version
+        self._n_seen = ix.n
+
+    def _pin(self, a):
+        if self._sharding is not None:
+            return jax.device_put(a, self._sharding(np.ndim(a)))
+        return jnp.asarray(a)
+
+    def sync(self) -> str:
+        """Repair device state to the index's current version.
+
+        Returns "noop" | "delta" | "rebuild". The delta path consumes
+        the index's row + membership journals and scatters only touched
+        rows into affected shards; see the module docstring for when a
+        rebuild (full or per-shard) is forced instead.
+        """
+        ix = self.index
+        if self.version == ix.version:
+            return "noop"
+        # Snapshot the local→global map before any mutation: if local
+        # ids shift (per-shard rematerialization), in-flight slot beams
+        # hold stale locals and need the old→new remap this produces.
+        old_l2g = np.asarray(self._dev[4])
+        rows = ix.rows_changed_since(self.version)
+        mems = ix.members_added_since(self.version)
+        if rows is None or mems is None:  # journal expired
+            self.plan = extend_plan(self.base_plan, ix)
+            self._materialize()
+            self._record_remap(old_l2g)
+            return "rebuild"
+        old_n = self._n_seen
+        S = self.plan.n_shards
+        # Incremental plan extension (== extend_plan(base_plan, ix);
+        # the bitwise-vs-rebuild property test locks this equality down).
+        cluster_shard = np.concatenate([
+            self.plan.cluster_shard,
+            np.arange(len(self.plan.cluster_shard), ix.n_clusters,
+                      dtype=np.int64) % S])
+        owner = np.concatenate([
+            self.plan.owner, np.arange(old_n, ix.n, dtype=np.int64) % S])
+        g2l = self._g2l
+        if g2l.shape[1] < ix.n:  # index crossed a doubling boundary
+            g2l = np.pad(g2l, ((0, 0), (0, ix.capacity - g2l.shape[1])),
+                         constant_values=PAD_ID)
+        adds: list[set[int]] = [set() for _ in range(S)]
+        for u in range(old_n, ix.n):
+            adds[u % S].add(u)
+        for ci, u in mems:
+            s = int(cluster_shard[ci])
+            if g2l[s, u] == PAD_ID:
+                adds[s].add(u)
+        residents = []
+        stale: list[int] = []  # shards whose old rows need a remap pass
+        for s in range(S):
+            new = np.array(sorted(a for a in adds[s]
+                                  if g2l[s, a] == PAD_ID), dtype=np.int64)
+            if len(new) and new[0] < old_n:
+                # A pre-existing user gained residency here (cohort
+                # refresh): its in-edges on this shard predate the row
+                # journal window, so the whole shard remaps.
+                stale.append(s)
+                residents.append(np.unique(
+                    np.concatenate([self.plan.residents[s], new])))
+            elif len(new):
+                residents.append(
+                    np.concatenate([self.plan.residents[s], new]))
+            else:
+                residents.append(self.plan.residents[s])
+        # Imbalance stays stale on the delta path (cluster_sizes +
+        # lpt_loads are O(members) host work per sync — per INSERT under
+        # a sharded engine); rebuilds and extend_plan refresh it.
+        self.plan = ShardPlan(
+            n_shards=S, cluster_shard=cluster_shard, residents=residents,
+            owner=owner, imbalance=self.plan.imbalance)
+        cap = max(capacity_of(len(r), minimum=64) for r in residents)
+        if cap != self.cap:  # doubling boundary: shapes change anyway
+            self._materialize()
+            self._record_remap(old_l2g)
+            return "rebuild"
+        self._g2l = g2l
+        dev = list(self._dev)
+        for s in range(S):
+            if s in stale:
+                l2g_b, g2l_b, graph, rev, words, card = \
+                    self._shard_block(s, cap)
+                self._g2l[s] = g2l_b
+                updates = (graph, rev, words, card, l2g_b)
+                dev = [a.at[s].set(jnp.asarray(u))
+                       for a, u in zip(dev, updates)]
+                continue
+            res = residents[s]
+            # Delta adds are all fresh rows (ids >= old_n) here, so the
+            # sorted resident array grew by pure appends — existing
+            # local indices are untouched.
+            new = res[np.searchsorted(res, old_n):]
+            m_old = len(res) - len(new)
+            if len(new):
+                self._g2l[s, new] = np.arange(m_old, len(res),
+                                              dtype=np.int32)
+            # Touched rows resident here: journaled mutations + the new
+            # rows themselves (their adjacency may also reference other
+            # fresh residents, so remap with the UPDATED g2l).
+            touch = np.array(sorted({int(r) for r in rows
+                                     if g2l_local(self._g2l[s], r)}
+                                    | set(int(u) for u in new)),
+                             dtype=np.int64)
+            if not len(touch):
+                continue
+            loc = self._g2l[s, touch]
+            li = jnp.asarray(loc.astype(np.int32))
+            gr = self._remap(self._g2l[s], ix.graph_ids[touch])
+            rv = self._remap(self._g2l[s], ix.rev_ids[touch])
+            dev[0] = dev[0].at[s, li].set(jnp.asarray(gr))
+            dev[1] = dev[1].at[s, li].set(jnp.asarray(rv))
+            dev[2] = dev[2].at[s, li].set(jnp.asarray(ix.words[touch]))
+            dev[3] = dev[3].at[s, li].set(jnp.asarray(ix.card[touch]))
+            dev[4] = dev[4].at[s, li].set(
+                jnp.asarray(touch.astype(np.int32)))
+        if self._sharding is not None:  # keep the per-device pinning
+            dev = [a if a.sharding == self._sharding(a.ndim)
+                   else jax.device_put(a, self._sharding(a.ndim))
+                   for a in dev]
+        self._dev = tuple(dev)
+        self.version = ix.version
+        self._n_seen = ix.n
+        if stale:  # locals shifted on the rematerialized shards
+            self._record_remap(old_l2g)
+        return "delta"
+
+    def _record_remap(self, old_l2g: np.ndarray):
+        """Accumulate an old-local → new-local id map after a reshard
+        that may have shifted local ids. Residency is monotone, so every
+        previously-resident row still has a local id — the map is total
+        on live lanes (PAD stays PAD)."""
+        S = old_l2g.shape[0]
+        rows = np.arange(S)[:, None]
+        safe = np.where(old_l2g == PAD_ID, 0, old_l2g)
+        mp = np.where(old_l2g == PAD_ID, PAD_ID, self._g2l[rows, safe])
+        if self._beam_remap is not None:  # compose with an unconsumed map
+            prev = self._beam_remap
+            psafe = np.where(prev == PAD_ID, 0, prev)
+            mp = np.where(prev == PAD_ID, PAD_ID, mp[rows, psafe])
+        self._beam_remap = mp.astype(np.int32)
+
+    def take_beam_remap(self) -> np.ndarray | None:
+        """Consume the pending old→new local-id map (int32[S, old_cap]),
+        or None when local ids were stable since the last take. The
+        continuous plan applies it to in-flight per-shard slot beams
+        before the next hop — beam *contents* (global identity + sims)
+        are unchanged, only their local labels move, so results stay
+        bitwise wave-identical across mid-stream reshards."""
+        mp, self._beam_remap = self._beam_remap, None
+        return mp
+
+    # -- serving -----------------------------------------------------------
 
     @property
     def n_shards(self) -> int:
@@ -186,28 +434,39 @@ class ShardedDescent:
         return np.where(owned, local, PAD_ID)
 
     def descend(self, q_words, q_card, seeds: np.ndarray, *,
-                k: int, beam: int, hops: int, kernel: bool = False):
+                k: int, beam: int, hops: int, kernel: bool = False,
+                tag=None):
         """Route-seeded descent on every shard + cross-shard top-k merge.
 
         ``seeds`` are global ids (router output, PAD padded); ``beam`` is
         the single-device frontier width, divided among shards (with
         ``self.oversample`` slack, floored at k). ``kernel`` selects the
-        fused Pallas hop (bitwise-identical results). Returns
-        (ids int32[q, k], sims float32[q, k]) in global ids.
+        fused Pallas hop (bitwise-identical results). ``tag`` (a
+        hashable plan key) lands in the jit-trace counter so
+        ``sched.trace.compile_count`` can assert compile-once per plan.
+        Returns (ids int32[q, k], sims float32[q, k]) in global ids.
         """
         l_seeds = jnp.asarray(self.shard_seeds(seeds))
-        shard_beam = max(
-            k, int(np.ceil(self.oversample * beam / self.n_shards)))
+        shard_beam = self.shard_beam(beam, k)
         args = (*self._dev, jnp.asarray(q_words), jnp.asarray(q_card),
                 l_seeds)
         if self.mesh is not None:
             program = _mesh_program(self.mesh, k=k, beam=shard_beam,
-                                    hops=hops, kernel=kernel)
+                                    hops=hops, kernel=kernel, tag=tag)
             ids, sims = program(*args)
         else:
             ids, sims = _vmapped_descent(*args, k=k, beam=shard_beam,
-                                         hops=hops, kernel=kernel)
+                                         hops=hops, kernel=kernel, tag=tag)
         return _merge_shard_topk(ids, sims, k)
+
+    def shard_beam(self, beam: int, k: int) -> int:
+        """Per-shard frontier width for a fleet-level ``beam``."""
+        return max(k, int(np.ceil(self.oversample * beam / self.n_shards)))
+
+
+def g2l_local(g2l_row: np.ndarray, r: int) -> bool:
+    """True when global row ``r`` is resident in this shard's map."""
+    return r < len(g2l_row) and g2l_row[r] != PAD_ID
 
 
 def _per_shard(graph, rev, words, card, l2g, q_words, q_card, seeds,
@@ -220,12 +479,15 @@ def _per_shard(graph, rev, words, card, l2g, q_words, q_card, seeds,
     return jnp.where(ids == PAD_ID, PAD_ID, l2g[safe]), sims
 
 
-@functools.partial(jax.jit, static_argnames=("k", "beam", "hops", "kernel"))
+@functools.partial(jax.jit,
+                   static_argnames=("k", "beam", "hops", "kernel", "tag"))
 def _vmapped_descent(l_graph, l_rev, l_words, l_card, l2g,
                      q_words, q_card, l_seeds, *, k, beam, hops,
-                     kernel=False):
+                     kernel=False, tag=None):
     """Single-device fallback: the shard axis is a vmap axis (the fused
     Pallas hop batches through its pallas_call batching rule)."""
+    trace.bump(("query_wave_sharded", tag, l_graph.shape[0],
+                q_words.shape[0], k, beam, hops, kernel))
     return jax.vmap(
         lambda g, r, w, c, m, s: _per_shard(
             g, r, w, c, m, q_words, q_card, s, k=k, beam=beam, hops=hops,
@@ -234,7 +496,7 @@ def _vmapped_descent(l_graph, l_rev, l_words, l_card, l2g,
 
 
 @functools.lru_cache(maxsize=64)
-def _mesh_program(mesh, *, k, beam, hops, kernel=False):
+def _mesh_program(mesh, *, k, beam, hops, kernel=False, tag=None):
     """SPMD path: one shard per device, no collectives inside (the merge
     happens after the shard-parallel top-k, mirroring
     distributed_local_knn's reduce phase). Returns a jitted callable.
@@ -247,6 +509,8 @@ def _mesh_program(mesh, *, k, beam, hops, kernel=False):
     from jax.sharding import PartitionSpec as P
 
     def device_fn(g, r, w, c, m, qw, qc, s):
+        trace.bump(("query_wave_sharded", tag, len(mesh.devices),
+                    qw.shape[0], k, beam, hops, kernel))
         ids, sims = _per_shard(g[0], r[0], w[0], c[0], m[0], qw, qc, s[0],
                                k=k, beam=beam, hops=hops, kernel=kernel)
         return ids[None], sims[None]

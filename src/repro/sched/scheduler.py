@@ -84,6 +84,11 @@ class SlotScheduler:
         self.n_completed += 1
         return item
 
+    def release_many(self, slots) -> list[Any]:
+        """Free several completed slots; returns their occupants in the
+        given slot order (one completion batch of a continuous tick)."""
+        return [self.release(int(s)) for s in slots]
+
     # -- introspection -----------------------------------------------------
 
     def occupant(self, slot: int) -> Optional[Any]:

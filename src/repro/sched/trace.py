@@ -32,6 +32,21 @@ def count(key: Hashable) -> int:
     return _TRACES[key]
 
 
+def compile_count(plan_key: Hashable) -> int:
+    """Total traces of every program tagged with ``plan_key``.
+
+    Plan-owned programs (``query/plan.py`` via ``query/search.py`` /
+    ``query/sharded.py``) embed the plan's identity tuple
+    (:attr:`~repro.query.plan.PlanSpec.key`) in their bump keys; this
+    sums the trace counts of every key carrying that tag, whatever the
+    program or shape. ``tests/test_plan.py`` / ``tests/test_continuous``
+    assert the total goes flat after warmup — compile-once per plan
+    across admission interleavings AND delta reshards.
+    """
+    return sum(v for k, v in _TRACES.items()
+               if isinstance(k, tuple) and any(e == plan_key for e in k))
+
+
 def counts(prefix: str | None = None) -> dict:
     """Snapshot of all counters, optionally filtered by key[0] == prefix."""
     if prefix is None:

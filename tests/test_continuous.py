@@ -158,30 +158,23 @@ def test_query_continuous_kernel_matches_jnp_wave(index, query_profiles):
 
 def test_query_slot_step_compiles_once_across_admissions(index,
                                                          query_profiles):
-    """One step program per (slots, beam, index capacity); admission
-    interleavings never retrace it."""
+    """One step program per (plan, shape); admission interleavings never
+    retrace it — asserted through ``trace.compile_count`` on the plan's
+    key, which sums every program tagged with the plan's
+    (placement, batching, scorer) identity."""
     qc = QueryConfig(k=K, beam=BEAM, hops=HOPS, continuous=True, slots=6)
     engine = QueryEngine(index, qc)
-    beam = max(qc.beam, qc.k)
+    assert engine.plan.key == (1, "continuous", "jnp")
 
-    def count(prefix, slot_pos, want):
-        return sum(v for k, v in trace.counts(prefix).items()
-                   if k[slot_pos] == want)
-
-    def hops():   # step program traces for this (slots, beam)
-        return count("query_slot_hop", 1, 6)
-
-    def admits():  # admission program traces for this slot capacity
-        return count("query_slot_admit", 2, 6)
-
-    base_h, base_a = hops(), admits()
-    # First run may compile the programs — at most once each (another
-    # test in this process may already have warmed the jit cache).
+    base = trace.compile_count(engine.plan.key)
+    # First run may compile the slot programs — at most one admit shape
+    # plus one hop shape (another test in this process may already have
+    # warmed some shapes of this plan key).
     _submit_all(engine, query_profiles[:9])
     engine.run()
-    after_h, after_a = hops(), admits()
-    assert after_h <= base_h + 1
-    assert after_a <= base_a + 1
+    after = trace.compile_count(engine.plan.key)
+    assert after >= 1  # the counters are really wired
+    assert after - base <= 2
     # Different queue shapes / admission orders / one-at-a-time streams.
     _submit_all(engine, query_profiles[9:20])
     engine.run()
@@ -190,34 +183,30 @@ def test_query_slot_step_compiles_once_across_admissions(index,
         engine.run()
     # No retrace on any admission pattern — neither the per-tick hop
     # program nor the bucketed admission program.
-    assert (hops(), admits()) == (after_h, after_a)
-    assert after_h >= 1 and after_a >= 1  # the counters are really wired
+    assert trace.compile_count(engine.plan.key) == after
 
 
 def test_query_slot_hop_kernel_compiles_once(index, query_profiles):
-    """kernel=True keeps the compile-once property: exactly one fused
-    step program per (slots, beam, index capacity, kernel) — admission
+    """scorer="pallas" keeps the compile-once property: the fused slot
+    programs trace once per shape under their own plan key — admission
     interleavings never retrace the pallas program."""
     qc = QueryConfig(k=K, beam=BEAM, hops=HOPS, continuous=True,
                      slots=11, kernel=True)
     engine = QueryEngine(index, qc)
+    assert engine.plan.key == (1, "continuous", "pallas")
 
-    def hops():
-        return sum(v for key, v in trace.counts("query_slot_hop").items()
-                   if key[1] == 11 and key[4] is True)
-
-    base = hops()
+    base = trace.compile_count(engine.plan.key)
     _submit_all(engine, query_profiles[:8])
     engine.run()
-    after = hops()
-    assert after <= base + 1
+    after = trace.compile_count(engine.plan.key)
+    assert after >= 1
+    assert after - base <= 2  # one admit shape + one fused hop shape
     _submit_all(engine, query_profiles[8:17])
     engine.run()
     for p in query_profiles[17:22]:
         engine.submit(QueryRequest(rid=98, profile=p))
         engine.run()
-    assert hops() == after
-    assert after >= 1
+    assert trace.compile_count(engine.plan.key) == after
 
 
 def test_lm_decode_compiles_once_across_admissions():
@@ -258,7 +247,7 @@ def test_continuous_slot_recycling_and_fifo(index, query_profiles):
     _submit_all(cont, query_profiles[:11])
     stats = cont.run()
     assert stats["requests"] == 11
-    sched = cont._cont.sched
+    sched = cont.plan.scheduler
     sched.check_invariants()
     assert sched.n_submitted == sched.n_admitted == sched.n_completed == 11
     assert not sched.has_work()
@@ -266,9 +255,25 @@ def test_continuous_slot_recycling_and_fifo(index, query_profiles):
     assert rids == list(range(11))  # exactly once each
 
 
-def test_continuous_rejects_sharded_config(index):
-    with pytest.raises(ValueError):
-        QueryEngine(index, QueryConfig(continuous=True, shards=2))
+def test_continuous_composes_with_sharded(index, query_profiles):
+    """PR 3's one unsupported combination is now a first-class plan:
+    sharded × continuous returns bitwise what the sharded wave returns
+    (the full matrix battery lives in tests/test_plan.py)."""
+    wave = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          max_wave=64, shards=2))
+    _submit_all(wave, query_profiles[:16])
+    wave.run()
+    cont = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          continuous=True, slots=5,
+                                          shards=2))
+    assert cont.plan.key == (2, "continuous", "jnp")
+    _submit_all(cont, query_profiles[:16])
+    cs = cont.run()
+    assert cs["requests"] == 16
+    w, c = _by_rid(wave), _by_rid(cont)
+    for rid in w:
+        np.testing.assert_array_equal(w[rid][0], c[rid][0])
+        np.testing.assert_array_equal(w[rid][1], c[rid][1])
 
 
 # -- interleaved insert + query under continuous load ----------------------

@@ -1,0 +1,344 @@
+"""Plan-matrix battery (query/plan.py): the placement × batching ×
+scorer cross-product, delta resharding, and compile-once per plan.
+
+Result semantics locked down here: *placement* is the one axis that may
+change results (disjoint owner-seeded basins, dropped cross-shard
+edges — recall parity is asserted, not equality); *batching* and
+*scorer* are results-TRANSPARENT — for any fixed placement, continuous
+== wave and pallas == jnp, bitwise on (ids, sims), for every shard
+count in 2..4. Delta resharding must be invisible: a journal-driven
+delta-maintained ShardedDescent is bitwise-equal to a from-scratch
+rematerialization under the same frozen-base plan extension, for any
+interleaving of insert / flush_cohort / query (hypothesis-driven), and
+a sharded engine never materializes a full-index device copy.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import build_index
+from repro.query.plan import PlanSpec
+from repro.query.sharded import ShardedDescent, extend_plan
+from repro.sched import trace
+
+K, BEAM, HOPS = 10, 16, 3
+
+
+@pytest.fixture(scope="module")
+def index():
+    ds = make_dataset("synth", scale=0.1, seed=3)
+    return build_index(ds, C2Params(k=10, b=64, t=8, max_cluster=48))
+
+
+@pytest.fixture(scope="module")
+def query_profiles():
+    qds = make_dataset("synth", scale=0.1, seed=77)
+    return [qds.profile(u) for u in range(48)]
+
+
+@pytest.fixture(scope="module")
+def insert_profiles():
+    ids = make_dataset("synth", scale=0.1, seed=99)
+    return [ids.profile(u) for u in range(40)]
+
+
+def _serve(engine, profiles):
+    for rid, p in enumerate(profiles):
+        engine.submit(QueryRequest(rid=rid, profile=p))
+    engine.run()
+    return {r.rid: (r.ids, r.sims) for r in engine.done}
+
+
+def _assert_same_results(a, b, msg=""):
+    assert set(a) == set(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid][0], b[rid][0],
+                                      err_msg=f"{msg} ids rid={rid}")
+        np.testing.assert_array_equal(a[rid][1], b[rid][1],
+                                      err_msg=f"{msg} sims rid={rid}")
+
+
+# -- spec validation (no silently dropped flags) ---------------------------
+
+def test_spec_validation_fails_loudly():
+    with pytest.raises(ValueError, match="placement"):
+        PlanSpec(placement=0)
+    with pytest.raises(ValueError, match="batching"):
+        PlanSpec(batching="waves")
+    with pytest.raises(ValueError, match="scorer"):
+        PlanSpec(scorer="numpy")
+    with pytest.raises(ValueError, match="slots"):
+        PlanSpec(batching="continuous", slots=0)
+    with pytest.raises(ValueError, match="max_wave"):
+        PlanSpec(batching="wave", max_wave=0)
+
+
+def test_config_maps_onto_plan(index):
+    qc = QueryConfig(shards=3, continuous=True, kernel=True, slots=9)
+    spec = qc.spec()
+    assert spec.key == (3, "continuous", "pallas")
+    assert "sharded(3)" in spec.describe()
+    assert "continuous" in spec.describe()
+    with pytest.raises(ValueError):
+        QueryEngine(index, QueryConfig(shards=0))
+    with pytest.raises(ValueError):
+        QueryEngine(index, QueryConfig(continuous=True, slots=0))
+
+
+# -- the matrix: batching and scorer are results-transparent ---------------
+
+@pytest.mark.parametrize("n_shards", [2, 3, 4])
+def test_sharded_continuous_bitwise_equals_wave(index, query_profiles,
+                                                n_shards):
+    """For every shard count, the sharded continuous plan returns
+    bitwise-identical (ids, sims) to the wave plan on the same
+    placement, with and without the fused kernel — and recall parity
+    with the single-device wave (placement's recall cost is bounded the
+    same under every batching × scorer)."""
+    single = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                            max_wave=64))
+    _serve(single, query_profiles)
+    single_recall = single.recall_vs_brute_force()
+
+    wave = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          max_wave=64, shards=n_shards))
+    w = _serve(wave, query_profiles)
+    for kernel in (False, True):
+        cont = QueryEngine(index, QueryConfig(
+            k=K, beam=BEAM, hops=HOPS, continuous=True, slots=7,
+            shards=n_shards, kernel=kernel))
+        c = _serve(cont, query_profiles)
+        _assert_same_results(w, c, f"shards={n_shards} kernel={kernel}")
+        recall = cont.recall_vs_brute_force()
+        assert recall >= single_recall - 0.01, (n_shards, kernel, recall)
+
+
+def test_sharded_continuous_per_request_budgets(index, query_profiles):
+    """Per-slot hop budgets under the sharded placement: each request
+    matches a uniform sharded wave at its own budget, including the
+    zero-hop (seed-only) budget."""
+    deep = 2 * HOPS
+    ref = {}
+    for hops in (0, HOPS, deep):
+        eng = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=hops,
+                                             max_wave=64, shards=2))
+        ref[hops] = _serve(eng, query_profiles)
+    cont = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          continuous=True, slots=6,
+                                          shards=2))
+    budgets = [deep if rid % 3 == 0 else (0 if rid % 5 == 0 else HOPS)
+               for rid in range(len(query_profiles))]
+    for rid, p in enumerate(query_profiles):
+        cont.submit(QueryRequest(rid=rid, profile=p, hops=budgets[rid]))
+    cont.run()
+    assert len(cont.done) == len(query_profiles)
+    for r in cont.done:
+        want_ids, want_sims = ref[budgets[r.rid]][r.rid]
+        np.testing.assert_array_equal(r.ids, want_ids, err_msg=f"{r.rid}")
+        np.testing.assert_array_equal(r.sims, want_sims,
+                                      err_msg=f"{r.rid}")
+
+
+# -- compile-once per plan across admissions AND reshards ------------------
+
+def test_compile_once_across_admissions_and_reshards(index, query_profiles,
+                                                     insert_profiles):
+    """trace.compile_count(plan.key) goes flat once every program shape
+    of the plan is warm — further admission interleavings AND delta
+    reshards (insert bursts) reuse the compiled programs."""
+    ix = copy.deepcopy(index)
+    engine = QueryEngine(ix, QueryConfig(
+        k=K, beam=BEAM, hops=HOPS, continuous=True, slots=6, shards=2,
+        refresh_every=10**9))
+    key = engine.plan.key
+    assert key == (2, "continuous", "jnp")
+    # Warm every shape this plan uses: slot programs, the insert-search
+    # wave program, and a post-reshard tick.
+    _serve(engine, query_profiles[:9])
+    engine.insert(insert_profiles[0])
+    _serve(engine, query_profiles[9:14])
+    warm = trace.compile_count(key)
+    assert warm >= 1
+    # Insert burst (delta reshards) interleaved with streamed serving.
+    for m, p in enumerate(insert_profiles[1:7]):
+        engine.insert(p)
+        engine.submit(QueryRequest(rid=100 + m,
+                                   profile=query_profiles[m % 9]))
+        engine.run()
+    _serve(engine, query_profiles[14:25])
+    assert trace.compile_count(key) == warm
+    assert engine.sharded_state().version == ix.version
+
+
+def test_wave_plan_compile_once_across_reshards(index, query_profiles,
+                                                insert_profiles):
+    """The sharded wave program is also plan-tagged and survives delta
+    reshards without a retrace."""
+    ix = copy.deepcopy(index)
+    engine = QueryEngine(ix, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                         max_wave=64, shards=3,
+                                         refresh_every=10**9))
+    _serve(engine, query_profiles[:32])
+    engine.insert(insert_profiles[0])
+    _serve(engine, query_profiles[:32])
+    warm = trace.compile_count(engine.plan.key)
+    for p in insert_profiles[1:5]:
+        engine.insert(p)
+    _serve(engine, query_profiles[:32])
+    assert trace.compile_count(engine.plan.key) == warm
+
+
+# -- delta resharding ------------------------------------------------------
+
+def _assert_matches_rebuild(engine):
+    """Delta-maintained shard state == from-scratch rematerialization
+    under the same frozen-base plan extension, bitwise."""
+    sd = engine.sharded_state()  # syncs
+    ix = engine.index
+    fresh = ShardedDescent(ix, sd.n_shards,
+                           plan=extend_plan(sd.base_plan, ix),
+                           use_mesh=False,
+                           oversample=sd.oversample)
+    assert sd.version == fresh.version == ix.version
+    np.testing.assert_array_equal(sd.plan.cluster_shard,
+                                  fresh.plan.cluster_shard)
+    np.testing.assert_array_equal(sd.plan.owner, fresh.plan.owner)
+    for s in range(sd.n_shards):
+        np.testing.assert_array_equal(sd.plan.residents[s],
+                                      fresh.plan.residents[s],
+                                      err_msg=f"residents shard={s}")
+    np.testing.assert_array_equal(sd._g2l, fresh._g2l)
+    names = ("l_graph", "l_rev", "l_words", "l_card", "l2g")
+    for a, b, name in zip(sd._dev, fresh._dev, names):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_delta_reshard_equals_rebuild_after_insert_burst(index,
+                                                         insert_profiles,
+                                                         query_profiles):
+    """An insert burst (spanning a cohort refresh) goes through the
+    delta path and leaves shard tensors bitwise-equal to a full
+    rematerialization — without the engine ever holding a full-index
+    device copy."""
+    ix = copy.deepcopy(index)
+    engine = QueryEngine(ix, QueryConfig(k=K, shards=3, refresh_every=6))
+    engine.query_batch(query_profiles[:8])  # freeze the base plan
+    sd = engine.sharded_state()
+    kinds = []
+    for p in insert_profiles[:14]:  # crosses refreshes at 6 and 12
+        engine.insert(p)
+        kinds.append(sd.sync())
+    assert "delta" in kinds  # journal-driven path actually exercised
+    assert engine.n_refreshes == 2
+    _assert_matches_rebuild(engine)
+    # Tentpole memory claim: sharded plans never materialize the padded
+    # full-index device arrays the single placement serves from.
+    assert engine.plan._single is None
+    # And the engine still answers: inserted users are findable.
+    ids, sims = engine.query_batch([insert_profiles[0]])
+    assert sims[0, 0] == pytest.approx(1.0)
+
+
+def test_interleaved_insert_under_sharded_continuous_load(
+        index, query_profiles, insert_profiles):
+    """Mid-stream inserts + cohort refreshes while sharded slots are in
+    flight: the local-id remap keeps every request completing with
+    sensible quality, and the final shard state matches a rebuild."""
+    ix = copy.deepcopy(index)
+    cont = QueryEngine(ix, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                       continuous=True, slots=5, shards=2,
+                                       refresh_every=4))
+    base = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          max_wave=64, shards=2))
+    _serve(base, query_profiles)
+    base_recall = base.recall_vs_brute_force()
+
+    inserted = []
+
+    def insert_some(engine, tick):
+        if tick % 2 == 0 and len(inserted) < 10:
+            inserted.append(engine.insert(insert_profiles[len(inserted)]))
+
+    for rid, p in enumerate(query_profiles):
+        cont.submit(QueryRequest(rid=rid, profile=p))
+    stats = cont.run(on_tick=insert_some)
+    assert stats["requests"] == len(query_profiles)
+    assert cont.n_refreshes >= 1  # refresh fired while slots were live
+    assert cont.recall_vs_brute_force() >= base_recall - 0.02
+    _assert_matches_rebuild(cont)
+
+
+# -- mesh parity for the composed plan -------------------------------------
+
+@pytest.mark.slow
+def test_mesh_sharded_continuous_and_delta_sync():
+    """The mesh branches of the composed plan — NamedSharding-pinned
+    slot state, shard_slot programs under GSPMD, delta sync's re-pin
+    block, and the in-flight beam remap — return exactly what the
+    single-device vmap path returns, across an insert burst that spans
+    a cohort refresh (subprocess so the emulated device count doesn't
+    leak into this session)."""
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "PYTHONPATH": os.path.join(repo, "src")}
+    code = r"""
+import copy, os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, numpy as np
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import build_index
+from repro.query.sharded import ShardedDescent
+
+assert jax.device_count() == 2
+ds = make_dataset("synth", scale=0.1, seed=3)
+index = build_index(ds, C2Params(k=10, b=64, t=8, max_cluster=48))
+qds = make_dataset("synth", scale=0.1, seed=77)
+ins = make_dataset("synth", scale=0.1, seed=99)
+profiles = [qds.profile(u) for u in range(24)]
+
+def drive(use_mesh):
+    ix = copy.deepcopy(index)
+    eng = QueryEngine(ix, QueryConfig(k=10, beam=16, hops=3,
+                                      continuous=True, slots=5, shards=2,
+                                      refresh_every=4))
+    # Pre-build the placement state with the requested execution mode
+    # (auto-detection would pick the mesh for both on 2 devices).
+    eng.plan._sharded = ShardedDescent(ix, 2, use_mesh=use_mesh,
+                                       oversample=eng.qc.shard_oversample)
+    inserted = []
+    def mutate(engine, tick):
+        if tick % 2 == 0 and len(inserted) < 9:
+            inserted.append(engine.insert(ins.profile(len(inserted))))
+    for rid, p in enumerate(profiles):
+        eng.submit(QueryRequest(rid=rid, profile=p))
+    eng.run(on_tick=mutate)
+    assert eng.n_refreshes >= 1
+    assert (eng.sharded_state().mesh is not None) == use_mesh
+    return {r.rid: (r.ids, r.sims) for r in eng.done}
+
+mesh_res = drive(use_mesh=True)
+vmap_res = drive(use_mesh=False)
+for rid in mesh_res:
+    np.testing.assert_array_equal(mesh_res[rid][0], vmap_res[rid][0])
+    np.testing.assert_allclose(mesh_res[rid][1], vmap_res[rid][1],
+                               atol=1e-6)
+print("MESH_PLAN_PARITY_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=420)
+    assert "MESH_PLAN_PARITY_OK" in r.stdout, r.stdout + r.stderr
+
+
+# The hypothesis-driven arbitrary-interleaving == rebuild property lives
+# in tests/test_plan_properties.py (importorskip-guarded, like the other
+# *_properties files), reusing _assert_matches_rebuild above.

@@ -1,0 +1,56 @@
+"""Hypothesis property test for delta resharding: ANY interleaving of
+insert / flush_cohort / query under a sharded plan leaves shard tensors
+bitwise-equal to a from-scratch rebuild of the extended ShardPlan
+(tests/test_plan.py carries the deterministic battery and the shared
+rebuild comparator)."""
+import copy
+
+import pytest
+
+pytest.importorskip("hypothesis")  # [test] extra; skip, don't break collection
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine
+
+from test_plan import _assert_matches_rebuild  # same-dir test module
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    from repro.query.index import build_index
+
+    ds = make_dataset("synth", scale=0.05, seed=5)
+    return build_index(ds, C2Params(k=8, b=64, t=4, max_cluster=32))
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    qds = make_dataset("synth", scale=0.05, seed=7)
+    return [qds.profile(u) for u in range(24)]
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(ops=st.lists(st.sampled_from(["insert", "flush", "query"]),
+                    min_size=1, max_size=12),
+       n_shards=st.integers(min_value=2, max_value=3))
+def test_any_interleaving_matches_rebuild(small_index, profiles, ops,
+                                          n_shards):
+    ix = copy.deepcopy(small_index)
+    engine = QueryEngine(ix, QueryConfig(k=8, beam=12, hops=2,
+                                         shards=n_shards,
+                                         refresh_every=10**9))
+    engine.query_batch(profiles[:4])  # freeze the base plan
+    n_ins = 0
+    for op in ops:
+        if op == "insert":
+            engine.insert(profiles[8 + (n_ins % 16)])
+            n_ins += 1
+        elif op == "flush":
+            engine.flush_cohort()
+        else:
+            engine.query_batch(profiles[:4])
+    _assert_matches_rebuild(engine)

@@ -112,9 +112,11 @@ def test_sharded_serves_inserted_users(index, query_profiles):
     ids, sims = engine.query_batch([profile])
     assert ids[0, 0] == u
     assert sims[0, 0] == pytest.approx(1.0)
-    # The resharded plan covers the appended row.
-    assert engine._sharded.version == ix.version
-    assert any(u in res for res in engine._sharded.plan.residents)
+    # The delta-resharded plan covers the appended row (on its home
+    # shard and/or the shards of the clusters that registered it).
+    sd = engine.sharded_state()
+    assert sd.version == ix.version
+    assert any(u in res for res in sd.plan.residents)
 
 
 @pytest.mark.slow
