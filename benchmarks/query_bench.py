@@ -260,6 +260,73 @@ def run_continuous(index, profiles, k: int, beam: int, hops: int,
     }
 
 
+def run_churn(index0, profiles, k: int, beam: int, hops: int,
+              insert_pool, seed: int = 0, turnover: float = 0.2,
+              rounds: int = 4, shards: int = 1) -> dict:
+    """Sustained-churn recall trajectory, repair on vs off.
+
+    Each round deletes ``turnover/rounds`` of the live rows and inserts
+    replacements (true turnover: the live count is conserved), then
+    serves the same fixed query wave through the scheduler loop — so
+    lifecycle maintenance fires exactly as it would in production
+    (between steps). The two arms see IDENTICAL mutation streams; the
+    only difference is the repair cadence. Repair-off decays as deletes
+    punch PAD holes into survivors' rows; repair-on re-links the
+    churn-touched cohort and should hold recall near the no-churn
+    baseline.
+    """
+    import copy
+
+    m_round = max(1, int(turnover * index0.n_live / rounds))
+    arms = {}
+    baseline = None
+    for arm, repair_every in (("repair_on", 1), ("repair_off", 0)):
+        ix = copy.deepcopy(index0)
+        eng = QueryEngine(ix, QueryConfig(
+            k=k, beam=beam, hops=hops, max_wave=len(profiles),
+            shards=shards, refresh_every=10**9,
+            repair_every=repair_every))
+        rng = np.random.default_rng(seed + 7)  # same stream both arms
+        pool = iter(insert_pool)
+
+        def wave_recall(eng=eng):
+            for rid, p in enumerate(profiles):
+                eng.submit(QueryRequest(rid=rid, profile=p))
+            eng.run()
+            return eng.recall_vs_brute_force(eng.done[-len(profiles):])
+
+        if baseline is None:  # no-churn reference (arm-independent)
+            baseline = round(wave_recall(), 4)
+        else:
+            wave_recall()  # warm this arm's programs identically
+        trajectory = []
+        for _ in range(rounds):
+            alive = eng.index.alive_ids()
+            for u in rng.choice(alive, size=min(m_round, len(alive) - 1),
+                                replace=False):
+                eng.remove_user(int(u))
+            for _i in range(m_round):
+                eng.insert(next(pool))
+            trajectory.append(round(wave_recall(), 4))
+        arms[arm] = {
+            "recall_trajectory": trajectory,
+            "final_recall": trajectory[-1],
+            "lifecycle": eng.lifecycle.stats(),
+        }
+    return {
+        "turnover": turnover,
+        "rounds": rounds,
+        "deletes_per_round": m_round,
+        "no_churn_recall": baseline,
+        **arms,
+        "repair_recovery": round(
+            arms["repair_on"]["final_recall"]
+            - arms["repair_off"]["final_recall"], 4),
+        "repair_vs_baseline": round(
+            arms["repair_on"]["final_recall"] - baseline, 4),
+    }
+
+
 def descent_scoring_stats(index, profiles, k: int, beam: int, hops: int,
                           seeds_per_config: int = 16) -> dict:
     """Per-hop scored-candidate counts through the fused kernel on the
@@ -293,7 +360,8 @@ def descent_scoring_stats(index, profiles, k: int, beam: int, hops: int,
 def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         k: int = 10, beam: int = 32, hops: int = 3, seed: int = 0,
         shards: int = 2, oversample: float = 1.25,
-        continuous: bool = False, slots: int = 32) -> dict:
+        continuous: bool = False, slots: int = 32,
+        churn: bool = False) -> dict:
     if shards < 2:
         raise SystemExit("query_bench compares sharded vs single-device "
                          "serving; --shards must be >= 2")
@@ -347,6 +415,20 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
                                       slots, seed=seed, shards=shards,
                                       oversample=oversample)
 
+    # Sustained-churn trajectory BEFORE the insert benchmark, on private
+    # deepcopies — the serving rows above and the churn arms must not
+    # see each other's mutations.
+    churn_rec = None
+    if churn:
+        # Replacement users come from an INDEPENDENT draw (seed+2) so the
+        # inserts don't shadow the query distribution — the trajectory
+        # should isolate graph damage, not ground-truth drift.
+        ins_ds = make_dataset(dataset, scale=scale, seed=seed + 2)
+        need = min(int(0.2 * index.n_live) + 8, ins_ds.n_users)
+        pool = [ins_ds.profile(u) for u in range(need)]
+        churn_rec = run_churn(index, profiles, k, beam, hops, pool,
+                              seed=seed)
+
     # Online insertion through the amortized-growth path (single engine;
     # the index is shared, so the sharded engine reshards lazily).
     t0 = time.perf_counter()
@@ -391,6 +473,7 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         **({"continuous": cont} if cont is not None else {}),
         **({f"sharded_{shards}_continuous": cont_sharded}
            if cont_sharded is not None else {}),
+        **({"churn": churn_rec} if churn_rec is not None else {}),
     }
 
 
@@ -411,6 +494,9 @@ def main():
                     help="add wave-vs-continuous closed/open-loop rows")
     ap.add_argument("--slots", type=int, default=32,
                     help="continuous-mode in-flight slot capacity")
+    ap.add_argument("--churn", action="store_true",
+                    help="add sustained-churn recall-trajectory rows "
+                         "(repair on vs off under 20%% turnover)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI run; exit 1 on sharded regression")
     ap.add_argument("--out", default="BENCH_query.json")
@@ -421,7 +507,8 @@ def main():
         args.slots = min(args.slots, 16)
     rec = run(args.dataset, args.scale, args.queries, args.k, args.beam,
               args.hops, shards=args.shards, oversample=args.oversample,
-              continuous=args.continuous, slots=args.slots)
+              continuous=args.continuous, slots=args.slots,
+              churn=args.churn)
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(json.dumps(rec, indent=2))
     print(f"[query_bench] wrote {args.out}")
@@ -481,6 +568,27 @@ def main():
                 sys.exit(1)
             print(f"[query_bench] sharded-continuous smoke OK: "
                   f"closed-loop bitwise, open-loop recall_delta={scd}")
+        if args.churn:
+            # Under sustained turnover the repair pass must hold recall
+            # near the no-churn baseline while repair-off is the decayed
+            # arm (CI margins are generous; the committed
+            # BENCH_query.json carries the quiet-machine trajectory).
+            ch = rec["churn"]
+            if ch["repair_vs_baseline"] < -0.03:
+                print(f"[query_bench] FAIL churn repair did not hold "
+                      f"recall: {ch['repair_vs_baseline']} vs baseline "
+                      f"{ch['no_churn_recall']}", file=sys.stderr)
+                sys.exit(1)
+            # At smoke scale the two arms sit within noise of each other;
+            # the gate only trips when repair actively HURTS recall.
+            if ch["repair_recovery"] < -0.01:
+                print(f"[query_bench] FAIL repair-on recall below "
+                      f"repair-off: {ch['repair_recovery']}",
+                      file=sys.stderr)
+                sys.exit(1)
+            print(f"[query_bench] churn smoke OK: repair_vs_baseline="
+                  f"{ch['repair_vs_baseline']} recovery="
+                  f"{ch['repair_recovery']}")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,11 @@ recommender never touches the raw graph, only the query engine.
 the benchmarks measure, so the example can exercise any plan the
 serving stack supports. Recommendation quality is plan-independent for
 a fixed placement (batching and scorer are results-transparent).
+
+The demo closes with the lifecycle loop (repro/lifecycle/): a user
+deletion (GDPR-style takedown) and a profile update served online —
+the deleted user disappears from every re-queried neighborhood and the
+updated user's neighbors shift to its new taste, with no rebuild.
 """
 import argparse
 
@@ -75,6 +80,29 @@ def main(argv=None):
     print(f"recall@30 exact graph:   {r_exact:.3f}")
     print(f"recall@30 served (C²):   {r_served:.3f}  "
           f"(Δ {r_served - r_exact:+.3f})")
+
+    # -- lifecycle: delete + update, then re-serve --------------------
+    # Takedown: the most-recommended user must vanish from results.
+    gone = int(np.bincount(served.ids.ravel(),
+                           minlength=train.n_users).argmax())
+    watchers = np.flatnonzero((served.ids == gone).any(axis=1))
+    engine.remove_user(gone)
+    # Taste change: re-link one of the watchers onto user 0's profile.
+    moved = int(watchers[0]) if len(watchers) else 1
+    engine.update_user(moved, train.profile(0))
+    engine.lifecycle.repair()  # heal the delete-damaged rows now
+
+    # Re-query the watchers' own profiles plus the NEW taste (user 0's
+    # profile): the moved user must now surface as one of its neighbors.
+    probes = [train.profile(int(u)) for u in watchers[:16]]
+    probes.append(train.profile(0))
+    re_ids, _ = engine.query_batch(probes, k=11)
+    assert not (re_ids == gone).any(), "deleted user still served"
+    print(f"lifecycle: removed user {gone} (was in {len(watchers)} "
+          f"neighborhoods — now in 0 of {len(probes)} re-queries), "
+          f"updated user {moved} "
+          f"({'now' if moved in re_ids[-1] else 'NOT'} a neighbor of its "
+          f"new taste), stats {engine.lifecycle.stats()}")
 
 
 if __name__ == "__main__":

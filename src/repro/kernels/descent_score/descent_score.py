@@ -62,7 +62,7 @@ from repro.sketch.goldfinger import unpack_bits_int8
 from repro.types import NEG_INF, PAD_ID
 
 
-def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref,
+def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref, tomb_ref,
                 qw_ref, qc_ref, bi_ref, bs_ref,
                 out_ids_ref, out_sims_ref, nsc_ref,
                 *, chunk: int, mxu: bool):
@@ -72,6 +72,16 @@ def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref,
     kg = graph_ref.shape[1]
     kr = rev_ref.shape[1]
     W = words_ref.shape[1]
+    tomb = tomb_ref[...][:, 0]                          # [n] i32 (0|1)
+
+    # (a0) tombstone masking of the beam itself, mirroring the ref's
+    # pre-masking: lanes naming deleted rows drop to PAD/−inf before the
+    # gather, so a dead beam entry contributes no candidates this hop.
+    b_dead = (beam_ids != PAD_ID) & (jnp.take(
+        tomb, jnp.where(beam_ids == PAD_ID, 0, beam_ids).reshape(-1)
+    ).reshape(bq, B) > 0)
+    beam_ids = jnp.where(b_dead, PAD_ID, beam_ids)
+    beam_sims = jnp.where(b_dead, NEG_INF, beam_sims)
 
     # (a) adjacency gather — candidate *ids* only.
     flat = jnp.where(beam_ids == PAD_ID, 0, beam_ids).reshape(-1)
@@ -82,6 +92,15 @@ def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref,
     rev = jnp.where(dead, PAD_ID, rev).reshape(bq, B * kr)
     cand = jnp.concatenate([fwd, rev], axis=1)          # [bq, C]
     C = cand.shape[1]
+
+    # (a1) tombstoned candidates become PAD lanes *here*, upstream of the
+    # `need` mask — so stale edges to deleted rows are suppressed before
+    # the estimator exactly like PAD/in-beam lanes (they are excluded
+    # from n_scored, which is how tests observe the suppression).
+    c_dead = (cand != PAD_ID) & (jnp.take(
+        tomb, jnp.where(cand == PAD_ID, 0, cand).reshape(-1)
+    ).reshape(bq, C) > 0)
+    cand = jnp.where(c_dead, PAD_ID, cand)
 
     # (b) suppression BEFORE scoring: PAD lanes and lanes already in the
     # beam (merge would retire them as duplicates of columns 0..B-1 —
@@ -144,18 +163,20 @@ def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref,
     jax.jit,
     static_argnames=("block_q", "chunk", "mxu", "interpret"),
 )
-def hop_pallas(graph_ids, rev_ids, words, card, q_words, q_card,
+def hop_pallas(graph_ids, rev_ids, words, card, tomb, q_words, q_card,
                beam_ids, beam_sims, *,
                block_q: int = 64, chunk: int = 256,
                mxu: bool = False, interpret: bool = True):
     """One fused descent hop for a wave of queries (see ref.descent_hop_ref).
 
     graph_ids i32[n, kg], rev_ids i32[n, kr]; words u32[n, W],
-    card i32[n, 1]; q_words u32[q, W], q_card i32[q, 1];
+    card i32[n, 1]; tomb i32[n, 1] (1 = tombstoned row — all-zeros for a
+    delete-free index); q_words u32[q, W], q_card i32[q, 1];
     beam_ids i32[q, B], beam_sims f32[q, B]. q % block_q == 0 (ops.py
     pads). Returns (beam_ids i32[q, B], beam_sims f32[q, B],
     n_scored i32[q, 1]) — the beam after the hop plus the per-query count
-    of candidate lanes that survived suppression and were scored.
+    of candidate lanes that survived suppression (PAD / in-beam /
+    tombstoned all retire first) and were scored.
     """
     q, B = beam_ids.shape
     n, W = words.shape
@@ -171,6 +192,7 @@ def hop_pallas(graph_ids, rev_ids, words, card, q_words, q_card,
             pl.BlockSpec((n, kg), lambda i: (0, 0)),
             pl.BlockSpec((n, kr), lambda i: (0, 0)),
             pl.BlockSpec((n, W), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((bq, W), lambda i: (i, 0)),
             pl.BlockSpec((bq, 1), lambda i: (i, 0)),
@@ -188,6 +210,6 @@ def hop_pallas(graph_ids, rev_ids, words, card, q_words, q_card,
             jax.ShapeDtypeStruct((q, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(graph_ids, rev_ids, words, card, q_words, q_card,
+    )(graph_ids, rev_ids, words, card, tomb, q_words, q_card,
       beam_ids, beam_sims)
     return out_ids, out_sims, n_scored

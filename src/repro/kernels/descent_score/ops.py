@@ -32,17 +32,25 @@ def _pad_rows(x, to: int, fill):
                    static_argnames=("block_q", "mxu", "with_counts"))
 def descent_hop(graph_ids, rev_ids, words, card, q_words, q_card,
                 beam_ids, beam_sims, *, block_q: int | None = None,
-                mxu: bool | None = None, with_counts: bool = False):
+                mxu: bool | None = None, with_counts: bool = False,
+                tomb=None):
     """One fused descent hop; same contract as ref.descent_hop_ref.
 
     Padded query rows (PAD beams) produce PAD/−inf rows and score
     nothing; they are sliced off before returning. With ``with_counts``
     also returns n_scored i32[q] — candidate lanes that survived
     in-tile suppression and were actually scored (the unfused path
-    always scores ``beam·(kg+kr)`` per query).
+    always scores ``beam·(kg+kr)`` per query). ``tomb`` (bool[n] or
+    None) marks tombstoned index rows: their lanes retire with the
+    PAD/in-beam suppression, before the estimator — None synthesizes an
+    all-live mask, which is bitwise a no-op.
     """
     q = beam_ids.shape[0]
     W = words.shape[1]
+    if tomb is None:
+        t2d = jnp.zeros((words.shape[0], 1), jnp.int32)
+    else:
+        t2d = jnp.asarray(tomb).astype(jnp.int32).reshape(-1, 1)
     if mxu is None:
         mxu = W >= MXU_MIN_WORDS
     if block_q is None:
@@ -60,7 +68,7 @@ def descent_hop(graph_ids, rev_ids, words, card, q_words, q_card,
     bs = _pad_rows(beam_sims, block_q, NEG_INF)
     out_ids, out_sims, n_scored = hop_pallas(
         jnp.asarray(graph_ids), jnp.asarray(rev_ids), jnp.asarray(words),
-        jnp.asarray(card).reshape(-1, 1).astype(jnp.int32),
+        jnp.asarray(card).reshape(-1, 1).astype(jnp.int32), t2d,
         qw, qc, bi, bs,
         block_q=block_q, mxu=mxu, interpret=INTERPRET)
     if with_counts:

@@ -35,10 +35,34 @@ def row_scorer(words, card):
     return jax.vmap(score_row)
 
 
+def mask_dead(tomb, ids, sims=None):
+    """PAD out lanes naming tombstoned rows (``tomb`` bool[n]), in place
+    positionally — no compaction, so lane order (and therefore every
+    downstream tie-break) is exactly what an index with those references
+    excised would produce. With ``sims``, masked lanes also drop to
+    −inf (beam lanes carry a sim; candidate lanes are scored later)."""
+    t = jnp.asarray(tomb)
+    safe = jnp.where(ids == PAD_ID, 0, ids)
+    dead = (ids != PAD_ID) & t[safe]
+    out_ids = jnp.where(dead, PAD_ID, ids)
+    if sims is None:
+        return out_ids
+    return out_ids, jnp.where(dead, NEG_INF, sims)
+
+
 def descent_hop_ref(graph_ids, rev_ids, words, card,
-                    q_words, q_card, beam_ids, beam_sims):
+                    q_words, q_card, beam_ids, beam_sims, tomb=None):
     """One friend-of-a-friend hop, unfused: gather → score ALL lanes →
-    dedup after the fact → wide top-k. Returns (beam_ids, beam_sims)."""
+    dedup after the fact → wide top-k. Returns (beam_ids, beam_sims).
+
+    ``tomb`` (bool[n] or None) masks tombstoned rows out *before* any
+    scoring: dead beam lanes become PAD/−inf (a row deleted mid-descent
+    leaves the beam) and dead candidate lanes become PAD (stale edges to
+    deleted rows score nothing) — the same pre-masking the fused kernel
+    applies, so the bitwise ref↔kernel equivalence is unchanged.
+    """
+    if tomb is not None:
+        beam_ids, beam_sims = mask_dead(tomb, beam_ids, beam_sims)
     nq = q_words.shape[0]
     kg, kr = graph_ids.shape[1], rev_ids.shape[1]
     score = row_scorer(words, card)
@@ -48,6 +72,8 @@ def descent_hop_ref(graph_ids, rev_ids, words, card,
     rev = rev_ids[safe].reshape(nq, -1)
     rev = jnp.where((beam_ids == PAD_ID).repeat(kr, axis=1), PAD_ID, rev)
     cand = jnp.concatenate([fwd, rev], axis=1)      # [q, beam·(kg+kr)]
+    if tomb is not None:
+        cand = mask_dead(tomb, cand)
     cand_sims = score(q_words, q_card, cand)
     return merge_topk(
         jnp.concatenate([beam_ids, cand], axis=1),

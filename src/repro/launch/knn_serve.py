@@ -20,6 +20,12 @@ and invalid values fail loudly instead of silently dropping a flag):
 * ``--kernel`` — scorer: the fused Pallas descent-scoring hop
   (``repro/kernels/descent_score``; identical results, candidates
   deduped before the estimator runs).
+
+Lifecycle flags (``repro/lifecycle/``): ``--churn M`` deletes M users
+and profile-updates M more online before the query wave (both picked
+id-strided over the live rows, so reruns are deterministic), ``--ttl``
+expires rows untouched for that many scheduler ticks, and
+``--repair-every`` re-links delete-damaged rows on that tick cadence.
 """
 from __future__ import annotations
 
@@ -55,6 +61,15 @@ def main(argv=None):
                          "(kernels/descent_score; identical results)")
     ap.add_argument("--insert", type=int, default=0,
                     help="insert this many users online before querying")
+    ap.add_argument("--churn", type=int, default=0,
+                    help="delete this many users AND profile-update as "
+                         "many more online before querying")
+    ap.add_argument("--ttl", type=int, default=0,
+                    help="expire rows untouched for this many scheduler "
+                         "ticks (0 = never)")
+    ap.add_argument("--repair-every", type=int, default=0,
+                    help="re-link churn-damaged rows every this many "
+                         "scheduler ticks (0 = off)")
     ap.add_argument("--index", default=None, help="load a saved index")
     ap.add_argument("--save-index", default=None, help="save the built index")
     ap.add_argument("--seed", type=int, default=0)
@@ -81,7 +96,7 @@ def main(argv=None):
     engine = QueryEngine(index, QueryConfig(
         k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
         shards=args.shards, continuous=args.continuous, slots=args.slots,
-        kernel=args.kernel))
+        kernel=args.kernel, ttl=args.ttl, repair_every=args.repair_every))
     print(f"[serve] plan: {engine.plan.describe()}")
 
     # Unseen profiles from the same distribution (different seed).
@@ -94,6 +109,25 @@ def main(argv=None):
     if args.insert:
         print(f"[serve] inserted {args.insert} users online "
               f"(index now {index.n} users)")
+
+    if args.churn:
+        # Id-strided picks over the live rows: deterministic across
+        # reruns, and the delete/update sets never overlap.
+        alive = index.alive_ids()
+        take = np.linspace(0, len(alive) - 1,
+                           num=min(2 * args.churn, len(alive)),
+                           dtype=np.int64)
+        victims = alive[take]
+        for u in victims[0::2]:
+            engine.remove_user(int(u))
+        for m, u in enumerate(victims[1::2]):
+            engine.update_user(int(u), qds.profile(m % qds.n_users))
+        if args.repair_every:
+            engine.lifecycle.repair()  # serve the wave on a healed graph
+        print(f"[serve] churned: {len(victims[0::2])} deletes, "
+              f"{len(victims[1::2])} updates "
+              f"(index now {index.n_live} live rows) | "
+              f"lifecycle {engine.lifecycle.stats()}")
 
     sd = engine.sharded_state()  # after inserts: the waves reuse this state
     if sd is not None:

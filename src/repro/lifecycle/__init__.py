@@ -1,0 +1,33 @@
+"""Index lifecycle: deletes, updates, TTL expiry, online repair.
+
+Everything beyond append-only growth lives here. The index layer
+(``query/index.py``) provides the mutation primitives — tombstoning
+with best-effort edge patching (:meth:`KNNIndex.remove_user`),
+fingerprint swaps (:meth:`KNNIndex.swap_profile`), forward-row
+replacement with mutuality restoration (:meth:`KNNIndex.relink_user`)
+— and :class:`LifecycleManager` composes them into serving-level
+operations scheduled BETWEEN ticks, so continuous plans' in-flight
+slots never observe a half-applied mutation:
+
+* ``remove``  — tombstone + patch + router deregistration (the router
+  filters dead members at seed time; membership stays append-only for
+  delta resharding);
+* ``update``  — profile swap, re-sketch, and localized re-linking via a
+  neighbors-of-neighbors seeded descent (no FRH routing, cost bounded
+  by the neighborhood);
+* TTL expiry — per-row last-touched logical clocks, stale rows expire
+  in bounded batches;
+* repair     — a periodic bounded NN-descent pass over churn-touched
+  cohorts, re-linking survivors whose neighborhoods lost edges.
+
+Correctness rests on the tombstone mask, not the patching: the mask is
+threaded through routing, descent init, and both scorers (jnp ref and
+the fused Pallas hop, bitwise-identical), so a dead id is never seeded,
+scored, or returned even while stale references linger in unpatched
+rows (the bounded reverse table makes patching inherently lossy).
+:func:`scrub_dead_references` is the test-side excision comparator
+that pins down masking ≡ physical excision.
+"""
+from repro.lifecycle.manager import (LifecycleConfig,  # noqa: F401
+                                     LifecycleManager)
+from repro.lifecycle.scrub import scrub_dead_references  # noqa: F401

@@ -1,0 +1,67 @@
+"""Physical excision of dead references — the masking comparator.
+
+The lifecycle design keeps deleted rows in place (tombstone mask) and
+patches incident edges best-effort: the bounded reverse table drops
+entries under pressure, so an in-neighbor the dead row never knew about
+keeps a stale forward lane. Descent correctness comes from the mask —
+dead lanes retire positionally (PAD in place, no compaction) inside
+both scorers before anything downstream sees them.
+
+:func:`scrub_dead_references` makes that claim testable: it rewrites
+the host adjacency so every lane referencing a tombstoned row is PAD'd
+*at the same lane position* the mask would retire it. Running descent
+over the scrubbed index with an all-live mask must then be bitwise
+equal to running the original index under its tombstone mask — same
+candidate multiset, same lane order, same merge tie-breaks
+(``tests/test_lifecycle.py`` locks this down across the plan matrix).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.types import NEG_INF, PAD_ID
+
+
+def scrub_dead_references(index, resort: bool = False) -> int:
+    """PAD every adjacency lane referencing a tombstoned row, in place.
+
+    Mutates ``index`` (callers wanting a comparator copy deepcopy
+    first), journals the touched rows, and bumps the version once so
+    device copies resync. Returns the number of lanes scrubbed.
+
+    ``resort=False`` (default) keeps lanes POSITIONAL — holes stay
+    where the dead ids sat, exactly mirroring the in-kernel mask; this
+    is the bitwise-comparator mode, and it intentionally leaves forward
+    rows out of by-similarity order. ``resort=True`` restores the sort
+    invariant afterwards (physical cleanup mode) at the cost of the
+    positional equivalence.
+    """
+    bufs = index._bufs
+    n = index.n
+    tomb = bufs["tombstone"][:n]
+    graph_ids = bufs["graph_ids"]
+    graph_sims = bufs["graph_sims"]
+    rev_ids = bufs["rev_ids"]
+    touched = set()
+    n_scrubbed = 0
+    for u in np.flatnonzero(~tomb):
+        u = int(u)
+        row = graph_ids[u]
+        dead = (row != PAD_ID) & tomb[np.clip(row, 0, n - 1)]
+        if dead.any():
+            graph_ids[u][dead] = PAD_ID
+            graph_sims[u][dead] = NEG_INF
+            if resort:
+                index._resort_row(u)
+            touched.add(u)
+            n_scrubbed += int(dead.sum())
+        rrow = rev_ids[u]
+        rdead = (rrow != PAD_ID) & tomb[np.clip(rrow, 0, n - 1)]
+        if rdead.any():
+            rev_ids[u][rdead] = PAD_ID
+            touched.add(u)
+            n_scrubbed += int(rdead.sum())
+    if touched:
+        index.version += 1
+        index._journal_rows(tuple(sorted(touched)))
+    return n_scrubbed

@@ -37,6 +37,7 @@ from typing import Optional
 import numpy as np
 
 from repro.eval.metrics import knn_recall
+from repro.lifecycle import LifecycleConfig, LifecycleManager
 from repro.query.index import KNNIndex
 from repro.query.plan import DescentPlan, PlanSpec
 from repro.query.router import (fingerprint_profiles, placements,
@@ -76,6 +77,10 @@ class QueryConfig:
     kernel: bool = False       # fused Pallas descent-scoring hop
                                # (kernels/descent_score; bitwise-identical
                                # results, interpret mode off-TPU)
+    ttl: int = 0               # lifecycle: ticks before an untouched row
+                               # expires (0 = never)
+    repair_every: int = 0      # lifecycle: churn-repair cadence in ticks
+                               # (0 = off)
 
     def spec(self) -> PlanSpec:
         """Map the flag pile onto a validated plan on the three axes."""
@@ -99,6 +104,9 @@ class QueryEngine:
         self.n_inserted = 0
         self.n_refreshes = 0
         self._cohort: list[tuple[int, np.ndarray]] = []  # (uid, profile)
+        self.lifecycle = LifecycleManager(
+            self, LifecycleConfig(ttl=self.qc.ttl,
+                                  repair_every=self.qc.repair_every))
 
     @property
     def n_ticks(self) -> int:
@@ -133,8 +141,13 @@ class QueryEngine:
 
         The open-loop benchmark drives this directly so arrivals can be
         interleaved with service; :meth:`run` loops it until drained.
+        Lifecycle maintenance (TTL expiry, churn repair) fires AFTER the
+        plan step — between compiled programs — so continuous slots
+        in flight never see a half-applied mutation mid-hop.
         """
-        return self.plan.step(self.queue, self.done)
+        n = self.plan.step(self.queue, self.done)
+        self.lifecycle.maintain()
+        return n
 
     def tick(self) -> int:
         """One continuous tick (alias of :meth:`step` for slot plans)."""
@@ -203,9 +216,27 @@ class QueryEngine:
         # Keep the materialized CSR row, not the caller's object — a
         # one-shot iterable profile is already exhausted by now.
         self._cohort.append((u, items[offsets[0]:offsets[1]].copy()))
+        self.lifecycle.note_insert(u)
         if len(self._cohort) >= self.qc.refresh_every:
             self.flush_cohort()
         return u
+
+    # -- lifecycle (deletes / updates / TTL — src/repro/lifecycle) ---------
+
+    def remove_user(self, u: int):
+        """Delete user ``u`` online: tombstone, patch incident edges,
+        deregister from routing. Queries in flight and later never see
+        it (the tombstone mask is threaded through every plan)."""
+        self.lifecycle.remove(u)
+
+    def update_user(self, u: int, profile):
+        """Replace ``u``'s profile online: re-sketch, re-score incident
+        edges, and re-link via a localized neighborhood descent."""
+        return self.lifecycle.update(u, profile)
+
+    def touch(self, u: int):
+        """Record activity on ``u`` (resets its TTL window)."""
+        self.lifecycle.touch(u)
 
     def flush_cohort(self) -> int:
         """Re-run C² clustering on the accumulated insert cohort (see
@@ -234,5 +265,6 @@ class QueryEngine:
         k = len(reqs[0].ids)
         exact_ids, _ = exact_knn(self.index.words, self.index.card,
                                  np.asarray(qgf.words),
-                                 np.asarray(qgf.card), k)
+                                 np.asarray(qgf.card), k,
+                                 tomb=self.index.tombstone)
         return knn_recall(np.stack([r.ids for r in reqs]), exact_ids)

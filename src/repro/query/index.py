@@ -25,9 +25,27 @@ itself, amortized O(1) per insert. The public array attributes
 the spare capacity. :meth:`refresh_cohort` re-runs C² clustering
 (recursive FRH splitting) on an inserted cohort to register new routable
 clusters once enough users accumulated online.
+
+Lifecycle (repro/lifecycle/): beyond append, rows can be *removed*
+(:meth:`remove_user` — tombstone + best-effort edge patching; the
+tombstone mask, threaded through descent, is what guarantees a dead id
+never reaches a result) and *updated* (:meth:`swap_profile` re-sketches
+the fingerprint and re-scores incident edges; :meth:`relink_user`
+replaces the forward row from a fresh localized search). Removed rows
+join a free list and are reused by later appends, so a churning index
+does not grow without bound. Cluster membership stays append-only even
+through deletes — the sharded placement's residency monotonicity
+depends on it — so "deregistration" happens at seed time: the router
+filters tombstoned members out of every candidate list. Deletions get
+their own journal (mirroring the row/membership journals) so sharded
+device state reshards incrementally through deletes, and all three
+journals *compact* (merge old entries into a superset entry stamped at
+the drop boundary) rather than truncate, so long-running engines keep
+delta-syncing instead of periodically rematerializing shard tensors.
 """
 from __future__ import annotations
 
+import heapq
 from pathlib import Path
 
 import numpy as np
@@ -40,18 +58,22 @@ from repro.core.merge import merge_partial
 from repro.core.params import C2Params
 from repro.core.splitting import split_config
 from repro.knn.greedy import reverse_neighbors_np
-from repro.sketch.goldfinger import GoldFinger, fingerprint_dataset
+from repro.sketch.goldfinger import (GoldFinger, fingerprint_dataset,
+                                     popcount_rows)
 from repro.types import NEG_INF, PAD_ID, Dataset, KNNGraph
 
-_ROWS = ("graph_ids", "graph_sims", "words", "card", "rev_ids")
+_ROWS = ("graph_ids", "graph_sims", "words", "card", "rev_ids",
+         "tombstone", "last_touch")
 _TABLES = ("hash_seeds", "cluster_paths", "cluster_config",
            "cluster_members", "cluster_offsets")
 _META = ("b", "n_bits", "fp_seed", "split_depth", "version")
 
 _ROW_DTYPES = {"graph_ids": np.int32, "graph_sims": np.float32,
-               "words": np.uint32, "card": np.int32, "rev_ids": np.int32}
+               "words": np.uint32, "card": np.int32, "rev_ids": np.int32,
+               "tombstone": np.bool_, "last_touch": np.int64}
 _ROW_FILL = {"graph_ids": PAD_ID, "graph_sims": NEG_INF, "words": 0,
-             "card": 0, "rev_ids": PAD_ID}
+             "card": 0, "rev_ids": PAD_ID, "tombstone": False,
+             "last_touch": 0}
 
 
 class KNNIndex:
@@ -61,16 +83,37 @@ class KNNIndex:
     buffers; ``index.graph_ids`` etc. are length-``n`` views.
     """
 
+    # Journal bounds. When a journal overflows its cap, the oldest half is
+    # *compacted* — merged into one superset entry stamped at the drop
+    # boundary's version — so the journal keeps reaching back to its
+    # original base (readers synced anywhere above it replay a superset of
+    # what they missed; every consumer scatters/unions current values, so
+    # superset replay is idempotent). Only when the merged entry itself
+    # would exceed _LOG_MERGE_MAX rows does the trim fall back to dropping
+    # and advancing the base (readers below it must fully resync).
+    _ROW_LOG_CAP = 2048
+    _MEMBER_LOG_CAP = 8192
+    _TOMB_LOG_CAP = 2048
+    _LOG_MERGE_MAX = 4096
+
     def __init__(self, *, graph_ids, graph_sims, words, card, rev_ids,
                  hash_seeds, cluster_paths, cluster_config, cluster_members,
                  cluster_offsets, b, n_bits, fp_seed, split_depth,
-                 version: int = 0):
+                 version: int = 0, tombstone=None, last_touch=None):
         self._n = int(np.asarray(graph_ids).shape[0])
         self._bufs: dict[str, np.ndarray] = {}
-        for name, arr in (("graph_ids", graph_ids), ("graph_sims", graph_sims),
-                          ("words", words), ("card", card),
-                          ("rev_ids", rev_ids)):
-            self._bufs[name] = np.ascontiguousarray(arr, _ROW_DTYPES[name])
+        row_args = {"graph_ids": graph_ids, "graph_sims": graph_sims,
+                    "words": words, "card": card, "rev_ids": rev_ids,
+                    "tombstone": tombstone, "last_touch": last_touch}
+        for name in _ROWS:
+            arr = row_args[name]
+            if arr is None:  # pre-lifecycle artifact: all rows live/untouched
+                arr = np.full((self._n,), _ROW_FILL[name],
+                              dtype=_ROW_DTYPES[name])
+            buf = np.ascontiguousarray(arr, _ROW_DTYPES[name])
+            if not buf.flags.writeable:  # jax-derived arrays alias read-only
+                buf = buf.copy()
+            self._bufs[name] = buf
         # FRH routing tables.
         self.hash_seeds = np.asarray(hash_seeds, dtype=np.int32)
         self.cluster_paths = np.asarray(cluster_paths, dtype=np.int32)
@@ -106,6 +149,20 @@ class KNNIndex:
         # version itself: entries logged AT that version may be split
         # across the drop boundary, so readers synced there must resync.
         self._member_log_base = self.version - 1
+        # Deletion journal: (version, rows whose liveness flipped) — a
+        # remove_user tombstones a row, a free-list reuse resurrects it.
+        # Consumers scatter the row's *current* tombstone value, so
+        # replaying a superset (after compaction) is idempotent.
+        self._tomb_log: list[tuple[int, tuple[int, ...]]] = []
+        self._tomb_log_base = self.version
+        # Free list of tombstoned rows, reused lowest-id-first by
+        # append_user. Rebuilt from the tombstone column on load. A reused
+        # row keeps its old cluster memberships (membership is append-only)
+        # — stale residency only adds seed candidates, it cannot surface a
+        # wrong result; refresh_cohort registers the new profile properly.
+        self._free_rows: list[int] = [
+            int(i) for i in np.flatnonzero(self._bufs["tombstone"][:self._n])]
+        heapq.heapify(self._free_rows)
 
     # -- row buffers (views over spare capacity) ---------------------------
 
@@ -138,6 +195,15 @@ class KNNIndex:
     @property
     def n(self) -> int:
         return self._n
+
+    @property
+    def n_live(self) -> int:
+        """Rows that are not tombstoned (n counts dead rows too)."""
+        return self._n - int(self._bufs["tombstone"][: self._n].sum())
+
+    def alive_ids(self) -> np.ndarray:
+        """int64 ids of live rows, ascending."""
+        return np.flatnonzero(~self.tombstone)
 
     @property
     def k(self) -> int:
@@ -194,10 +260,25 @@ class KNNIndex:
 
     def _log_member(self, ci: int, user: int):
         self._member_log.append((self.version, int(ci), int(user)))
-        if len(self._member_log) > 8192:  # bounded, like the row journal
-            drop = self._member_log[:4096]
-            self._member_log = self._member_log[4096:]
-            self._member_log_base = drop[-1][0]
+        if len(self._member_log) > self._MEMBER_LOG_CAP:
+            half = self._MEMBER_LOG_CAP // 2
+            drop, keep = self._member_log[:half], self._member_log[half:]
+            boundary = drop[-1][0]
+            # Compact: re-stamp the dropped registrations at the boundary
+            # version, deduplicated but order-preserving — readers synced
+            # below the boundary replay them as a superset in the original
+            # order (union is idempotent; order fixes residency layout).
+            seen: set[tuple[int, int]] = set()
+            merged: list[tuple[int, int, int]] = []
+            for _, mci, mu in drop:
+                if (mci, mu) not in seen:
+                    seen.add((mci, mu))
+                    merged.append((boundary, mci, mu))
+            if len(merged) <= self._LOG_MERGE_MAX:
+                self._member_log = merged + keep
+            else:  # merged entry too big: drop and advance the floor
+                self._member_log = keep
+                self._member_log_base = boundary
 
     def members_added_since(self, version: int
                             ) -> list[tuple[int, int]] | None:
@@ -232,9 +313,17 @@ class KNNIndex:
         neighborhood has a free slot). O(degree): one row write plus one
         in-place patch per neighbor — the backing buffers only reallocate
         on geometric-doubling boundaries.
+
+        Tombstoned rows are recycled lowest-id-first: the returned id may
+        be a previously removed user's row (its liveness flip rides the
+        deletion journal so synced device masks follow).
         """
-        u = self._n
-        self._ensure_capacity(u + 1)
+        reused = bool(self._free_rows)
+        if reused:
+            u = heapq.heappop(self._free_rows)
+        else:
+            u = self._n
+            self._ensure_capacity(u + 1)
         bufs = self._bufs
         k, r = self.k, bufs["rev_ids"].shape[1]
         row_ids = np.full(k, PAD_ID, dtype=np.int32)
@@ -274,15 +363,42 @@ class KNNIndex:
                     rev_row[n_rev] = v
                     n_rev += 1
         rev_ids[u] = rev_row
-        self._n = u + 1
+        bufs["tombstone"][u] = False
+        bufs["last_touch"][u] = 0
+        if not reused:
+            self._n = u + 1
         self.version += 1
         touched = (u,) + tuple(int(v) for v in row_ids if v != PAD_ID)
-        self._row_log.append((self.version, touched))
-        if len(self._row_log) > 2048:  # bounded journal; old entries
-            drop = self._row_log[:1024]  # force a full resync instead
-            self._row_log = self._row_log[1024:]
-            self._row_log_base = drop[-1][0]
+        self._journal_rows(touched)
+        if reused:
+            self._journal_tomb((u,))
         return u
+
+    def _journal_rows(self, touched: tuple[int, ...]):
+        self._row_log.append((self.version, tuple(touched)))
+        if len(self._row_log) > self._ROW_LOG_CAP:
+            self._row_log, self._row_log_base = self._compact_touched_log(
+                self._row_log, self._ROW_LOG_CAP // 2, self._row_log_base)
+
+    def _journal_tomb(self, rows: tuple[int, ...]):
+        self._tomb_log.append((self.version, tuple(rows)))
+        if len(self._tomb_log) > self._TOMB_LOG_CAP:
+            self._tomb_log, self._tomb_log_base = self._compact_touched_log(
+                self._tomb_log, self._TOMB_LOG_CAP // 2, self._tomb_log_base)
+
+    def _compact_touched_log(self, log, half, base):
+        """Shared trim for the (version, rows) journals: merge the oldest
+        half into one superset entry stamped at the drop boundary, keeping
+        the base (see class docstring on journal bounds); fall back to a
+        base-advancing drop when the merged entry would be oversized."""
+        drop, keep = log[:half], log[half:]
+        boundary = drop[-1][0]
+        merged: set[int] = set()
+        for _, rows in drop:
+            merged.update(rows)
+        if len(merged) <= self._LOG_MERGE_MAX:
+            return [(boundary, tuple(sorted(merged)))] + keep, base
+        return keep, boundary
 
     def rows_changed_since(self, version: int) -> set[int] | None:
         """Row indices mutated after ``version``, or None when the
@@ -295,6 +411,202 @@ class KNNIndex:
                 break
             rows.update(touched)
         return rows
+
+    def tombstones_since(self, version: int) -> set[int] | None:
+        """Rows whose liveness flipped after ``version`` (removal or
+        free-row reuse), or None when the deletion journal no longer
+        reaches back (caller re-derives the mask from :attr:`tombstone`).
+        Consumers scatter each row's *current* tombstone value, so the
+        superset replay a compacted journal produces is idempotent."""
+        if version < self._tomb_log_base:
+            return None
+        rows: set[int] = set()
+        for v, rs in reversed(self._tomb_log):
+            if v <= version:
+                break
+            rows.update(rs)
+        return rows
+
+    # -- lifecycle mutations (repro/lifecycle drives these) ----------------
+
+    def _check_live(self, u: int) -> int:
+        u = int(u)
+        if not 0 <= u < self._n:
+            raise IndexError(f"user {u} out of range [0, {self._n})")
+        if self._bufs["tombstone"][u]:
+            raise ValueError(f"user {u} is tombstoned")
+        return u
+
+    def _pair_sim(self, a: int, b: int) -> np.float32:
+        """Host GoldFinger Jaccard estimate, same f32 epilogue as the
+        device scorers (goldfinger.jaccard_pairwise) so host-written edge
+        sims are bit-compatible with descent-produced ones."""
+        bufs = self._bufs
+        inter = np.float32(int(popcount_rows(
+            (bufs["words"][a] & bufs["words"][b])[None, :])[0]))
+        union = np.float32(bufs["card"][a]) + np.float32(bufs["card"][b]) \
+            - inter
+        if not union > 0:
+            return np.float32(0.0)
+        return np.float32(inter / max(union, np.float32(1.0)))
+
+    def _resort_row(self, u: int):
+        """Restore row ``u``'s by-similarity order after an in-place lane
+        edit (stable, so equal-sim lanes keep their relative order — the
+        same discipline as append_user's bounded-heap patch)."""
+        bufs = self._bufs
+        o = np.argsort(-bufs["graph_sims"][u], kind="stable")
+        bufs["graph_ids"][u] = bufs["graph_ids"][u][o]
+        bufs["graph_sims"][u] = bufs["graph_sims"][u][o]
+
+    def _drop_from_rev(self, v: int, u: int) -> bool:
+        """Remove ``u`` from rev(v), shift-compacting so free lanes stay
+        at the tail (where append_user's patch expects them)."""
+        rev = self._bufs["rev_ids"]
+        keep = rev[v] != u
+        if keep.all():
+            return False
+        row = rev[v][keep]
+        rev[v] = PAD_ID
+        rev[v, : len(row)] = row
+        return True
+
+    def remove_user(self, u: int):
+        """Tombstone ``u`` and patch its known incident edges out.
+
+        The reverse table is bounded (tail-replacement drops entries), so
+        the patch is best-effort repair, not the correctness mechanism:
+        the tombstone mask — threaded through routing and descent — is
+        what guarantees a dead id is never seeded, scored, or returned,
+        even while stale references linger in unpatched rows. Cluster
+        memberships are intentionally kept (residency must stay
+        append-only for delta resharding); the router filters dead
+        members at seed time. The freed row joins the reuse list.
+        """
+        u = self._check_live(u)
+        bufs = self._bufs
+        graph_ids, graph_sims = bufs["graph_ids"], bufs["graph_sims"]
+        touched = {u}
+        for w in bufs["rev_ids"][u]:  # u leaves in-neighbors' forward rows
+            if w == PAD_ID:
+                continue
+            w = int(w)
+            lanes = graph_ids[w] == u
+            if lanes.any():
+                graph_ids[w][lanes] = PAD_ID
+                graph_sims[w][lanes] = NEG_INF
+                self._resort_row(w)
+                touched.add(w)
+        for v in graph_ids[u]:  # u leaves out-neighbors' reverse rows
+            if v == PAD_ID:
+                continue
+            if self._drop_from_rev(int(v), u):
+                touched.add(int(v))
+        graph_ids[u] = PAD_ID
+        graph_sims[u] = NEG_INF
+        bufs["rev_ids"][u] = PAD_ID
+        bufs["words"][u] = 0
+        bufs["card"][u] = 0
+        bufs["tombstone"][u] = True
+        bufs["last_touch"][u] = 0
+        heapq.heappush(self._free_rows, u)
+        self.version += 1
+        self._journal_rows(tuple(sorted(touched)))
+        self._journal_tomb((u,))
+
+    def swap_profile(self, u: int, words_row: np.ndarray, card_row: int):
+        """Replace ``u``'s fingerprint and re-score every edge incident
+        to it, keeping stored sims consistent with the sketches. The
+        graph *topology* is untouched — pair with :meth:`relink_user`
+        (fed by a localized neighbors-of-neighbors descent) to move
+        ``u``'s forward edges to its new neighborhood.
+        """
+        u = self._check_live(u)
+        bufs = self._bufs
+        bufs["words"][u] = np.asarray(words_row, np.uint32)
+        bufs["card"][u] = card_row
+        graph_ids, graph_sims = bufs["graph_ids"], bufs["graph_sims"]
+        touched = {u}
+        for j, v in enumerate(graph_ids[u]):
+            if v != PAD_ID:
+                graph_sims[u, j] = self._pair_sim(u, int(v))
+        self._resort_row(u)
+        for w in bufs["rev_ids"][u]:  # in-neighbors' lanes pointing at u
+            if w == PAD_ID:
+                continue
+            w = int(w)
+            lanes = graph_ids[w] == u
+            if lanes.any():
+                graph_sims[w][lanes] = self._pair_sim(w, u)
+                self._resort_row(w)
+                touched.add(w)
+        self.version += 1
+        self._journal_rows(tuple(sorted(touched)))
+
+    def relink_user(self, u: int, nbr_ids: np.ndarray,
+                    nbr_sims: np.ndarray):
+        """Replace ``u``'s forward row with a fresh search result and
+        restore mutuality — the update counterpart of append_user's
+        reverse patch. ``nbr_ids``/``nbr_sims`` come from a localized
+        descent over ``u``'s (new) fingerprint; ``u`` itself and
+        tombstoned ids are dropped defensively.
+        """
+        u = self._check_live(u)
+        bufs = self._bufs
+        graph_ids, graph_sims = bufs["graph_ids"], bufs["graph_sims"]
+        rev_ids = bufs["rev_ids"]
+        k, r = self.k, rev_ids.shape[1]
+        nbr_ids = np.asarray(nbr_ids)
+        nbr_sims = np.asarray(nbr_sims, dtype=np.float32)
+        ok = (nbr_ids != PAD_ID) & (nbr_ids != u) \
+            & ~bufs["tombstone"][np.clip(nbr_ids, 0, self._n - 1)]
+        valid = np.flatnonzero(ok)[:k]
+        order = valid[np.argsort(-nbr_sims[valid], kind="stable")]
+        row_ids = np.full(k, PAD_ID, dtype=np.int32)
+        row_sims = np.full(k, NEG_INF, dtype=np.float32)
+        row_ids[: len(order)] = nbr_ids[order]
+        row_sims[: len(order)] = nbr_sims[order]
+
+        touched = {u}
+        new_set = set(int(v) for v in row_ids if v != PAD_ID)
+        for v in graph_ids[u]:  # detach from dropped out-neighbors
+            if v == PAD_ID or int(v) in new_set:
+                continue
+            if self._drop_from_rev(int(v), u):
+                touched.add(int(v))
+        graph_ids[u] = row_ids
+        graph_sims[u] = row_sims
+        for v, s in zip(row_ids, row_sims):
+            if v == PAD_ID:
+                break
+            v = int(v)
+            touched.add(v)
+            if u not in rev_ids[v]:  # u → v now exists
+                free = np.flatnonzero(rev_ids[v] == PAD_ID)
+                rev_ids[v, free[0] if len(free) else r - 1] = u
+            # Mutual bounded-heap insert of u into v's forward row (or a
+            # sim refresh when the edge already exists).
+            lanes = graph_ids[v] == u
+            if lanes.any():
+                graph_sims[v][lanes] = s
+                self._resort_row(v)
+                continue
+            eff = np.where(graph_ids[v] == PAD_ID, NEG_INF, graph_sims[v])
+            j = int(np.argmin(eff))
+            if s > eff[j]:
+                graph_ids[v, j] = u
+                graph_sims[v, j] = s
+                self._resort_row(v)
+                if v not in rev_ids[u]:  # v → u now exists
+                    free = np.flatnonzero(rev_ids[u] == PAD_ID)
+                    rev_ids[u, free[0] if len(free) else r - 1] = v
+        self.version += 1
+        self._journal_rows(tuple(sorted(touched)))
+
+    def touch_row(self, u: int, clock: int):
+        """Stamp ``u``'s TTL clock (host-only state: never shipped to
+        device, so no journal entry and no version bump)."""
+        self._bufs["last_touch"][self._check_live(u)] = clock
 
     # -- cohort refresh (amortized re-clustering) --------------------------
 

@@ -209,12 +209,13 @@ class DescentPlan:
                     rows = np.fromiter(sorted(changed), dtype=np.int64,
                                        count=len(changed))
                     idx = jnp.asarray(rows)
-                    g, r, w, c = arrays
+                    g, r, w, c, t = arrays
                     arrays = (
                         g.at[idx].set(jnp.asarray(ix.graph_ids[rows])),
                         r.at[idx].set(jnp.asarray(ix.rev_ids[rows])),
                         w.at[idx].set(jnp.asarray(ix.words[rows])),
                         c.at[idx].set(jnp.asarray(ix.card[rows])),
+                        t.at[idx].set(jnp.asarray(ix.tombstone[rows])),
                     )
                 self._single = (ix.version, cap, arrays)
                 return arrays
@@ -226,6 +227,7 @@ class DescentPlan:
                                constant_values=PAD_ID)),
             jnp.asarray(np.pad(ix.words, ((0, pad), (0, 0)))),
             jnp.asarray(np.pad(ix.card, (0, pad))),
+            jnp.asarray(np.pad(ix.tombstone, (0, pad))),
         )
         self._single = (ix.version, cap, arrays)
         return arrays
@@ -254,17 +256,33 @@ class DescentPlan:
         """Route + beam-descend already-fingerprinted query profiles
         through this plan's placement (one closed wave, whatever the
         plan's batching — the raw batch API)."""
-        spec = self.spec
-        beam = max(self.beam, k)
-        hops = spec.hops if hops is None else hops
-        seeds = route(self.index, items, offsets, spec.seeds_per_config,
+        seeds = route(self.index, items, offsets, self.spec.seeds_per_config,
                       placed=placed)
-        qn = len(offsets) - 1
+        return self.descend_rows(qgf.words, qgf.card, seeds, k, hops=hops)
+
+    def descend_rows(self, q_words, q_card, seeds, k: int, *,
+                     hops: int | None = None, beam: int | None = None):
+        """Beam-descend from EXPLICIT seed rows — no FRH routing.
+
+        The lifecycle subsystem's localized re-linking runs through this:
+        an updated (or repair-pass) user seeds descent from its current
+        graph neighborhood instead of hash placement, so the search cost
+        stays bounded by the neighborhood, not the index. Same compiled
+        programs as :meth:`search` (the seed width — and the optional
+        ``beam`` override — are the only new shape axes, and callers
+        keep them static)."""
+        spec = self.spec
+        beam = max(self.beam if beam is None else beam, k)
+        hops = spec.hops if hops is None else hops
+        q_words = np.asarray(q_words)
+        q_card = np.asarray(q_card)
+        seeds = np.asarray(seeds)
+        qn = q_words.shape[0]
         qcap = capacity_of(qn, minimum=8)
-        qw = np.zeros((qcap, qgf.words.shape[1]), dtype=np.uint32)
-        qw[:qn] = qgf.words
+        qw = np.zeros((qcap, q_words.shape[1]), dtype=np.uint32)
+        qw[:qn] = q_words
         qcard = np.zeros(qcap, dtype=np.int32)
-        qcard[:qn] = qgf.card
+        qcard[:qn] = q_card
         qseeds = np.full((qcap, seeds.shape[1]), PAD_ID, dtype=np.int32)
         qseeds[:qn] = seeds
         if spec.placement > 1:
@@ -272,12 +290,12 @@ class DescentPlan:
                 qw, qcard, qseeds, k=k, beam=beam, hops=hops,
                 kernel=spec.kernel, tag=self.key)
         else:
-            graph_ids, rev_ids, words, card = self._sync_single()
+            graph_ids, rev_ids, words, card, tomb = self._sync_single()
             ids, sims = batched_descent(
                 graph_ids, rev_ids, words, card,
                 jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
                 k=k, beam=beam, hops=hops, kernel=spec.kernel,
-                tag=self.key)
+                tag=self.key, tomb=tomb)
         return np.asarray(ids)[:qn], np.asarray(sims)[:qn]
 
     def query_batch(self, profiles, k: int | None = None,
@@ -403,15 +421,16 @@ class DescentPlan:
                         jnp.asarray(new_w), jnp.asarray(new_c),
                         jnp.asarray(l_seeds), jnp.asarray(idx),
                         st.q_words, st.q_card, st.beam_ids, st.beam_sims,
-                        beam=st.beam, tag=self.key)
+                        beam=st.beam, tag=self.key,
+                        l_tomb=self._sharded._dev[5])
             else:
-                words, card = self._sync_single()[2:4]
+                words, card, tomb = self._sync_single()[2:5]
                 st.q_words, st.q_card, st.beam_ids, st.beam_sims = \
                     slot_admit(words, card, jnp.asarray(new_w),
                                jnp.asarray(new_c), jnp.asarray(new_s),
                                jnp.asarray(idx), st.q_words, st.q_card,
                                st.beam_ids, st.beam_sims, beam=st.beam,
-                               tag=self.key)
+                               tag=self.key, tomb=tomb)
 
     def _step_continuous(self, queue, done) -> int:
         """One continuous tick: admit into free slots, advance every
@@ -468,13 +487,13 @@ class DescentPlan:
             st.beam_ids, st.beam_sims, changed = shard_slot_hop(
                 *sd._dev[:4], st.q_words, st.q_card,
                 st.beam_ids, st.beam_sims, jnp.asarray(active),
-                kernel=spec.kernel, tag=self.key)
+                kernel=spec.kernel, tag=self.key, l_tomb=sd._dev[5])
         else:
-            graph_ids, rev_ids, words, card = self._sync_single()
+            graph_ids, rev_ids, words, card, tomb = self._sync_single()
             st.beam_ids, st.beam_sims, changed = slot_hop(
                 graph_ids, rev_ids, words, card, st.q_words, st.q_card,
                 st.beam_ids, st.beam_sims, jnp.asarray(active),
-                kernel=spec.kernel, tag=self.key)
+                kernel=spec.kernel, tag=self.key, tomb=tomb)
         st.hops_done[active] += 1
         self.n_ticks += 1
         finished = active & (

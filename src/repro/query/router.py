@@ -98,12 +98,20 @@ def route(index: KNNIndex, items: np.ndarray, offsets: np.ndarray,
     falls back to an id-strided sample of the indexed users so descent
     always has a non-empty frontier. Pass ``placed`` (from
     :func:`placements`) to reuse already-computed hash placements.
+
+    Tombstoned users never seed: cluster membership is append-only (the
+    sharded placement's residency monotonicity depends on it), so
+    "router deregistration" of a removed user happens here — dead
+    members are filtered out of every candidate list, and the
+    routing-miss fallback samples live rows only.
     """
     cap = seeds_per_config
     q = len(offsets) - 1
+    tomb = index.tombstone
     out = np.full((q, index.t * cap), PAD_ID, dtype=np.int32)
     if placed is None:
         placed = placements(index, items, offsets)
+    alive = None
     for qi, per_cfg in enumerate(placed):
         for cfg, matched in enumerate(per_cfg):
             col = cfg * cap
@@ -111,12 +119,16 @@ def route(index: KNNIndex, items: np.ndarray, offsets: np.ndarray,
             for ci in matched:
                 if room <= 0:
                     break
-                mem = index.cluster_users(ci)[:room]
+                mem = index.cluster_users(ci)
+                mem = mem[~tomb[mem]][:room]
                 out[qi, col:col + len(mem)] = mem
                 col += len(mem)
                 room -= len(mem)
         if (out[qi] == PAD_ID).all():  # total routing miss
-            fill = np.linspace(0, index.n - 1, num=min(cap, index.n),
-                               dtype=np.int32)
+            if alive is None:
+                alive = index.alive_ids()
+            take = np.linspace(0, len(alive) - 1,
+                               num=min(cap, len(alive)), dtype=np.int64)
+            fill = alive[take].astype(np.int32)
             out[qi, : len(fill)] = fill
     return out

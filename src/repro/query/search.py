@@ -39,19 +39,24 @@ from repro.sketch.goldfinger import jaccard_pairwise_auto
 from repro.types import NEG_INF, PAD_ID
 
 
-def descent_init(words, card, q_words, q_card, seed_ids, *, beam: int):
+def descent_init(words, card, q_words, q_card, seed_ids, *, beam: int,
+                 tomb=None):
     """Score routed seeds and select the initial beam per query.
 
     Returns (beam_ids int32[q, beam], beam_sims float32[q, beam]),
-    sim-descending, PAD_ID padded.
+    sim-descending, PAD_ID padded. ``tomb`` (bool[n] or None) PADs out
+    seeds naming tombstoned rows before scoring — a dead user is never
+    seeded, even from a stale routing snapshot.
     """
+    if tomb is not None:
+        seed_ids = ds_ref.mask_dead(tomb, jnp.asarray(seed_ids))
     score = ds_ref.row_scorer(words, card)
     return merge_topk(seed_ids, score(q_words, q_card, seed_ids), beam)
 
 
 def descent_step(graph_ids, rev_ids, words, card,
                  q_words, q_card, beam_ids, beam_sims, *,
-                 kernel: bool = False):
+                 kernel: bool = False, tomb=None):
     """One descent hop: expand every query's beam by its friends-of-friends.
 
     Gathers forward + reverse neighbors of the current beam, scores them
@@ -64,18 +69,22 @@ def descent_step(graph_ids, rev_ids, words, card,
 
     ``kernel`` is static: False runs the unfused jnp reference, True the
     fused Pallas hop — bitwise-identical (ids and sims) either way.
+    ``tomb`` (bool[n] or None) suppresses tombstoned beam/candidate
+    lanes before scoring, identically in both implementations.
     """
     if kernel:
         return ds_ops.descent_hop(graph_ids, rev_ids, words, card,
-                                  q_words, q_card, beam_ids, beam_sims)
+                                  q_words, q_card, beam_ids, beam_sims,
+                                  tomb=tomb)
     return ds_ref.descent_hop_ref(graph_ids, rev_ids, words, card,
-                                  q_words, q_card, beam_ids, beam_sims)
+                                  q_words, q_card, beam_ids, beam_sims,
+                                  tomb=tomb)
 
 
 def descent_kernel(graph_ids, rev_ids, words, card,
                    q_words, q_card, seed_ids, *,
                    k: int, beam: int, hops: int, kernel: bool = False,
-                   tag=None):
+                   tag=None, tomb=None):
     """Beam search over the index graph for a wave of queries.
 
     graph_ids int32[n, kg], rev_ids int32[n, r]: forward/reverse adjacency.
@@ -96,11 +105,12 @@ def descent_kernel(graph_ids, rev_ids, words, card,
         trace.bump(("query_wave", tag, q_words.shape[0],
                     graph_ids.shape[0], k, beam, hops, kernel))
     beam_ids, beam_sims = descent_init(
-        words, card, q_words, q_card, seed_ids, beam=beam)
+        words, card, q_words, q_card, seed_ids, beam=beam, tomb=tomb)
 
     def hop(state, _):
         return descent_step(graph_ids, rev_ids, words, card,
-                            q_words, q_card, *state, kernel=kernel), None
+                            q_words, q_card, *state, kernel=kernel,
+                            tomb=tomb), None
 
     (beam_ids, beam_sims), _ = jax.lax.scan(
         hop, (beam_ids, beam_sims), None, length=hops)
@@ -117,7 +127,7 @@ batched_descent = functools.partial(
                                     "beam_ids", "beam_sims"))
 def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
                q_words, q_card, beam_ids, beam_sims, *, beam: int,
-               tag=None):
+               tag=None, tomb=None):
     """Admit up to A requests into the persistent slot state.
 
     ``new_*`` are A-row admission buckets (A is a small fixed capacity,
@@ -133,7 +143,7 @@ def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
     trace.bump(("query_slot_admit", tag, new_words.shape[0],
                 beam_ids.shape[0], beam))
     init_ids, init_sims = descent_init(
-        words, card, new_words, new_card, new_seeds, beam=beam)
+        words, card, new_words, new_card, new_seeds, beam=beam, tomb=tomb)
     return (q_words.at[slot_idx].set(new_words, mode="drop"),
             q_card.at[slot_idx].set(new_card, mode="drop"),
             beam_ids.at[slot_idx].set(init_ids, mode="drop"),
@@ -144,7 +154,7 @@ def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
                    donate_argnames=("beam_ids", "beam_sims"))
 def slot_hop(graph_ids, rev_ids, words, card,
              q_words, q_card, beam_ids, beam_sims, active, *,
-             kernel: bool = False, tag=None):
+             kernel: bool = False, tag=None, tomb=None):
     """One continuous-batching tick over the fixed slot array.
 
     All slot-axis inputs have the static capacity ``n_slots`` so one
@@ -165,7 +175,7 @@ def slot_hop(graph_ids, rev_ids, words, card,
                 beam_ids.shape[1], graph_ids.shape[0], kernel))
     nids, nsims = descent_step(graph_ids, rev_ids, words, card,
                                q_words, q_card, beam_ids, beam_sims,
-                               kernel=kernel)
+                               kernel=kernel, tomb=tomb)
     changed = jnp.any(nids != beam_ids, axis=1) & active
     out_ids = jnp.where(active[:, None], nids, beam_ids)
     out_sims = jnp.where(active[:, None], nsims, beam_sims)
@@ -193,7 +203,7 @@ def slot_hop(graph_ids, rev_ids, words, card,
                                     "beam_ids", "beam_sims"))
 def shard_slot_admit(l_words, l_card, new_words, new_card, new_seeds,
                      slot_idx, q_words, q_card, beam_ids, beam_sims, *,
-                     beam: int, tag=None):
+                     beam: int, tag=None, l_tomb=None):
     """Admit up to A requests into every shard's persistent slot state.
 
     ``new_seeds`` int32[S, A, cols] are OWNER-PARTITIONED shard-local
@@ -205,15 +215,17 @@ def shard_slot_admit(l_words, l_card, new_words, new_card, new_seeds,
     """
     trace.bump(("query_shard_slot_admit", tag, l_words.shape[0],
                 new_words.shape[0], beam_ids.shape[1], beam))
+    if l_tomb is None:
+        l_tomb = jnp.zeros(l_words.shape[:2], bool)
 
-    def per_shard(words, card, seeds, bids, bsims):
+    def per_shard(words, card, seeds, tomb, bids, bsims):
         init_ids, init_sims = descent_init(
-            words, card, new_words, new_card, seeds, beam=beam)
+            words, card, new_words, new_card, seeds, beam=beam, tomb=tomb)
         return (bids.at[slot_idx].set(init_ids, mode="drop"),
                 bsims.at[slot_idx].set(init_sims, mode="drop"))
 
     beam_ids, beam_sims = jax.vmap(per_shard)(
-        l_words, l_card, new_seeds, beam_ids, beam_sims)
+        l_words, l_card, new_seeds, l_tomb, beam_ids, beam_sims)
     return (q_words.at[slot_idx].set(new_words, mode="drop"),
             q_card.at[slot_idx].set(new_card, mode="drop"),
             beam_ids, beam_sims)
@@ -223,7 +235,7 @@ def shard_slot_admit(l_words, l_card, new_words, new_card, new_seeds,
                    donate_argnames=("beam_ids", "beam_sims"))
 def shard_slot_hop(l_graph, l_rev, l_words, l_card, q_words, q_card,
                    beam_ids, beam_sims, active, *,
-                   kernel: bool = False, tag=None):
+                   kernel: bool = False, tag=None, l_tomb=None):
     """One continuous tick over every shard's fixed slot array.
 
     The per-shard hop is :func:`descent_step` vmapped over the shard
@@ -237,16 +249,18 @@ def shard_slot_hop(l_graph, l_rev, l_words, l_card, q_words, q_card,
     trace.bump(("query_shard_slot_hop", tag, l_graph.shape[0],
                 beam_ids.shape[1], beam_ids.shape[2], l_graph.shape[1],
                 kernel))
+    if l_tomb is None:
+        l_tomb = jnp.zeros(l_words.shape[:2], bool)
 
-    def per_shard(g, r, w, c, bids, bsims):
+    def per_shard(g, r, w, c, t, bids, bsims):
         nids, nsims = descent_step(g, r, w, c, q_words, q_card,
-                                   bids, bsims, kernel=kernel)
+                                   bids, bsims, kernel=kernel, tomb=t)
         changed = jnp.any(nids != bids, axis=1)
         return (jnp.where(active[:, None], nids, bids),
                 jnp.where(active[:, None], nsims, bsims), changed)
 
     beam_ids, beam_sims, changed = jax.vmap(per_shard)(
-        l_graph, l_rev, l_words, l_card, beam_ids, beam_sims)
+        l_graph, l_rev, l_words, l_card, l_tomb, beam_ids, beam_sims)
     return beam_ids, beam_sims, jnp.any(changed, axis=0) & active
 
 
@@ -276,15 +290,17 @@ def shard_slot_topk(l2g, beam_ids, beam_sims, *, k: int, tag=None):
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def _exact_block(words, card, q_words, q_card, k: int):
+def _exact_block(words, card, tomb, q_words, q_card, k: int):
     trace.bump(("exact_block", words.shape[0], q_words.shape[0], k))
     sims = jaccard_pairwise_auto(q_words, q_card, words, card)
+    sims = jnp.where(tomb[None, :], NEG_INF, sims)
     top_sims, top_ids = jax.lax.top_k(sims, k)
     top_ids = jnp.where(top_sims == NEG_INF, PAD_ID, top_ids.astype(jnp.int32))
     return top_ids, top_sims
 
 
-def exact_knn(words, card, q_words, q_card, k: int, block: int = 256):
+def exact_knn(words, card, q_words, q_card, k: int, block: int = 256,
+              tomb=None):
     """Brute-force query KNN (ground truth for recall), query-blocked.
 
     Every block — including the final partial one and short query sets —
@@ -292,9 +308,13 @@ def exact_knn(words, card, q_words, q_card, k: int, block: int = 256):
     compiles per (index rows, block, k) no matter how many queries each
     call brings (the same remainder-padding trick ``local_knn`` uses for
     its capacity-group batches). Pad rows are zero-fingerprint and are
-    sliced off before returning.
+    sliced off before returning. ``tomb`` (bool[n] or None) drops
+    tombstoned rows to −inf so the ground truth ranks survivors only —
+    an all-live mask is synthesized when None to keep one compile shape.
     """
     words, card = jnp.asarray(words), jnp.asarray(card)
+    tomb = (jnp.zeros(words.shape[0], bool) if tomb is None
+            else jnp.asarray(tomb))
     q = q_words.shape[0]
     ids_out = np.full((q, k), PAD_ID, dtype=np.int32)
     sims_out = np.full((q, k), NEG_INF, dtype=np.float32)
@@ -304,7 +324,7 @@ def exact_knn(words, card, q_words, q_card, k: int, block: int = 256):
         qw[: e - s] = np.asarray(q_words[s:e])
         qc = np.zeros(block, dtype=np.int32)
         qc[: e - s] = np.asarray(q_card[s:e])
-        ids, sims = _exact_block(words, card, jnp.asarray(qw),
+        ids, sims = _exact_block(words, card, tomb, jnp.asarray(qw),
                                  jnp.asarray(qc), k)
         ids_out[s:e] = np.asarray(ids)[: e - s]
         sims_out[s:e] = np.asarray(sims)[: e - s]

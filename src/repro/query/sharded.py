@@ -228,11 +228,13 @@ class ShardedDescent:
         rev = np.full((cap, kr), PAD_ID, dtype=np.int32)
         words = np.zeros((cap, W), dtype=np.uint32)
         card = np.zeros(cap, dtype=np.int32)
+        tomb = np.zeros(cap, dtype=bool)
         graph[:m] = self._remap(g2l, ix.graph_ids[res])
         rev[:m] = self._remap(g2l, ix.rev_ids[res])
         words[:m] = ix.words[res]
         card[:m] = ix.card[res]
-        return l2g, g2l, graph, rev, words, card
+        tomb[:m] = ix.tombstone[res]
+        return l2g, g2l, graph, rev, words, card, tomb
 
     def _materialize(self):
         """Full (re)build of every shard's resident tensors.
@@ -256,6 +258,7 @@ class ShardedDescent:
             np.stack([b[4] for b in blocks]),   # l_words
             np.stack([b[5] for b in blocks]),   # l_card
             np.stack([b[0] for b in blocks]),   # l2g
+            np.stack([b[6] for b in blocks]),   # l_tomb
         )
         self._dev = tuple(self._pin(a) for a in arrays)
         self.version = ix.version
@@ -283,11 +286,16 @@ class ShardedDescent:
         old_l2g = np.asarray(self._dev[4])
         rows = ix.rows_changed_since(self.version)
         mems = ix.members_added_since(self.version)
-        if rows is None or mems is None:  # journal expired
+        tombs = ix.tombstones_since(self.version)
+        if rows is None or mems is None or tombs is None:  # journal expired
             self.plan = extend_plan(self.base_plan, ix)
             self._materialize()
             self._record_remap(old_l2g)
             return "rebuild"
+        # Liveness flips always ride the row journal too (remove_user and
+        # free-row reuse journal the flipped row), so rows ⊇ tombs when
+        # both journals reach back — the union is defensive.
+        rows = rows | tombs
         old_n = self._n_seen
         S = self.plan.n_shards
         # Incremental plan extension (== extend_plan(base_plan, ix);
@@ -341,10 +349,10 @@ class ShardedDescent:
         dev = list(self._dev)
         for s in range(S):
             if s in stale:
-                l2g_b, g2l_b, graph, rev, words, card = \
+                l2g_b, g2l_b, graph, rev, words, card, tomb = \
                     self._shard_block(s, cap)
                 self._g2l[s] = g2l_b
-                updates = (graph, rev, words, card, l2g_b)
+                updates = (graph, rev, words, card, l2g_b, tomb)
                 dev = [a.at[s].set(jnp.asarray(u))
                        for a, u in zip(dev, updates)]
                 continue
@@ -376,6 +384,7 @@ class ShardedDescent:
             dev[3] = dev[3].at[s, li].set(jnp.asarray(ix.card[touch]))
             dev[4] = dev[4].at[s, li].set(
                 jnp.asarray(touch.astype(np.int32)))
+            dev[5] = dev[5].at[s, li].set(jnp.asarray(ix.tombstone[touch]))
         if self._sharding is not None:  # keep the per-device pinning
             dev = [a if a.sharding == self._sharding(a.ndim)
                    else jax.device_put(a, self._sharding(a.ndim))
@@ -469,19 +478,20 @@ def g2l_local(g2l_row: np.ndarray, r: int) -> bool:
     return r < len(g2l_row) and g2l_row[r] != PAD_ID
 
 
-def _per_shard(graph, rev, words, card, l2g, q_words, q_card, seeds,
+def _per_shard(graph, rev, words, card, l2g, tomb, q_words, q_card, seeds,
                *, k, beam, hops, kernel=False):
     """One shard's descent; results mapped back to global ids."""
     ids, sims = descent_kernel(graph, rev, words, card,
                                q_words, q_card, seeds,
-                               k=k, beam=beam, hops=hops, kernel=kernel)
+                               k=k, beam=beam, hops=hops, kernel=kernel,
+                               tomb=tomb)
     safe = jnp.where(ids == PAD_ID, 0, ids)
     return jnp.where(ids == PAD_ID, PAD_ID, l2g[safe]), sims
 
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "beam", "hops", "kernel", "tag"))
-def _vmapped_descent(l_graph, l_rev, l_words, l_card, l2g,
+def _vmapped_descent(l_graph, l_rev, l_words, l_card, l2g, l_tomb,
                      q_words, q_card, l_seeds, *, k, beam, hops,
                      kernel=False, tag=None):
     """Single-device fallback: the shard axis is a vmap axis (the fused
@@ -489,10 +499,10 @@ def _vmapped_descent(l_graph, l_rev, l_words, l_card, l2g,
     trace.bump(("query_wave_sharded", tag, l_graph.shape[0],
                 q_words.shape[0], k, beam, hops, kernel))
     return jax.vmap(
-        lambda g, r, w, c, m, s: _per_shard(
-            g, r, w, c, m, q_words, q_card, s, k=k, beam=beam, hops=hops,
-            kernel=kernel)
-    )(l_graph, l_rev, l_words, l_card, l2g, l_seeds)
+        lambda g, r, w, c, m, t, s: _per_shard(
+            g, r, w, c, m, t, q_words, q_card, s, k=k, beam=beam,
+            hops=hops, kernel=kernel)
+    )(l_graph, l_rev, l_words, l_card, l2g, l_tomb, l_seeds)
 
 
 @functools.lru_cache(maxsize=64)
@@ -508,16 +518,18 @@ def _mesh_program(mesh, *, k, beam, hops, kernel=False, tag=None):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def device_fn(g, r, w, c, m, qw, qc, s):
+    def device_fn(g, r, w, c, m, t, qw, qc, s):
         trace.bump(("query_wave_sharded", tag, len(mesh.devices),
                     qw.shape[0], k, beam, hops, kernel))
-        ids, sims = _per_shard(g[0], r[0], w[0], c[0], m[0], qw, qc, s[0],
+        ids, sims = _per_shard(g[0], r[0], w[0], c[0], m[0], t[0],
+                               qw, qc, s[0],
                                k=k, beam=beam, hops=hops, kernel=kernel)
         return ids[None], sims[None]
 
     in_specs = (P("shards", None, None), P("shards", None, None),
                 P("shards", None, None), P("shards", None),
-                P("shards", None), P(), P(), P("shards", None, None))
+                P("shards", None), P("shards", None),
+                P(), P(), P("shards", None, None))
     out_specs = (P("shards", None, None), P("shards", None, None))
     return jax.jit(shard_map(device_fn, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_rep=False))

@@ -1,3 +1,3 @@
 """Continuous-batching scheduler shared by the query and LM engines."""
-from repro.sched.scheduler import SlotScheduler  # noqa: F401
+from repro.sched.scheduler import Cadence, SlotScheduler  # noqa: F401
 from repro.sched import trace  # noqa: F401

@@ -36,6 +36,35 @@ from typing import Any, Optional
 import numpy as np
 
 
+class Cadence:
+    """Deterministic periodic trigger for between-tick maintenance.
+
+    Serving loops call :meth:`tick` once per scheduler step; it returns
+    True every ``every``-th call. The lifecycle subsystem hangs its
+    repair passes off one of these so maintenance lands BETWEEN compiled
+    steps — in-flight continuous slots never observe a half-applied
+    mutation — and so the fire pattern is a pure function of the step
+    count (reproducible under the property suite's interleavings).
+    ``every <= 0`` disables the trigger entirely.
+    """
+
+    def __init__(self, every: int):
+        self.every = every
+        self._count = 0
+        self.n_fired = 0
+
+    def tick(self) -> bool:
+        """Advance one step; True when this step is a fire boundary."""
+        if self.every <= 0:
+            return False
+        self._count += 1
+        if self._count < self.every:
+            return False
+        self._count = 0
+        self.n_fired += 1
+        return True
+
+
 class SlotScheduler:
     """FIFO admission queue + fixed-capacity slot assignment."""
 

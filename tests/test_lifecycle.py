@@ -1,0 +1,296 @@
+"""Lifecycle battery (deterministic): deletes, updates, TTL expiry,
+repair, and the tombstone mask's two central theorems —
+
+* kernel parity: the fused Pallas hop under a tombstone mask is
+  bitwise-identical to the jnp reference, and its ``n_scored`` counter
+  shows dead lanes retiring BEFORE the estimator;
+* masking ≡ excision: serving a churned index under its tombstone mask
+  equals (bitwise, ids AND sims) serving a copy whose dead references
+  were physically PAD'd in place (``lifecycle.scrub_dead_references``).
+
+``tests/test_lifecycle_properties.py`` carries the hypothesis
+interleaving battery on top of these.
+"""
+import copy
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.kernels.descent_score import ops as ds_ops
+from repro.kernels.descent_score import ref as ds_ref
+from repro.lifecycle import scrub_dead_references
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import build_index
+from repro.query.search import descent_init, exact_knn
+from repro.sched import Cadence
+from repro.types import PAD_ID
+
+DEAD = (2, 7, 19, 33)
+
+
+@pytest.fixture(scope="module")
+def index():
+    ds = make_dataset("synth", scale=0.05, seed=5)
+    return build_index(ds, C2Params(k=8, b=64, t=4, max_cluster=32))
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    qds = make_dataset("synth", scale=0.05, seed=7)
+    return [qds.profile(u) for u in range(24)]
+
+
+def _engine(ix, **kw):
+    kw.setdefault("refresh_every", 10**9)
+    kw.setdefault("hops", 2)
+    return QueryEngine(ix, QueryConfig(k=8, beam=12, slots=8, **kw))
+
+
+# -- scheduler cadence -----------------------------------------------------
+
+def test_cadence_fires_every_n():
+    c = Cadence(3)
+    fired = [c.tick() for _ in range(9)]
+    assert fired == [False, False, True] * 3
+    assert c.n_fired == 3
+
+
+def test_cadence_disabled():
+    c = Cadence(0)
+    assert not any(c.tick() for _ in range(5))
+    assert c.n_fired == 0
+
+
+# -- index-level mutation primitives ---------------------------------------
+
+def test_remove_tombstones_and_clears_row(index):
+    ix = copy.deepcopy(index)
+    v0 = ix.version
+    ix.remove_user(3)
+    assert ix.tombstone[3] and ix.n_live == ix.n - 1
+    assert (ix.graph_ids[3] == PAD_ID).all()
+    assert (ix.rev_ids[3] == PAD_ID).all()
+    assert ix.card[3] == 0 and (ix.words[3] == 0).all()
+    assert ix.version > v0
+    assert ix.tombstones_since(v0) == {3}
+    with pytest.raises(ValueError):
+        ix.remove_user(3)  # double delete
+
+
+def test_free_list_reuse_keeps_n(index, profiles):
+    ix = copy.deepcopy(index)
+    eng = _engine(ix)
+    n0 = ix.n
+    eng.remove_user(5)
+    u = eng.insert(profiles[0])
+    assert u == 5 and ix.n == n0 and not ix.tombstone[5]
+    # The resurrection rides the tombstone journal both ways.
+    assert 5 in ix.tombstones_since(0)
+
+
+def test_update_rescores_and_relinks(index, profiles):
+    ix = copy.deepcopy(index)
+    eng = _engine(ix)
+    ids, sims = eng.update_user(6, profiles[2])
+    # Row sims are bit-consistent with the host pair scorer.
+    for j, v in enumerate(ix.graph_ids[6]):
+        if v != PAD_ID:
+            assert ix.graph_sims[6, j] == ix._pair_sim(6, int(v))
+    # Serving the same profile now finds the updated user first.
+    got, gsims = eng.query_batch([profiles[2]])
+    assert got[0, 0] == 6 and gsims[0, 0] == pytest.approx(1.0)
+    # Mutuality: every forward neighbor knows u in reverse.
+    for v in ix.graph_ids[6]:
+        if v != PAD_ID:
+            assert 6 in ix.rev_ids[int(v)]
+
+
+# -- tombstone mask in the scorers -----------------------------------------
+
+def test_kernel_tomb_parity_and_suppression(index):
+    ix = copy.deepcopy(index)
+    rng = np.random.default_rng(0)
+    qsel = rng.integers(0, ix.n, 16)
+    qw, qc = jnp.asarray(ix.words[qsel]), jnp.asarray(ix.card[qsel])
+    seeds = jnp.asarray(rng.integers(0, ix.n, (16, 12)).astype(np.int32))
+    for u in DEAD:
+        ix.remove_user(u)
+    tomb = jnp.asarray(ix.tombstone)
+    g, r, w, c = map(jnp.asarray, (ix.graph_ids, ix.rev_ids,
+                                   ix.words, ix.card))
+    bi, bs = descent_init(w, c, qw, qc, seeds, beam=12, tomb=tomb)
+    assert not np.isin(np.asarray(bi), DEAD).any()
+    ri, rs = ds_ref.descent_hop_ref(g, r, w, c, qw, qc, bi, bs, tomb=tomb)
+    ki, ks, nsc = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
+                                     tomb=tomb, with_counts=True)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_array_equal(np.asarray(rs), np.asarray(ks))
+    assert not np.isin(np.asarray(ki), DEAD).any()
+    # Dead candidate lanes retire BEFORE the estimator: the masked run
+    # scores no more lanes than the unmasked one on the same beams.
+    _, _, nsc0 = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
+                                    with_counts=True)
+    assert int(np.asarray(nsc).sum()) < int(np.asarray(nsc0).sum())
+    # An all-live mask is bitwise a no-op (None synthesizes it).
+    zi, zs = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
+                                tomb=jnp.zeros(ix.n, bool))
+    ni, ns = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs)
+    np.testing.assert_array_equal(np.asarray(zi), np.asarray(ni))
+    np.testing.assert_array_equal(np.asarray(zs), np.asarray(ns))
+
+
+def test_exact_knn_excludes_dead(index):
+    ix = copy.deepcopy(index)
+    for u in DEAD:
+        ix.remove_user(u)
+    qsel = [1, 4, 9]
+    ids, _ = exact_knn(ix.words, ix.card, ix.words[qsel], ix.card[qsel],
+                       k=8, tomb=ix.tombstone)
+    assert not np.isin(np.asarray(ids), DEAD).any()
+
+
+# -- masking == excision ---------------------------------------------------
+
+@pytest.mark.parametrize("kernel", [False, True])
+def test_masking_equals_excision(index, profiles, kernel):
+    ix = copy.deepcopy(index)
+    eng = _engine(ix, kernel=kernel)
+    for u in DEAD:
+        eng.remove_user(u)
+    ids_m, sims_m = eng.query_batch(profiles[:6])
+    scrubbed = copy.deepcopy(ix)
+    scrub_dead_references(scrubbed)
+    eng2 = _engine(scrubbed, kernel=kernel)
+    ids_s, sims_s = eng2.query_batch(profiles[:6])
+    np.testing.assert_array_equal(ids_m, ids_s)
+    np.testing.assert_array_equal(sims_m, sims_s)
+    assert not np.isin(ids_m, DEAD).any()
+
+
+# -- serving across the plan matrix ----------------------------------------
+
+@pytest.mark.parametrize("shards,continuous,kernel", [
+    (1, False, False), (1, True, True), (3, False, True), (3, True, False),
+])
+def test_no_dead_id_served(index, profiles, shards, continuous, kernel):
+    ix = copy.deepcopy(index)
+    eng = _engine(ix, shards=shards, continuous=continuous, kernel=kernel)
+    eng.query_batch(profiles[:4])  # freeze base plan / warm programs
+    for u in DEAD:
+        eng.remove_user(u)
+    eng.update_user(5, profiles[10])
+    reused = eng.insert(profiles[11])  # resurrects the lowest freed row
+    assert reused == min(DEAD)
+    still_dead = [u for u in DEAD if u != reused]
+    for i, p in enumerate(profiles[:8]):
+        eng.submit(QueryRequest(rid=i, profile=np.asarray(p, np.int32)))
+    eng.run()
+    for r in eng.done:
+        assert not np.isin(r.ids, still_dead).any()
+        live = r.ids[r.ids != PAD_ID]
+        assert not ix.tombstone[live].any()
+
+
+def test_mid_flight_delete_masks_next_hop(index, profiles):
+    """A delete landing between continuous ticks reaches in-flight beams
+    as the updated mask on their next hop — no dead id survives to the
+    released result."""
+    ix = copy.deepcopy(index)
+    eng = _engine(ix, continuous=True, hops=4)
+    for i, p in enumerate(profiles[:6]):
+        eng.submit(QueryRequest(rid=i, profile=np.asarray(p, np.int32)))
+    eng.plan.step(eng.queue, eng.done)  # tick 1: admit + first hop
+    st = eng.plan._slots
+    in_beam = np.unique(np.asarray(st.beam_ids))
+    in_beam = in_beam[(in_beam != PAD_ID) & ~ix.tombstone[
+        np.clip(in_beam, 0, ix.n - 1)]]
+    victim = int(in_beam[len(in_beam) // 2])  # currently mid-beam
+    eng.remove_user(victim)
+    eng.run()
+    assert len(eng.done) == 6
+    for r in eng.done:
+        assert victim not in r.ids
+
+
+# -- TTL expiry ------------------------------------------------------------
+
+def test_ttl_expiry_spares_touched_rows(index, profiles):
+    ix = copy.deepcopy(index)
+    eng = _engine(ix, ttl=3)
+    keep = (0, 1)
+    for step in range(6):
+        for u in keep:
+            eng.touch(u)
+        eng.submit(QueryRequest(rid=step,
+                                profile=np.asarray(profiles[step], np.int32)))
+        eng.step()
+    assert eng.lifecycle.n_expired > 0
+    for u in keep:
+        assert not ix.tombstone[u]
+    # Expiry is batched: at most expire_batch rows per maintain call.
+    assert eng.lifecycle.n_expired <= 6 * eng.lifecycle.cfg.expire_batch
+
+
+def test_inserted_rows_start_fresh_ttl(index, profiles):
+    ix = copy.deepcopy(index)
+    eng = _engine(ix, ttl=10)
+    eng.lifecycle.clock = 7
+    u = eng.insert(profiles[0])
+    assert ix.last_touch[u] == 7
+
+
+# -- repair ----------------------------------------------------------------
+
+def test_repair_fills_delete_holes(index, profiles):
+    ix = copy.deepcopy(index)
+    eng = _engine(ix, repair_every=1)
+    for u in DEAD:
+        eng.remove_user(u)
+    holey = [int(v) for v in ix.alive_ids()
+             if (ix.graph_ids[v] == PAD_ID).any()]
+    assert holey, "deletes should have punched holes"
+    n = eng.lifecycle.repair()
+    assert n == len(holey)
+    for v in holey:
+        row = ix.graph_ids[v]
+        assert not (row == PAD_ID).any(), f"row {v} still has holes"
+        assert not np.isin(row, DEAD).any()
+        # Rebuilt rows stay sorted by similarity (stable invariant).
+        sims = ix.graph_sims[v]
+        assert (np.diff(sims) <= 0).all()
+    assert not eng.lifecycle._touched  # cohort drained
+
+
+def test_repair_leaves_full_rows_alone(index):
+    ix = copy.deepcopy(index)
+    eng = _engine(ix, repair_every=1)
+    eng.lifecycle._touched = {int(u) for u in ix.alive_ids()[:20]
+                              if not (ix.graph_ids[u] == PAD_ID).any()}
+    before = ix.graph_ids.copy()
+    assert eng.lifecycle.repair() == 0
+    np.testing.assert_array_equal(ix.graph_ids, before)
+
+
+# -- single-placement delta sync under churn -------------------------------
+
+@pytest.mark.parametrize("kernel", [False, True])
+def test_single_delta_sync_matches_rebuild(index, profiles, kernel):
+    from repro.query.plan import DescentPlan
+
+    ix = copy.deepcopy(index)
+    eng = _engine(ix, kernel=kernel, repair_every=2)
+    eng.query_batch(profiles[:4])  # materialize device copies
+    for u in DEAD:
+        eng.remove_user(u)
+    eng.update_user(5, profiles[10])
+    eng.insert(profiles[11])
+    eng.lifecycle.repair()
+    delta = eng.plan._sync_single()       # journal-scatter repaired
+    fresh = DescentPlan(ix, eng.plan.spec)._sync_single()
+    for a, b, name in zip(delta, fresh,
+                          ("graph", "rev", "words", "card", "tomb")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)

@@ -212,7 +212,8 @@ def _assert_matches_rebuild(engine):
                                       fresh.plan.residents[s],
                                       err_msg=f"residents shard={s}")
     np.testing.assert_array_equal(sd._g2l, fresh._g2l)
-    names = ("l_graph", "l_rev", "l_words", "l_card", "l2g")
+    names = ("l_graph", "l_rev", "l_words", "l_card", "l2g", "l_tomb")
+    assert len(sd._dev) == len(fresh._dev) == len(names)
     for a, b, name in zip(sd._dev, fresh._dev, names):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                       err_msg=name)
