@@ -18,6 +18,13 @@ under load for wave vs continuous serving — the tail-latency case
 continuous batching exists for — both single-device AND under the
 sharded placement (the ``sharded_N_continuous`` block: per-shard slot
 arrays with a release-time cross-shard merge, same Poisson protocol).
+``--overload`` adds the SLO-serving rows: a 0.85/0.95/1.2-offered-load
+sweep under slo admission (priority classes + deadlines, explicit
+shedding, bounded pending queue) against a FIFO baseline whose queue
+collapses at 1.2x, the adaptive-hop-budget comparison (free a slot once
+its top-k prefix stabilizes vs run to budget), and the
+journal-invalidated result cache on a repeated-query stream with
+interleaved churn (gated bitwise against cache-off).
 ``--smoke`` shrinks the workload for CI: it still exercises build,
 every serving plan, and insertion, and fails loudly (exit 1) if the
 sharded mode regresses against single-device beyond the allowed
@@ -88,8 +95,24 @@ def _warm_wave_capacities(engine: QueryEngine, profiles, hop_set=(None,)):
             n *= 2
 
 
+def _latency_row(reqs) -> dict:
+    """p50/p95/max over SERVED requests (rejected ones carry no service
+    latency — their submit→shed interval is queueing, not service)."""
+    lats = np.array([r.latency for r in reqs
+                     if r.status == "done" and r.latency is not None])
+    if not len(lats):
+        return {"p50_latency_ms": None, "p95_latency_ms": None,
+                "max_latency_ms": None}
+    return {
+        "p50_latency_ms": round(float(np.percentile(lats, 50)) * 1e3, 2),
+        "p95_latency_ms": round(float(np.percentile(lats, 95)) * 1e3, 2),
+        "max_latency_ms": round(float(lats.max()) * 1e3, 2),
+    }
+
+
 def open_loop(engine: QueryEngine, profiles, rate_qps: float,
-              budgets=None, seed: int = 0, timeout_s: float = 300.0) -> dict:
+              budgets=None, seed: int = 0, stall_s: float = 60.0,
+              priorities=None, deadline_ms: float = 0.0) -> dict:
     """Poisson-arrival open-loop serving through ``engine.step()``.
 
     Requests are submitted at their arrival times (exponential
@@ -98,24 +121,35 @@ def open_loop(engine: QueryEngine, profiles, rate_qps: float,
     behind in-flight work, which is where wave and continuous modes
     diverge. ``budgets`` (optional int[n]) gives each request its own
     hop budget: wave mode convoys a wave to its deepest member, while
-    continuous mode frees each slot at its own budget.
+    continuous mode frees each slot at its own budget. ``priorities``
+    (optional int[n]) assigns SLO classes and ``deadline_ms`` stamps
+    each request with a deadline that many ms after its arrival — both
+    only matter to engines configured with slo admission.
+
+    SHED requests count as completions (they come back with a
+    ``rejected`` marker): an overloaded slo engine shedding its way
+    through the backlog is making progress, not stalling. The stall
+    guard therefore watches completions of EITHER kind — it fires only
+    when the engine stops completing work for ``stall_s`` seconds,
+    which is a serving bug, never a load response.
     """
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_qps,
                                          size=len(profiles)))
-    reqs = [QueryRequest(rid=i, profile=p,
-                         hops=None if budgets is None else int(budgets[i]))
+    reqs = [QueryRequest(
+                rid=i, profile=p,
+                hops=None if budgets is None else int(budgets[i]),
+                priority=0 if priorities is None else int(priorities[i]))
             for i, p in enumerate(profiles)]
     n_done0 = len(engine.done)
+    sched = engine.plan.scheduler
     n_steps = 0
+    max_depth = 0
     t0 = time.perf_counter()
+    t_progress = t0
     i = 0
     while len(engine.done) - n_done0 < len(reqs):
         now = time.perf_counter() - t0
-        if now > timeout_s:
-            raise RuntimeError(
-                f"open_loop stalled: {len(engine.done) - n_done0}"
-                f"/{len(reqs)} done after {timeout_s}s")
         while i < len(reqs) and arrivals[i] <= now:
             req = reqs[i]
             # Latency counts from the ARRIVAL time, not from when the
@@ -123,24 +157,55 @@ def open_loop(engine: QueryEngine, profiles, rate_qps: float,
             # while a long wave was in flight has been waiting since its
             # arrival, and that queueing is the quantity under test.
             req.t_submit = t0 + arrivals[i]
+            if deadline_ms > 0:
+                req.deadline = req.t_submit + deadline_ms / 1e3
             engine.queue.append(req)
             i += 1
+        depth = len(engine.queue) + (len(sched.pending) if sched else 0)
+        max_depth = max(max_depth, depth)
         if engine.busy():
-            engine.step()
+            if engine.step():
+                t_progress = time.perf_counter()
             n_steps += 1
         elif i < len(reqs):  # idle: sleep to the next arrival
+            t_progress = time.perf_counter()
             time.sleep(max(min(arrivals[i] - now, 0.01), 0.0))
+        if time.perf_counter() - t_progress > stall_s:
+            part = engine.done[n_done0:]
+            n_srv = sum(1 for r in part if r.status == "done")
+            n_shd = sum(1 for r in part if r.rejected)
+            raise RuntimeError(
+                f"open_loop stalled: engine stopped completing work — "
+                f"{len(part)}/{len(reqs)} complete ({n_srv} served, "
+                f"{n_shd} shed) and no completion of either kind for "
+                f"{stall_s:.0f}s. Shedding counts as progress here, so "
+                f"this is a serving bug, not admission-control load "
+                f"response.")
     dt = max(time.perf_counter() - t0, 1e-9)
-    served = engine.done[n_done0:]
-    lats = np.array([r.latency for r in served])
-    return {
+    finished = engine.done[n_done0:]
+    served = [r for r in finished if r.status == "done"]
+    n_shed = len(finished) - len(served)
+    row = {
         "rate_qps": round(rate_qps, 1),
         "achieved_qps": round(len(served) / dt, 1),
         "steps": n_steps,
-        "p50_latency_ms": round(float(np.percentile(lats, 50)) * 1e3, 2),
-        "p95_latency_ms": round(float(np.percentile(lats, 95)) * 1e3, 2),
-        "max_latency_ms": round(float(lats.max()) * 1e3, 2),
+        "served": len(served),
+        "shed": n_shed,
+        "max_queue_depth": int(max_depth),
+        **_latency_row(finished),
     }
+    if priorities is not None:
+        classes = {}
+        for cls in sorted(set(int(c) for c in priorities)):
+            part = [r for r in finished if r.priority == cls]
+            classes[str(cls)] = {
+                "n": len(part),
+                "served": sum(1 for r in part if r.status == "done"),
+                "shed": sum(1 for r in part if r.rejected),
+                **_latency_row(part),
+            }
+        row["classes"] = classes
+    return row
 
 
 def run_continuous(index, profiles, k: int, beam: int, hops: int,
@@ -327,6 +392,247 @@ def run_churn(index0, profiles, k: int, beam: int, hops: int,
     }
 
 
+def run_overload(index, profiles, k: int, beam: int, hops: int,
+                 slots: int, seed: int = 0, high_frac: float = 0.3,
+                 loads=(0.85, 0.95, 1.2)) -> dict:
+    """SLO admission under increasing offered load, vs a FIFO baseline.
+
+    The workload mixes ``high_frac`` high-priority (class 0) requests
+    into a best-effort (class 1) stream, every request carrying a
+    deadline. Offered load is calibrated against the engine's own
+    closed-loop throughput; at 1.2× the engine CANNOT serve everything,
+    and the two policies diverge: slo admission serves class 0 first
+    and sheds expired/overflow class-1 work explicitly (bounded queue,
+    high-priority p95 held near its uncontended value), while FIFO
+    accepts everything in arrival order (queue collapse: depth and tail
+    latency grow with the backlog, every class degrades together).
+    """
+    # A long stream: overload is an ACCUMULATION phenomenon (a 20%
+    # deficit needs arrivals to pile into a backlog), so the absolute
+    # excess — and the shed counts — scale with stream length. The
+    # overloaded 1.2x rows run a 2x-longer stream for the same reason:
+    # FIFO's queue growth is linear in time, and the collapse contrast
+    # needs horizon to integrate over.
+    stream = profiles * 4
+    peak_stream = profiles * 8
+    rng = np.random.default_rng(seed + 3)
+    priorities = (rng.random(len(peak_stream)) >= high_frac) \
+        .astype(np.int64)
+
+    # Capacity: the engine's sustainable service rate, measured by a
+    # saturating open-loop probe — arrivals offered at 3x the closed-
+    # loop estimate keep every slot full for the whole stream, so the
+    # probe's achieved rate IS the demonstrated capacity. (The closed-
+    # loop qps alone underestimates it: its ramp and drain tail run
+    # with idle slots, and tick time itself shifts with occupancy.)
+    cal = QueryEngine(index, QueryConfig(k=k, beam=beam, hops=hops,
+                                         continuous=True, slots=slots))
+    for rid, p in enumerate(stream[: 2 * slots]):
+        cal.submit(QueryRequest(rid=-1 - rid, profile=p))
+    cal.run()
+    cal.done.clear()
+    for rid, p in enumerate(stream):
+        cal.submit(QueryRequest(rid=rid, profile=p))
+    est = cal.run()["qps"]
+    capacity = open_loop(cal, stream, 3.0 * max(est, 1.0),
+                         seed=seed)["achieved_qps"]
+
+    # Deadline: a tenth of the ideal full-stream duration — several
+    # uncontended service times, binding for work queued behind a
+    # sustained overload. max_pending is the hard bound, set well below
+    # the backlog a 20% deficit accumulates over this stream so the
+    # 1.2x row MUST shed (and the pending queue can never grow past the
+    # bound, unlike FIFO's).
+    deadline_ms = 0.1 * len(stream) / max(capacity, 1e-9) * 1e3
+    max_pending = max(slots // 2, len(stream) // 24)
+
+    slo_eng = QueryEngine(index, QueryConfig(
+        k=k, beam=beam, hops=hops, continuous=True, slots=slots,
+        admission="slo", max_pending=max_pending))
+    for rid, p in enumerate(stream[: 2 * slots]):
+        slo_eng.submit(QueryRequest(rid=-1 - rid, profile=p))
+    slo_eng.run()
+    slo_eng.done.clear()
+
+    slo_rows = {}
+    hp_recall = {}
+    for load in loads:
+        work = peak_stream if load > 1.0 else stream
+        n0 = len(slo_eng.done)
+        slo_rows[str(load)] = open_loop(
+            slo_eng, work, max(load * capacity, 1.0), seed=seed,
+            priorities=priorities[: len(work)], deadline_ms=deadline_ms)
+        hp = [r for r in slo_eng.done[n0:]
+              if r.priority == 0 and r.ids is not None]
+        hp_recall[str(load)] = round(
+            slo_eng.recall_vs_brute_force(hp), 4) if hp else None
+
+    # FIFO baseline at the overloaded point: the calibration engine IS
+    # a warm fifo continuous engine, so reuse it. Deadlines are stamped
+    # but fifo admission ignores them — nothing sheds, the queue absorbs
+    # the full excess.
+    fifo_row = open_loop(cal, peak_stream,
+                         max(loads[-1] * capacity, 1.0), seed=seed,
+                         priorities=priorities, deadline_ms=deadline_ms)
+
+    def hp_p95(row):
+        return row["classes"]["0"]["p95_latency_ms"]
+
+    base, peak = slo_rows[str(loads[0])], slo_rows[str(loads[-1])]
+    return {
+        "slots": slots,
+        "capacity_qps": round(capacity, 1),
+        "high_frac": high_frac,
+        "deadline_ms": round(deadline_ms, 1),
+        "max_pending": max_pending,
+        "arrivals": len(stream),
+        "arrivals_at_peak": len(peak_stream),
+        "slo": slo_rows,
+        "high_priority_recall": hp_recall,
+        f"fifo_{loads[-1]}": fifo_row,
+        # Degradation of the protected class across the load sweep, and
+        # the queue-collapse contrast at the overloaded point.
+        "hp_p95_degradation": (
+            round(hp_p95(peak) / max(hp_p95(base), 1e-9), 3)
+            if hp_p95(peak) is not None and hp_p95(base) else None),
+        "queue_collapse": {
+            "slo_max_queue_depth": peak["max_queue_depth"],
+            "fifo_max_queue_depth": fifo_row["max_queue_depth"],
+            "depth_ratio": round(
+                fifo_row["max_queue_depth"]
+                / max(peak["max_queue_depth"], 1), 2),
+            "slo_shed": peak["shed"],
+            "fifo_shed": fifo_row["shed"],
+        },
+    }
+
+
+def run_adaptive(index, profiles, k: int, beam: int, hops: int,
+                 slots: int, seed: int = 0, patience: int = 1) -> dict:
+    """Adaptive hop budgets: free a slot once its top-k prefix held
+    ``patience`` hops, vs running every request to a fixed 2× budget.
+
+    The deep budget is the refinement regime (the continuous-batching
+    motivation); most descents converge well before it. The fixed arm
+    burns the full budget anyway, the adaptive arm frees the slot when
+    the result has stopped moving — fewer ticks for the same stream,
+    measured as QPS against the recall it gives up (the exact-fixed-
+    point early exit already comes free; patience trades the last
+    epsilon of prefix churn for throughput).
+    """
+    deep = 2 * hops
+    rows = {}
+    for name, pat in (("fixed", 0), ("adaptive", patience)):
+        eng = QueryEngine(index, QueryConfig(
+            k=k, beam=beam, hops=deep, continuous=True, slots=slots,
+            adaptive=pat))
+        for rid, p in enumerate(profiles[: 2 * slots]):
+            eng.submit(QueryRequest(rid=-1 - rid, profile=p))
+        eng.run()
+        eng.done.clear()
+        ticks0 = eng.n_ticks
+        for rid, p in enumerate(profiles):
+            eng.submit(QueryRequest(rid=rid, profile=p))
+        stats = eng.run()
+        rows[name] = {
+            "qps": round(stats["qps"], 1),
+            "ticks": eng.n_ticks - ticks0,
+            "p95_latency_ms": round(stats["p95_latency_s"] * 1e3, 2),
+            f"recall_at_{k}": round(eng.recall_vs_brute_force(
+                eng.done[-len(profiles):]), 4),
+        }
+    rk = f"recall_at_{k}"
+    return {
+        "slots": slots,
+        "hop_budget": deep,
+        "patience": patience,
+        **rows,
+        "qps_gain": round(rows["adaptive"]["qps"]
+                          / max(rows["fixed"]["qps"], 1e-9), 3),
+        "ticks_saved": rows["fixed"]["ticks"] - rows["adaptive"]["ticks"],
+        "recall_delta": round(rows["adaptive"][rk] - rows["fixed"][rk], 4),
+    }
+
+
+def run_cache(index0, profiles, k: int, beam: int, hops: int,
+              insert_pool, seed: int = 0, repeat_factor: int = 4,
+              n_mutations: int = 6, capacity: int = 256) -> dict:
+    """Result cache on a repeated-query stream with interleaved churn.
+
+    The stream draws ``repeat_factor`` passes over a hot profile subset
+    (the recommendation front-door shape the cache exists for), with a
+    delete + insert between passes — each mutation flushes the cache via
+    the journal rule. Cache-on and cache-off run the IDENTICAL request
+    and mutation schedule on private index deepcopies; the gate is
+    bitwise equality of every (ids, sims) pair, with the hit rate and
+    flush count as the payoff/cost measurements.
+    """
+    import copy
+
+    rng = np.random.default_rng(seed + 9)
+    hot = profiles[: max(8, len(profiles) // 4)]
+    # First pass covers every hot profile (populating the cache), later
+    # passes redraw from the hot set — the repeated-query front-door
+    # shape the cache exists for.
+    order = np.concatenate([
+        np.arange(len(hot)),
+        rng.integers(0, len(hot), size=(repeat_factor - 1) * len(hot))])
+    wave = max(4, len(hot) // 2)
+    n_waves = int(np.ceil(len(order) / wave))
+    # Mutations at evenly spaced wave boundaries — each flushes the
+    # cache (journal rule), so they are capped to leave the cache at
+    # least one re-warm wave between flushes or the hit rate would
+    # measure the mutation cadence, not the cache.
+    n_mut = min(n_mutations, max(1, n_waves // 2 - 1))
+    mut_at = {round((m + 1) * n_waves / (n_mut + 1))
+              for m in range(n_mut)}
+
+    arms = {}
+    results = {}
+    for arm, cap in (("cache_off", 0), ("cache_on", capacity)):
+        ix = copy.deepcopy(index0)
+        eng = QueryEngine(ix, QueryConfig(
+            k=k, beam=beam, hops=hops, max_wave=wave,
+            refresh_every=10**9, cache=cap))
+        mut_rng = np.random.default_rng(seed + 11)  # same stream per arm
+        pool = iter(insert_pool)
+        rid = 0
+        t0 = time.perf_counter()
+        for wi in range(n_waves):
+            if wi in mut_at:
+                alive = ix.alive_ids()
+                eng.remove_user(int(alive[mut_rng.integers(len(alive))]))
+                eng.insert(next(pool))
+            for qi in order[wi * wave:(wi + 1) * wave]:
+                eng.submit(QueryRequest(rid=rid, profile=hot[int(qi)]))
+                rid += 1
+            eng.run()
+        dt = max(time.perf_counter() - t0, 1e-9)
+        results[arm] = {r.rid: (np.asarray(r.ids), np.asarray(r.sims))
+                        for r in eng.done}
+        arms[arm] = {"qps": round(len(order) / dt, 1)}
+        if eng.plan.cache is not None:
+            arms[arm]["cache"] = eng.plan.cache.stats()
+    bitwise = (set(results["cache_on"]) == set(results["cache_off"])
+               and all(np.array_equal(results["cache_on"][r][0],
+                                      results["cache_off"][r][0])
+                       and np.array_equal(results["cache_on"][r][1],
+                                          results["cache_off"][r][1])
+                       for r in results["cache_off"]))
+    return {
+        "hot_profiles": len(hot),
+        "requests": len(order),
+        "waves": n_waves,
+        "mutations": n_mut,
+        "capacity": capacity,
+        **arms,
+        "bitwise_equal": bitwise,
+        "hit_rate": arms["cache_on"]["cache"]["hit_rate"],
+        "qps_gain": round(arms["cache_on"]["qps"]
+                          / max(arms["cache_off"]["qps"], 1e-9), 3),
+    }
+
+
 def descent_scoring_stats(index, profiles, k: int, beam: int, hops: int,
                           seeds_per_config: int = 16) -> dict:
     """Per-hop scored-candidate counts through the fused kernel on the
@@ -361,7 +667,7 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         k: int = 10, beam: int = 32, hops: int = 3, seed: int = 0,
         shards: int = 2, oversample: float = 1.25,
         continuous: bool = False, slots: int = 32,
-        churn: bool = False) -> dict:
+        churn: bool = False, overload: bool = False) -> dict:
     if shards < 2:
         raise SystemExit("query_bench compares sharded vs single-device "
                          "serving; --shards must be >= 2")
@@ -414,6 +720,23 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         cont_sharded = run_continuous(index, profiles, k, beam, hops,
                                       slots, seed=seed, shards=shards,
                                       oversample=oversample)
+
+    # SLO-serving rows (overload sweep, adaptive budgets, result cache)
+    # BEFORE the insert benchmark for the same same-index-state reason;
+    # the cache arms mutate private deepcopies only.
+    overload_rec = None
+    adaptive_rec = None
+    cache_rec = None
+    if overload:
+        overload_rec = run_overload(index, profiles, k, beam, hops,
+                                    slots, seed=seed)
+        adaptive_rec = run_adaptive(index, profiles, k, beam, hops,
+                                    slots, seed=seed)
+        cache_ds = make_dataset(dataset, scale=scale, seed=seed + 3)
+        cache_pool = [cache_ds.profile(u)
+                      for u in range(min(16, cache_ds.n_users))]
+        cache_rec = run_cache(index, profiles, k, beam, hops, cache_pool,
+                              seed=seed)
 
     # Sustained-churn trajectory BEFORE the insert benchmark, on private
     # deepcopies — the serving rows above and the churn arms must not
@@ -474,6 +797,9 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         **({f"sharded_{shards}_continuous": cont_sharded}
            if cont_sharded is not None else {}),
         **({"churn": churn_rec} if churn_rec is not None else {}),
+        **({"overload": overload_rec} if overload_rec is not None else {}),
+        **({"adaptive": adaptive_rec} if adaptive_rec is not None else {}),
+        **({"cache": cache_rec} if cache_rec is not None else {}),
     }
 
 
@@ -497,6 +823,11 @@ def main():
     ap.add_argument("--churn", action="store_true",
                     help="add sustained-churn recall-trajectory rows "
                          "(repair on vs off under 20%% turnover)")
+    ap.add_argument("--overload", action="store_true",
+                    help="add SLO-serving rows: 0.85/0.95/1.2-load "
+                         "overload sweep (slo vs fifo), adaptive hop "
+                         "budgets, and the journal-invalidated result "
+                         "cache")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI run; exit 1 on sharded regression")
     ap.add_argument("--out", default="BENCH_query.json")
@@ -508,7 +839,7 @@ def main():
     rec = run(args.dataset, args.scale, args.queries, args.k, args.beam,
               args.hops, shards=args.shards, oversample=args.oversample,
               continuous=args.continuous, slots=args.slots,
-              churn=args.churn)
+              churn=args.churn, overload=args.overload)
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(json.dumps(rec, indent=2))
     print(f"[query_bench] wrote {args.out}")
@@ -568,6 +899,69 @@ def main():
                 sys.exit(1)
             print(f"[query_bench] sharded-continuous smoke OK: "
                   f"closed-loop bitwise, open-loop recall_delta={scd}")
+        if args.overload:
+            # Overload-degradation gate: at 1.2× capacity the slo policy
+            # must (a) shed explicitly, (b) keep the pending queue
+            # bounded while FIFO's collapses, and (c) hold the protected
+            # class's p95 near its uncontended value (generous CI margin
+            # on the ratio; the committed BENCH_query.json carries the
+            # quiet-machine <= 2x number).
+            ov = rec["overload"]
+            peak = ov["slo"]["1.2"]
+            if peak["shed"] == 0:
+                print(f"[query_bench] FAIL overload: slo shed nothing at "
+                      f"1.2x capacity: {peak}", file=sys.stderr)
+                sys.exit(1)
+            if peak["max_queue_depth"] > ov["max_pending"] + args.slots:
+                print(f"[query_bench] FAIL overload: slo queue exceeded "
+                      f"its bound: {peak['max_queue_depth']} > "
+                      f"{ov['max_pending']}", file=sys.stderr)
+                sys.exit(1)
+            # FIFO collapse criterion: its queue must grow past the
+            # bound slo admission enforces (the depth_ratio in the
+            # committed BENCH_query.json shows the full contrast; the
+            # smoke gate uses the bound because absolute depths are
+            # noise-prone at CI scale).
+            if (ov["queue_collapse"]["fifo_max_queue_depth"]
+                    <= ov["max_pending"]):
+                print(f"[query_bench] FAIL overload: fifo queue stayed "
+                      f"within the slo bound ({ov['max_pending']}): "
+                      f"{ov['queue_collapse']}", file=sys.stderr)
+                sys.exit(1)
+            deg = ov["hp_p95_degradation"]
+            if deg is None or deg > 4.0:
+                print(f"[query_bench] FAIL overload: high-priority p95 "
+                      f"degraded {deg}x from 0.85 to 1.2 load",
+                      file=sys.stderr)
+                sys.exit(1)
+            print(f"[query_bench] overload smoke OK: shed={peak['shed']} "
+                  f"hp_p95_degradation={deg} "
+                  f"depth_ratio={ov['queue_collapse']['depth_ratio']}")
+            # Adaptive budgets must actually save hops without giving up
+            # meaningful recall (tight -0.005 on the committed bench;
+            # smoke allows noise).
+            ad = rec["adaptive"]
+            if ad["ticks_saved"] <= 0 or ad["recall_delta"] < -0.02:
+                print(f"[query_bench] FAIL adaptive budgets: "
+                      f"ticks_saved={ad['ticks_saved']} "
+                      f"recall_delta={ad['recall_delta']}",
+                      file=sys.stderr)
+                sys.exit(1)
+            print(f"[query_bench] adaptive smoke OK: "
+                  f"ticks_saved={ad['ticks_saved']} "
+                  f"qps_gain={ad['qps_gain']} "
+                  f"recall_delta={ad['recall_delta']}")
+            # The cache is only correct if it is invisible: bitwise
+            # equality against cache-off across interleaved mutations,
+            # AND it must actually hit on the repeated stream.
+            ca = rec["cache"]
+            if not ca["bitwise_equal"] or ca["hit_rate"] <= 0.0:
+                print(f"[query_bench] FAIL cache: bitwise_equal="
+                      f"{ca['bitwise_equal']} hit_rate={ca['hit_rate']}",
+                      file=sys.stderr)
+                sys.exit(1)
+            print(f"[query_bench] cache smoke OK: bitwise, "
+                  f"hit_rate={ca['hit_rate']} qps_gain={ca['qps_gain']}")
         if args.churn:
             # Under sustained turnover the repair pass must hold recall
             # near the no-churn baseline while repair-off is the decayed

@@ -26,6 +26,17 @@ and profile-updates M more online before the query wave (both picked
 id-strided over the live rows, so reruns are deterministic), ``--ttl``
 expires rows untouched for that many scheduler ticks, and
 ``--repair-every`` re-links delete-damaged rows on that tick cadence.
+
+SLO flags (``repro/sched/scheduler.py`` + ``repro/query/cache.py``):
+``--admission slo`` ranks pending requests by (priority class,
+deadline) and sheds expired/overflow work explicitly (``--max-pending``
+bounds the queue; shed requests complete with a ``rejected`` marker),
+``--priority-split F`` marks the first F fraction of the wave
+high-priority (class 0, the rest class 1), ``--deadline-ms D`` stamps
+every request with a D-millisecond deadline, ``--adaptive P`` frees a
+continuous slot once its top-k prefix has held P hops, and
+``--cache N`` serves exact-fingerprint repeats from an N-entry result
+cache invalidated by index-mutation journals.
 """
 from __future__ import annotations
 
@@ -70,6 +81,27 @@ def main(argv=None):
     ap.add_argument("--repair-every", type=int, default=0,
                     help="re-link churn-damaged rows every this many "
                          "scheduler ticks (0 = off)")
+    ap.add_argument("--admission", default="fifo", choices=["fifo", "slo"],
+                    help="admission policy: fifo (arrival order) or slo "
+                         "(priority class + earliest deadline, explicit "
+                         "shedding)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="slo: bound on the pending queue; overflow is "
+                         "shed with a rejected marker (0 = unbounded)")
+    ap.add_argument("--priority-split", type=float, default=0.0,
+                    help="fraction of the wave submitted as high "
+                         "priority (class 0); the rest is best-effort "
+                         "class 1 (0 = every request class 0)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline in ms from submission; "
+                         "expired pending requests are shed under "
+                         "--admission slo (0 = no deadline)")
+    ap.add_argument("--adaptive", type=int, default=0,
+                    help="continuous: free a slot once its top-k prefix "
+                         "held this many hops (0 = run to budget)")
+    ap.add_argument("--cache", type=int, default=0,
+                    help="fingerprint result-cache capacity, journal-"
+                         "invalidated on index mutation (0 = off)")
     ap.add_argument("--index", default=None, help="load a saved index")
     ap.add_argument("--save-index", default=None, help="save the built index")
     ap.add_argument("--seed", type=int, default=0)
@@ -96,7 +128,9 @@ def main(argv=None):
     engine = QueryEngine(index, QueryConfig(
         k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
         shards=args.shards, continuous=args.continuous, slots=args.slots,
-        kernel=args.kernel, ttl=args.ttl, repair_every=args.repair_every))
+        kernel=args.kernel, ttl=args.ttl, repair_every=args.repair_every,
+        admission=args.admission, max_pending=args.max_pending,
+        adaptive=args.adaptive, cache=args.cache))
     print(f"[serve] plan: {engine.plan.describe()}")
 
     # Unseen profiles from the same distribution (different seed).
@@ -145,8 +179,14 @@ def main(argv=None):
     engine.run()
     engine.done.clear()
 
+    n_high = (int(round(args.priority_split * len(profiles)))
+              if args.priority_split > 0 else len(profiles))
     for rid, p in enumerate(profiles):
-        engine.submit(QueryRequest(rid=rid, profile=p))
+        deadline = (time.perf_counter() + args.deadline_ms / 1e3
+                    if args.deadline_ms > 0 else None)
+        engine.submit(QueryRequest(
+            rid=rid, profile=p,
+            priority=0 if rid < n_high else 1, deadline=deadline))
     stats = engine.run()
     recall = engine.recall_vs_brute_force()
     unit = "ticks" if args.continuous else "waves"
@@ -156,6 +196,17 @@ def main(argv=None):
           f"p50 {stats['p50_latency_s'] * 1e3:.1f}ms | "
           f"p95 {stats['p95_latency_s'] * 1e3:.1f}ms | "
           f"recall@{args.k} vs brute force {recall:.3f}")
+    if args.admission == "slo":
+        print(f"[serve] slo: served {stats['served']}, "
+              f"shed {stats['shed']} "
+              f"(priority split {n_high}/{len(profiles) - n_high}, "
+              f"deadline {args.deadline_ms:.0f}ms)")
+    if "cache" in stats:
+        c = stats["cache"]
+        print(f"[serve] cache: {c['hits']} hits / "
+              f"{c['hits'] + c['misses']} lookups "
+              f"(rate {c['hit_rate']:.2f}), {c['entries']}/{c['capacity']} "
+              f"entries, {c['flushes']} flushes")
     return stats, recall
 
 

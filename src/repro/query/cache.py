@@ -1,0 +1,140 @@
+"""Fingerprint-keyed result cache with journal-driven invalidation.
+
+Repeated and near-duplicate queries are the norm in a recommendation
+front door — the same hot profiles descend the same graph over and over.
+The cache sits in front of a plan's serving paths
+(``DescentPlan.search`` for waves / the raw batch API, the admission
+step for continuous slots) and keys on the EXACT query fingerprint plus
+the static knobs that determine the computation: ``(words bytes, card,
+k, hops)``. Descent is a deterministic function of (index state, query
+fingerprint, k, hops), so an exact-fingerprint hit can be served from
+cache bitwise-identically to a fresh descent — the invariant the
+hypothesis battery in ``tests/test_cache_properties.py`` locks down
+(cache-on == cache-off on ids AND sims across any mutation
+interleaving).
+
+Invalidation rides on the mutation journals the lifecycle work already
+maintains (``KNNIndex.rows_changed_since`` / ``tombstones_since`` /
+``members_added_since``): a version bump whose journals prove NOTHING
+changed (no row content, no liveness flip, no routable membership) keeps
+the cache; any real mutation flushes it wholesale. Flushing everything
+— not just entries naming a touched row — is what the bitwise guarantee
+requires: a single new edge can reroute a descent whose result set never
+contained the touched row, so per-entry invalidation would serve results
+a fresh descent no longer produces. Deletes and updates are therefore
+never served stale, and as belt and braces :meth:`get` drops any entry
+naming a tombstoned id (counted, never served) even though the flush
+rule already makes that unreachable.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.types import PAD_ID
+
+
+class ResultCache:
+    """LRU cache of (ids, sims) results keyed by exact query fingerprint.
+
+    ``capacity`` bounds the entry count (LRU eviction). The cache tracks
+    the index version it was filled at; :meth:`sync` must run before a
+    batch of lookups (the plan does this once per wave / tick).
+    """
+
+    def __init__(self, index, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.index = index
+        self.capacity = capacity
+        self.version = index.version
+        self._entries: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.flushes = 0
+        self.stale_drops = 0
+
+    @staticmethod
+    def key(words_row: np.ndarray, card: int, k: int, hops: int) -> tuple:
+        """Cache key: exact fingerprint + the static serving knobs."""
+        return (np.asarray(words_row).tobytes(), int(card), int(k),
+                int(hops))
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- invalidation ------------------------------------------------------
+
+    def sync(self):
+        """Reconcile with the index's version before a lookup batch.
+
+        Keeps the cache only when the journals PROVE the bump changed
+        nothing a descent could observe; flushes wholesale otherwise
+        (including when a journal has expired and can no longer answer —
+        ``rows_changed_since`` returning None means "don't know", and
+        "don't know" must read as "changed").
+        """
+        ix = self.index
+        if ix.version == self.version:
+            return
+        changed = ix.rows_changed_since(self.version)
+        tombs = ix.tombstones_since(self.version)
+        members = ix.members_added_since(self.version)
+        if changed is not None and not changed \
+                and tombs is not None and not tombs \
+                and members is not None and not members:
+            self.version = ix.version  # provably a no-op bump
+            return
+        self._entries.clear()
+        self.flushes += 1
+        self.version = ix.version
+
+    # -- lookup / fill -----------------------------------------------------
+
+    def get(self, key: tuple):
+        """(ids, sims) copies for ``key``, or None. Counts hit/miss.
+
+        An entry naming a tombstoned id is dropped and reported as a
+        miss — unreachable under the flush rule (any tombstone flushes
+        first), but the no-stale-result guarantee must not depend on
+        that reasoning alone.
+        """
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        ids, sims = entry
+        live = ids[ids != PAD_ID]
+        if live.size and self.index.tombstone[live].any():
+            del self._entries[key]
+            self.stale_drops += 1
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return ids.copy(), sims.copy()
+
+    def put(self, key: tuple, ids: np.ndarray, sims: np.ndarray):
+        """Store a freshly computed result (only when it was computed
+        entirely at the cache's current index version — the caller
+        checks; results that straddled a mutation are not cacheable)."""
+        if self.index.version != self.version:
+            return  # computed against a state we no longer certify
+        self._entries[key] = (np.array(ids, copy=True),
+                              np.array(sims, copy=True))
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def stats(self) -> dict:
+        lookups = self.hits + self.misses
+        return {
+            "capacity": self.capacity,
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": round(self.hits / lookups, 4) if lookups else 0.0,
+            "flushes": self.flushes,
+            "stale_drops": self.stale_drops,
+        }

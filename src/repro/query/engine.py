@@ -51,14 +51,35 @@ class QueryRequest:
     profile: np.ndarray                  # int32[|P|] item ids
     hops: Optional[int] = None           # per-request hop budget
                                          # (None → QueryConfig.hops)
+    priority: int = 0                    # SLO class (0 = highest; higher
+                                         # classes are shed first)
+    deadline: Optional[float] = None     # absolute perf_counter() expiry
+                                         # (None = never; expired pending
+                                         # requests are shed, not served)
     # Filled by the engine:
     ids: Optional[np.ndarray] = None     # int32[k] neighbor ids
     sims: Optional[np.ndarray] = None    # float32[k] similarities
     t_submit: float = 0.0
     t_done: float = 0.0
+    status: str = "pending"              # pending | done | rejected
 
     @property
-    def latency(self) -> float:
+    def rejected(self) -> bool:
+        """True when admission shed this request (deadline expired or
+        bounded-queue overflow) — it completed WITHOUT a result."""
+        return self.status == "rejected"
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Seconds from submit to completion, or None while unserved.
+
+        An unserved request has ``t_done == 0.0``; the old behavior of
+        returning ``0.0 - t_submit`` silently poisoned any percentile
+        computed over a mixed done/pending list with large negative
+        values. None makes that misuse fail loudly instead.
+        """
+        if self.t_done == 0.0 or self.t_submit == 0.0:
+            return None
         return self.t_done - self.t_submit
 
 
@@ -81,6 +102,14 @@ class QueryConfig:
                                # expires (0 = never)
     repair_every: int = 0      # lifecycle: churn-repair cadence in ticks
                                # (0 = off)
+    admission: str = "fifo"    # "slo": priority classes + deadline-aware
+                               # admission, explicit shedding (sched/)
+    max_pending: int = 0       # pending-queue bound under slo admission
+                               # (0 = unbounded; overflow is shed)
+    adaptive: int = 0          # >0: free continuous slots once the top-k
+                               # prefix held for this many hops (patience)
+    cache: int = 0             # >0: fingerprint-keyed result-cache
+                               # capacity (journal-invalidated)
 
     def spec(self) -> PlanSpec:
         """Map the flag pile onto a validated plan on the three axes."""
@@ -91,7 +120,9 @@ class QueryConfig:
             k=self.k, beam=self.beam, hops=self.hops,
             max_wave=self.max_wave, slots=self.slots,
             seeds_per_config=self.seeds_per_config,
-            shard_oversample=self.shard_oversample)
+            shard_oversample=self.shard_oversample,
+            admission=self.admission, max_pending=self.max_pending,
+            adaptive=self.adaptive, cache=self.cache)
 
 
 class QueryEngine:
@@ -174,13 +205,21 @@ class QueryEngine:
             n_new_done += self.step()
             n_steps += 1
         dt = max(time.perf_counter() - t0, 1e-9)
-        lats = [r.latency for r in self.done[-n_new_done:]] if n_new_done else []
-        return {
+        recent = self.done[-n_new_done:] if n_new_done else []
+        # Latency percentiles cover SERVED requests only: a rejected
+        # (shed) request's submit→shed interval is queueing, not
+        # service, and an unserved latency is None by contract.
+        lats = [r.latency for r in recent
+                if r.status == "done" and r.latency is not None]
+        n_shed = sum(1 for r in recent if r.rejected)
+        stats = {
             "requests": n_new_done,
+            "served": n_new_done - n_shed,
+            "shed": n_shed,
             "mode": "continuous" if continuous else "wave",
             "plan": self.plan.describe(),
             "waves": n_steps,
-            "qps": n_new_done / dt,
+            "qps": (n_new_done - n_shed) / dt,
             "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
             "p50_latency_s": float(np.percentile(lats, 50)) if lats else 0.0,
             "p95_latency_s": float(np.percentile(lats, 95)) if lats else 0.0,
@@ -188,6 +227,9 @@ class QueryEngine:
             "shards": self.qc.shards,
             "refreshes": self.n_refreshes,
         }
+        if self.plan.cache is not None:
+            stats["cache"] = self.plan.cache.stats()
+        return stats
 
     # -- online insertion --------------------------------------------------
 
@@ -254,17 +296,30 @@ class QueryEngine:
 
     def recall_vs_brute_force(self, requests: list[QueryRequest] | None = None,
                               ) -> float:
-        """Mean recall@k of served results vs brute force over the index."""
+        """Mean recall@k of served results vs brute force over the index.
+
+        Rejected/unserved requests (``ids is None``) are excluded.
+        Request sets may mix per-request k (callers serve through
+        engines with different ``k``): results are grouped by their k
+        and each group is scored against its own brute-force truth —
+        the old ``np.stack`` over ragged id rows raised instead.
+        """
         reqs = requests if requests is not None else self.done
         reqs = [r for r in reqs if r.ids is not None]
         if not reqs:
             return 0.0
-        items, offsets = profiles_to_csr([r.profile for r in reqs])
-        qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
-                                   self.index.fp_seed)
-        k = len(reqs[0].ids)
-        exact_ids, _ = exact_knn(self.index.words, self.index.card,
-                                 np.asarray(qgf.words),
-                                 np.asarray(qgf.card), k,
-                                 tomb=self.index.tombstone)
-        return knn_recall(np.stack([r.ids for r in reqs]), exact_ids)
+        by_k: dict[int, list[QueryRequest]] = {}
+        for r in reqs:
+            by_k.setdefault(len(r.ids), []).append(r)
+        total = 0.0
+        for k, group in sorted(by_k.items()):
+            items, offsets = profiles_to_csr([r.profile for r in group])
+            qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
+                                       self.index.fp_seed)
+            exact_ids, _ = exact_knn(self.index.words, self.index.card,
+                                     np.asarray(qgf.words),
+                                     np.asarray(qgf.card), k,
+                                     tomb=self.index.tombstone)
+            total += knn_recall(np.stack([r.ids for r in group]),
+                                exact_ids) * len(group)
+        return total / len(reqs)

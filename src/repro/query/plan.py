@@ -47,17 +47,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.local_knn import capacity_of
+from repro.query.cache import ResultCache
 from repro.query.index import KNNIndex
 from repro.query.router import (fingerprint_profiles, placements,
                                 profiles_to_csr, route)
 from repro.query.search import (batched_descent, shard_slot_admit,
                                 shard_slot_hop, shard_slot_topk,
-                                slot_admit, slot_hop)
-from repro.sched import SlotScheduler
+                                slot_admit, slot_hop, slot_prefix_stable)
+from repro.sched import ADMISSION_POLICIES, SlotScheduler, shed_and_select
+from repro.sched import trace
 from repro.types import NEG_INF, PAD_ID
 
 BATCHINGS = ("wave", "continuous")
 SCORERS = ("jnp", "pallas")
+
+
+def _csr_subset(items: np.ndarray, offsets: np.ndarray,
+                idxs) -> tuple[np.ndarray, np.ndarray]:
+    """CSR rows ``idxs`` of a (items, offsets) profile batch."""
+    rows = [items[offsets[i]:offsets[i + 1]] for i in idxs]
+    sizes = np.array([len(r) for r in rows], dtype=np.int64)
+    out_offsets = np.zeros(len(rows) + 1, dtype=np.int64)
+    np.cumsum(sizes, out=out_offsets[1:])
+    out_items = (np.concatenate(rows) if rows
+                 else np.zeros((0,), np.int32)).astype(np.int32)
+    return out_items, out_offsets
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +92,12 @@ class PlanSpec:
     slots: int = 32             # continuous batching: in-flight capacity
     seeds_per_config: int = 16
     shard_oversample: float = 1.5
+    admission: str = "fifo"     # "fifo" | "slo" (priority + deadline
+                                # admission with explicit shedding)
+    max_pending: int = 0        # slo: pending-queue bound (0 = unbounded)
+    adaptive: int = 0           # continuous: free a slot once its top-k
+                                # prefix held this many hops (0 = off)
+    cache: int = 0              # fingerprint result-cache capacity (0=off)
 
     def __post_init__(self):
         if self.placement < 1:
@@ -99,6 +119,28 @@ class PlanSpec:
                              f"got {self.max_wave}")
         if self.k < 1 or self.hops < 0:
             raise ValueError(f"invalid k={self.k} / hops={self.hops}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"unknown admission {self.admission!r}; supported: "
+                f"{ADMISSION_POLICIES}")
+        if self.max_pending < 0:
+            raise ValueError(
+                f"max_pending must be >= 0, got {self.max_pending}")
+        if self.max_pending > 0 and self.admission != "slo":
+            raise ValueError(
+                "max_pending bounds the slo admission queue; pure FIFO "
+                "never sheds (set admission='slo' to bound the queue)")
+        if self.adaptive < 0:
+            raise ValueError(f"adaptive patience must be >= 0, "
+                             f"got {self.adaptive}")
+        if self.adaptive > 0 and self.batching != "continuous":
+            raise ValueError(
+                "adaptive hop budgets free continuous slots on top-k "
+                "prefix stability; wave batching has no per-request "
+                "termination (use batching='continuous')")
+        if self.cache < 0:
+            raise ValueError(f"cache capacity must be >= 0, "
+                             f"got {self.cache}")
 
     @property
     def kernel(self) -> bool:
@@ -115,7 +157,15 @@ class PlanSpec:
                  else f"sharded({self.placement})")
         batch = ("wave" if self.batching == "wave"
                  else f"continuous(slots={self.slots})")
-        return f"{place} x {batch} x {self.scorer}"
+        base = f"{place} x {batch} x {self.scorer}"
+        extras = []
+        if self.admission != "fifo":
+            extras.append(f"slo(max_pending={self.max_pending})")
+        if self.adaptive:
+            extras.append(f"adaptive({self.adaptive})")
+        if self.cache:
+            extras.append(f"cache({self.cache})")
+        return base + (" + " + ", ".join(extras) if extras else "")
 
 
 class _SlotState:
@@ -134,7 +184,8 @@ class _SlotState:
         self.beam = beam
         self.admit_cap = int(np.clip(n_slots // 4, 8, 32))
         self.seed_cols = index.t * spec.seeds_per_config
-        self.sched = SlotScheduler(n_slots)
+        self.sched = SlotScheduler(n_slots, policy=spec.admission,
+                                   max_pending=spec.max_pending)
         self.q_words = jnp.zeros((n_slots, index.words.shape[1]),
                                  jnp.uint32)
         self.q_card = jnp.zeros(n_slots, jnp.int32)
@@ -149,6 +200,20 @@ class _SlotState:
         self.beam_sims = pin(beam_sims) if pin else jnp.asarray(beam_sims)
         self.hops_done = np.zeros(n_slots, np.int64)
         self.budget = np.full(n_slots, spec.hops, np.int64)
+        # Adaptive-budget bookkeeping (allocated only when the policy is
+        # on): per-slot count of consecutive hops whose top-k prefix was
+        # unchanged, the device-resident previous prefix it compares
+        # against, and a freshness flag so a re-admitted slot never
+        # inherits its previous occupant's prefix (identical repeated
+        # queries would otherwise look "stable" at hop one).
+        self.streak = np.zeros(n_slots, np.int64)
+        self.fresh = np.ones(n_slots, bool)
+        self.prefix_ids = None
+        if spec.adaptive > 0:
+            pshape = ((spec.placement, n_slots, spec.k)
+                      if spec.placement > 1 else (n_slots, spec.k))
+            prefix = np.full(pshape, PAD_ID, np.int32)
+            self.prefix_ids = pin(prefix) if pin else jnp.asarray(prefix)
 
 
 class DescentPlan:
@@ -169,6 +234,10 @@ class DescentPlan:
         self._sharded = None    # ShardedDescent (delta-synced)
         self._slots: Optional[_SlotState] = None
         self.n_ticks = 0
+        # Fingerprint-keyed result cache (query/cache.py), flushed on
+        # journal-visible index mutations — exact hits serve without a
+        # descent, bitwise-identically to one.
+        self.cache = ResultCache(index, spec.cache) if spec.cache else None
 
     def describe(self) -> str:
         return self.spec.describe()
@@ -255,10 +324,44 @@ class DescentPlan:
                hops: int | None = None, placed=None):
         """Route + beam-descend already-fingerprinted query profiles
         through this plan's placement (one closed wave, whatever the
-        plan's batching — the raw batch API)."""
-        seeds = route(self.index, items, offsets, self.spec.seeds_per_config,
-                      placed=placed)
-        return self.descend_rows(qgf.words, qgf.card, seeds, k, hops=hops)
+        plan's batching — the raw batch API).
+
+        With a result cache configured, exact-fingerprint hits are
+        served from it (bitwise what the descent would return — the
+        cache flushes on any journal-visible index mutation) and only
+        the misses route + descend.
+        """
+        hops = self.spec.hops if hops is None else hops
+        if self.cache is None:
+            seeds = route(self.index, items, offsets,
+                          self.spec.seeds_per_config, placed=placed)
+            return self.descend_rows(qgf.words, qgf.card, seeds, k,
+                                     hops=hops)
+        self.cache.sync()
+        qw, qc = np.asarray(qgf.words), np.asarray(qgf.card)
+        qn = qw.shape[0]
+        keys = [self.cache.key(qw[i], qc[i], k, hops) for i in range(qn)]
+        out_ids = np.empty((qn, k), np.int32)
+        out_sims = np.empty((qn, k), np.float32)
+        miss = []
+        for i, cache_key in enumerate(keys):
+            hit = self.cache.get(cache_key)
+            if hit is None:
+                miss.append(i)
+            else:
+                out_ids[i], out_sims[i] = hit
+        if miss:
+            m_items, m_offsets = _csr_subset(items, offsets, miss)
+            m_placed = ([placed[i] for i in miss]
+                        if placed is not None else None)
+            seeds = route(self.index, m_items, m_offsets,
+                          self.spec.seeds_per_config, placed=m_placed)
+            m_ids, m_sims = self.descend_rows(qw[miss], qc[miss], seeds,
+                                              k, hops=hops)
+            for j, i in enumerate(miss):
+                out_ids[i], out_sims[i] = m_ids[j], m_sims[j]
+                self.cache.put(keys[i], m_ids[j], m_sims[j])
+        return out_ids, out_sims
 
     def descend_rows(self, q_words, q_card, seeds, k: int, *,
                      hops: int | None = None, beam: int | None = None):
@@ -333,28 +436,52 @@ class DescentPlan:
 
     # -- wave batching -----------------------------------------------------
 
+    def _reject(self, shed, done) -> int:
+        """Complete shed requests with the ``rejected`` marker — they
+        enter ``done`` (counted, latency-excluded) rather than vanish."""
+        if not shed:
+            return 0
+        now = time.perf_counter()
+        for r in shed:
+            r.status = "rejected"
+            r.t_done = now
+            done.append(r)
+        return len(shed)
+
     def _step_wave(self, queue, done) -> int:
         """Close one wave from the queue; returns requests completed.
 
         A wave runs to the MAX hop budget of its members (the compiled
         program has one static hop count) — one deep request convoys
         every shallow request behind it. Continuous batching's per-slot
-        hop budgets are the fix.
+        hop budgets are the fix. Under slo admission the wave closes
+        over the best (class, deadline) requests and expired/overflow
+        requests are shed with a rejected marker; the default FIFO path
+        is byte-identical to the pre-SLO wave.
         """
-        wave = []
-        while queue and len(wave) < self.spec.max_wave:
-            wave.append(queue.popleft())
+        spec = self.spec
+        n_done = 0
+        if spec.admission == "slo":
+            wave, shed = shed_and_select(queue, spec.max_wave,
+                                         time.perf_counter(),
+                                         spec.max_pending)
+            n_done = self._reject(shed, done)
+        else:
+            wave = []
+            while queue and len(wave) < spec.max_wave:
+                wave.append(queue.popleft())
         if not wave:
-            return 0
-        hops = max(r.hops if r.hops is not None else self.spec.hops
+            return n_done
+        hops = max(r.hops if r.hops is not None else spec.hops
                    for r in wave)
         ids, sims = self.query_batch([r.profile for r in wave], hops=hops)
         now = time.perf_counter()
         for j, r in enumerate(wave):
             r.ids, r.sims = ids[j], sims[j]
             r.t_done = now
+            r.status = "done"
             done.append(r)
-        return len(wave)
+        return len(wave) + n_done
 
     # -- continuous batching -----------------------------------------------
 
@@ -377,7 +504,13 @@ class DescentPlan:
         Sharded placement: per-shard prefixes merged cross-shard in
         global ids (:func:`~repro.query.search.shard_slot_topk`) —
         byte-identical to the wave path's closing merges either way.
+
+        Every call is one host-side snapshot dispatch —
+        ``trace.launch_count(("slot_results", plan.key))`` lets tests
+        assert a tick costs ONE snapshot however many admission chunks
+        (including zero-hop bursts) fed it.
         """
+        trace.launch(("slot_results", self.key))
         k = self.spec.k
         if self.spec.placement > 1:
             ids, sims = shard_slot_topk(self._sharded._dev[4], st.beam_ids,
@@ -386,33 +519,76 @@ class DescentPlan:
         return (np.asarray(st.beam_ids)[:, :k],
                 np.asarray(st.beam_sims)[:, :k])
 
-    def _admit(self, st: _SlotState, admitted) -> None:
+    def _admit(self, st: _SlotState, admitted, done) -> int:
         """Scatter an admission generation into the slot arrays,
         bucketed to ``admit_cap`` rows so one program compiles per
-        bucket shape no matter how requests stream in."""
+        bucket shape no matter how requests stream in.
+
+        With a result cache, each admitted request is first looked up by
+        exact fingerprint: hits complete immediately (slot released
+        without ever entering the scatter — their rows keep the
+        ``n_slots`` drop sentinel) and only misses are routed and
+        scattered. Returns the number of cache-served completions so the
+        tick loop can re-admit into the freed slots.
+        """
         spec = self.spec
         items, offsets = profiles_to_csr([r.profile for _, r in admitted])
         qgf = fingerprint_profiles(items, offsets, self.index.n_bits,
                                    self.index.fp_seed)
-        seeds = route(self.index, items, offsets, spec.seeds_per_config)
+        qw, qc = np.asarray(qgf.words), np.asarray(qgf.card)
+        n_hit = 0
+        if self.cache is None:
+            rows = [(j, slot, req)
+                    for j, (slot, req) in enumerate(admitted)]
+            m_items, m_offsets = items, offsets
+        else:
+            rows = []
+            now = time.perf_counter()
+            for j, (slot, req) in enumerate(admitted):
+                budget = req.hops if req.hops is not None else spec.hops
+                ck = self.cache.key(qw[j], qc[j], spec.k, budget)
+                hit = self.cache.get(ck)
+                if hit is not None:
+                    st.sched.release(slot)
+                    req.ids, req.sims = hit
+                    req.t_done = now
+                    req.status = "done"
+                    done.append(req)
+                    n_hit += 1
+                else:
+                    # Completion caches this result only if the cache
+                    # was never flushed while the request was in flight
+                    # (flush count unchanged == every intervening
+                    # version bump was provably a no-op).
+                    req._cache_key = ck
+                    req._cache_flushes = self.cache.flushes
+                    rows.append((j, slot, req))
+            if not rows:
+                return n_hit
+            m_items, m_offsets = _csr_subset(items, offsets,
+                                             [j for j, _, _ in rows])
+        seeds = route(self.index, m_items, m_offsets,
+                      spec.seeds_per_config)
         A = st.admit_cap
         sharded = spec.placement > 1
-        for lo in range(0, len(admitted), A):
-            chunk = admitted[lo:lo + A]
+        for lo in range(0, len(rows), A):
+            chunk = rows[lo:lo + A]
             new_w = np.zeros((A, st.q_words.shape[1]), np.uint32)
             new_c = np.zeros(A, np.int32)
             new_s = np.full((A, st.seed_cols), PAD_ID, np.int32)
             # n_slots = one-past-the-end sentinel; the admit scatter
             # drops those rows (mode="drop").
             idx = np.full(A, st.sched.n_slots, np.int32)
-            for j, (slot, req) in enumerate(chunk):
-                new_w[j] = qgf.words[lo + j]
-                new_c[j] = int(qgf.card[lo + j])
-                new_s[j] = seeds[lo + j]
-                idx[j] = slot
+            for p, (j, slot, req) in enumerate(chunk):
+                new_w[p] = qw[j]
+                new_c[p] = int(qc[j])
+                new_s[p] = seeds[lo + p]
+                idx[p] = slot
                 st.hops_done[slot] = 0
                 st.budget[slot] = (req.hops if req.hops is not None
                                    else spec.hops)
+                st.streak[slot] = 0
+                st.fresh[slot] = True
             if sharded:
                 l_seeds = self._sharded.shard_seeds(new_s)  # [S, A, cols]
                 st.q_words, st.q_card, st.beam_ids, st.beam_sims = \
@@ -431,14 +607,19 @@ class DescentPlan:
                                jnp.asarray(idx), st.q_words, st.q_card,
                                st.beam_ids, st.beam_sims, beam=st.beam,
                                tag=self.key, tomb=tomb)
+        return n_hit
 
     def _step_continuous(self, queue, done) -> int:
         """One continuous tick: admit into free slots, advance every
         in-flight beam one hop, complete converged/exhausted slots.
 
-        Returns the number of requests completed this tick. Admission is
-        mid-flight: rows freed by a previous tick take fresh requests
-        while the remaining rows keep descending — no wave barrier.
+        Returns the number of requests completed this tick (cache hits,
+        rejections, and descents alike). Admission is mid-flight: rows
+        freed by a previous tick take fresh requests while the remaining
+        rows keep descending — no wave barrier. Zero-hop admissions stay
+        resident through the tick (excluded from the hop, finished by
+        ``hops_done >= budget``) so a tick's completions cost ONE
+        slot-result snapshot however many admission chunks fed it.
         """
         spec = self.spec
         self.sync()  # placement state must be current before any program
@@ -455,49 +636,73 @@ class DescentPlan:
                 st.beam_ids = jnp.where(
                     st.beam_ids == PAD_ID, PAD_ID,
                     jax.vmap(lambda m, b: m[b])(mp, safe))
+                if spec.adaptive > 0:
+                    # Stored prefixes are in pre-reshard local labels —
+                    # restart every stability streak rather than risk a
+                    # stale comparison.
+                    st.streak[:] = 0
+                    st.fresh[:] = True
         sched = st.sched
         while queue:
             sched.submit(queue.popleft())
+        if self.cache is not None:
+            self.cache.sync()
         n_done = 0
         admitted = sched.admit()
         while admitted:
-            self._admit(st, admitted)
-            # A zero-hop budget completes on its seed-initialized beam
-            # without entering the hop (wave parity: a hops=0 wave runs a
-            # length-0 scan). The freed slots may admit further queued
-            # requests, hence the loop.
-            zero = [(s, r) for s, r in admitted if st.budget[s] <= 0]
-            if not zero:
+            freed = self._admit(st, admitted, done)
+            n_done += freed
+            if not freed:
                 break
-            ids, sims = self._slot_results(st)
-            now = time.perf_counter()
-            for slot, req in zero:
-                sched.release(slot)
-                req.ids = ids[slot].copy()
-                req.sims = sims[slot].copy()
-                req.t_done = now
-                done.append(req)
-                n_done += 1
+            # Cache hits released their slots mid-admission; keep
+            # draining the pending queue into them.
             admitted = sched.admit()
+        n_done += self._reject(sched.drain_shed(), done)
         active = sched.active_mask()
         if not active.any():
             return n_done
-        if spec.placement > 1:
-            sd = self._sharded
-            st.beam_ids, st.beam_sims, changed = shard_slot_hop(
-                *sd._dev[:4], st.q_words, st.q_card,
-                st.beam_ids, st.beam_sims, jnp.asarray(active),
-                kernel=spec.kernel, tag=self.key, l_tomb=sd._dev[5])
-        else:
-            graph_ids, rev_ids, words, card, tomb = self._sync_single()
-            st.beam_ids, st.beam_sims, changed = slot_hop(
-                graph_ids, rev_ids, words, card, st.q_words, st.q_card,
-                st.beam_ids, st.beam_sims, jnp.asarray(active),
-                kernel=spec.kernel, tag=self.key, tomb=tomb)
-        st.hops_done[active] += 1
-        self.n_ticks += 1
-        finished = active & (
-            (st.hops_done >= st.budget) | ~np.asarray(changed))
+        # Zero-budget slots never enter the hop (wave parity: a hops=0
+        # wave runs a length-0 scan) — they ride to the snapshot below.
+        hop_active = active & (st.hops_done < st.budget)
+        changed = np.zeros(active.shape[0], bool)
+        if hop_active.any():
+            if spec.placement > 1:
+                sd = self._sharded
+                st.beam_ids, st.beam_sims, changed = shard_slot_hop(
+                    *sd._dev[:4], st.q_words, st.q_card,
+                    st.beam_ids, st.beam_sims, jnp.asarray(hop_active),
+                    kernel=spec.kernel, tag=self.key, l_tomb=sd._dev[5])
+            else:
+                graph_ids, rev_ids, words, card, tomb = \
+                    self._sync_single()
+                st.beam_ids, st.beam_sims, changed = slot_hop(
+                    graph_ids, rev_ids, words, card, st.q_words,
+                    st.q_card, st.beam_ids, st.beam_sims,
+                    jnp.asarray(hop_active), kernel=spec.kernel,
+                    tag=self.key, tomb=tomb)
+            changed = np.asarray(changed)
+            st.hops_done[hop_active] += 1
+            self.n_ticks += 1
+            if spec.adaptive > 0:
+                stable, st.prefix_ids = slot_prefix_stable(
+                    st.beam_ids, st.prefix_ids, k=spec.k, tag=self.key)
+                stable = np.asarray(stable)
+                # A slot's FIRST hop compares against its previous
+                # occupant's prefix — `fresh` keeps it out of the streak.
+                gained = hop_active & stable & ~st.fresh
+                st.streak[gained] += 1
+                st.streak[hop_active & ~gained] = 0
+                st.fresh[hop_active] = False
+        # Exact completions: budget exhausted, or the full beam hit its
+        # fixed point this hop (no further hop can change it — the
+        # result IS the full-budget result, hence cacheable). Adaptive
+        # frees on top-k-prefix stability are approximate: served, but
+        # never cached.
+        exact = (st.hops_done >= st.budget) | (hop_active & ~changed)
+        finished = active & exact
+        if spec.adaptive > 0:
+            finished = finished | (hop_active
+                                   & (st.streak >= spec.adaptive))
         if not finished.any():
             return n_done
         ids, sims = self._slot_results(st)
@@ -507,6 +712,11 @@ class DescentPlan:
             req.ids = ids[slot].copy()
             req.sims = sims[slot].copy()
             req.t_done = now
+            req.status = "done"
             done.append(req)
             n_done += 1
+            if (self.cache is not None and exact[slot]
+                    and getattr(req, "_cache_flushes", -1)
+                    == self.cache.flushes):
+                self.cache.put(req._cache_key, req.ids, req.sims)
         return n_done

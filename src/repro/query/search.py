@@ -182,6 +182,30 @@ def slot_hop(graph_ids, rev_ids, words, card,
     return out_ids, out_sims, changed
 
 
+@functools.partial(jax.jit, static_argnames=("k", "tag"),
+                   donate_argnames=("prev_prefix",))
+def slot_prefix_stable(beam_ids, prev_prefix, *, k: int, tag=None):
+    """Per-slot top-k-prefix stability between consecutive hops.
+
+    The adaptive-budget policy (``PlanSpec.adaptive``) frees a slot once
+    its RESULT — the k-prefix of the beam, not the whole beam — has
+    survived ``patience`` consecutive hops unchanged: the tail of a beam
+    keeps churning long after the answer has settled, so full
+    fixed-point detection (``slot_hop``'s ``changed``) leaves budget on
+    the table. Works on single-placement ``[n_slots, beam]`` and
+    sharded ``[S, n_slots, beam]`` beams (a slot is stable only when
+    every shard's prefix is — conservative, since the cross-shard merge
+    of unchanged prefixes cannot change).
+
+    Returns ``(stable bool[n_slots], prefix)`` where ``prefix`` is the
+    current k-prefix to feed back as ``prev_prefix`` next tick.
+    """
+    trace.bump(("query_slot_prefix", tag) + beam_ids.shape + (k,))
+    cur = beam_ids[..., :k]
+    axes = (0, 2) if beam_ids.ndim == 3 else (1,)
+    return jnp.all(cur == prev_prefix, axis=axes), cur
+
+
 # -- shard-axis slot programs (sharded × continuous composition) -----------
 #
 # The single-device slot programs above lift verbatim over a leading

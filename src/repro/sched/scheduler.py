@@ -26,14 +26,86 @@ enforces the invariants the property suite locks down
 Freed slots are reused lowest-index-first so admission is deterministic
 given the submit/complete interleaving — which is what makes the
 continuous-vs-wave equivalence tests exact rather than statistical.
+
+SLO-aware admission (``policy="slo"``) layers priority classes and
+deadlines on the same slot machinery: items may carry ``priority`` (int,
+0 = highest class) and ``deadline`` (absolute clock time, None = never
+expires) attributes; :meth:`SlotScheduler.admit` then picks by class,
+then earliest deadline, then submission order — and a bounded pending
+queue (``max_pending``) sheds expired and worst-ranked overflow requests
+EXPLICITLY into :attr:`SlotScheduler.shed` instead of letting the deque
+grow without bound under overload. Shed requests are handed back to the
+engine, which completes them with a ``rejected`` marker — they never
+silently vanish, and the exactly-once accounting extends to them
+(``n_submitted == n_admitted + len(pending) + n_shed``). The default
+``policy="fifo"`` path is byte-identical to the pre-SLO scheduler, which
+is what keeps the continuous-vs-wave bitwise-equivalence tests exact.
 """
 from __future__ import annotations
 
 import heapq
+import math
+import time
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
+
+ADMISSION_POLICIES = ("fifo", "slo")
+
+
+def _priority_of(item: Any) -> int:
+    """SLO class of a request (0 = highest); items without the attribute
+    (e.g. the LM engine's GenRequest) are all top-class, which degrades
+    the slo policy to deadline-then-FIFO."""
+    p = getattr(item, "priority", 0)
+    return 0 if p is None else int(p)
+
+
+def _deadline_of(item: Any) -> float:
+    """Absolute expiry time of a request; None (or absent) = +inf."""
+    d = getattr(item, "deadline", None)
+    return math.inf if d is None else float(d)
+
+
+def shed_and_select(pending, n: int, now: float,
+                    max_pending: int = 0) -> tuple[list, list]:
+    """SLO admission over a pending queue: pick ``n``, shed the hopeless.
+
+    ``pending`` (a deque/list in submission order, mutated in place)
+    is split three ways:
+
+    * **expired** — deadline already behind ``now``: shed (serving them
+      would burn a slot on a result the caller stopped waiting for);
+    * **selected** — the best ``n`` survivors by (priority class,
+      earliest deadline, submission order);
+    * **overflow** — with ``max_pending > 0``, the worst-ranked
+      survivors beyond that bound: shed, so the queue stays bounded
+      under sustained overload instead of collapsing.
+
+    Returns ``(selected, shed)``; what remains in ``pending`` keeps
+    submission order (so FIFO tie-breaks stay deterministic across
+    repeated calls). Both engines' admission paths (wave closing and
+    the slot scheduler) route through this one function.
+    """
+    shed: list = []
+    keep: list[tuple[int, Any]] = []
+    for seq, item in enumerate(pending):
+        if _deadline_of(item) < now:
+            shed.append(item)
+        else:
+            keep.append((seq, item))
+    keep.sort(key=lambda si: (_priority_of(si[1]), _deadline_of(si[1]),
+                              si[0]))
+    selected = [item for _, item in keep[:n]]
+    rest = keep[n:]
+    if max_pending > 0 and len(rest) > max_pending:
+        shed.extend(item for _, item in rest[max_pending:])
+        rest = rest[:max_pending]
+    rest.sort(key=lambda si: si[0])
+    pending.clear()
+    pending.extend(item for _, item in rest)
+    return selected, shed
 
 
 class Cadence:
@@ -66,19 +138,41 @@ class Cadence:
 
 
 class SlotScheduler:
-    """FIFO admission queue + fixed-capacity slot assignment."""
+    """Admission queue + fixed-capacity slot assignment.
 
-    def __init__(self, n_slots: int):
+    ``policy="fifo"`` (default) admits in submission order with an
+    unbounded queue — the exact pre-SLO behavior. ``policy="slo"``
+    admits by (priority class, earliest deadline, submission order),
+    sheds expired requests, and — with ``max_pending > 0`` — bounds the
+    pending queue by shedding the worst-ranked overflow. Shed items land
+    in :attr:`shed` for the engine to drain (:meth:`drain_shed`) and
+    complete with a rejected marker. ``clock`` is injectable so deadline
+    behavior is deterministic under test.
+    """
+
+    def __init__(self, n_slots: int, *, policy: str = "fifo",
+                 max_pending: int = 0,
+                 clock: Optional[Callable[[], float]] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"supported: {ADMISSION_POLICIES}")
+        if max_pending < 0:
+            raise ValueError(f"max_pending must be >= 0, got {max_pending}")
         self.n_slots = n_slots
+        self.policy = policy
+        self.max_pending = max_pending
+        self.clock = clock or time.perf_counter
         self.pending: deque[Any] = deque()
+        self.shed: list[Any] = []  # engine drains these (drain_shed)
         self._occupant: list[Optional[Any]] = [None] * n_slots
         self._free: list[int] = list(range(n_slots))  # min-heap
         heapq.heapify(self._free)
         self.n_submitted = 0
         self.n_admitted = 0
         self.n_completed = 0
+        self.n_shed = 0
 
     # -- queue -------------------------------------------------------------
 
@@ -88,12 +182,31 @@ class SlotScheduler:
         self.n_submitted += 1
 
     def admit(self) -> list[tuple[int, Any]]:
-        """Move queued requests into free slots (FIFO, lowest slot first).
+        """Move queued requests into free slots (lowest slot first).
 
-        Returns the ``(slot, item)`` pairs admitted this call — the
-        engine initializes per-slot device state for exactly these rows.
+        FIFO policy: requests enter slots in submission order. SLO
+        policy: requests enter by (priority class, earliest deadline,
+        submission order), expired requests and worst-ranked overflow
+        beyond ``max_pending`` are shed into :attr:`shed` instead of
+        admitted. Returns the ``(slot, item)`` pairs admitted this call
+        — the engine initializes per-slot device state for exactly
+        these rows.
         """
         admitted: list[tuple[int, Any]] = []
+        if self.policy == "slo":
+            selected, shed = shed_and_select(
+                self.pending, len(self._free), self.clock(),
+                self.max_pending)
+            self.n_shed += len(shed)
+            self.shed.extend(shed)
+            for item in selected:
+                slot = heapq.heappop(self._free)
+                assert self._occupant[slot] is None, \
+                    f"slot {slot} double-assignment"
+                self._occupant[slot] = item
+                self.n_admitted += 1
+                admitted.append((slot, item))
+            return admitted
         while self.pending and self._free:
             slot = heapq.heappop(self._free)
             assert self._occupant[slot] is None, \
@@ -103,6 +216,13 @@ class SlotScheduler:
             self.n_admitted += 1
             admitted.append((slot, item))
         return admitted
+
+    def drain_shed(self) -> list[Any]:
+        """Hand the engine every request shed since the last drain (the
+        engine completes them with a rejected marker — shed requests
+        never silently vanish)."""
+        out, self.shed = self.shed, []
+        return out
 
     def release(self, slot: int) -> Any:
         """Free a slot whose request completed; returns the occupant."""
@@ -147,4 +267,10 @@ class SlotScheduler:
         assert occupied | free == set(range(self.n_slots))
         assert len(self._free) == len(free), "free-heap duplicate"
         assert self.n_admitted == self.n_completed + self.n_active
-        assert self.n_submitted == self.n_admitted + len(self.pending)
+        assert self.n_submitted == (self.n_admitted + len(self.pending)
+                                    + self.n_shed)
+        if self.max_pending > 0:
+            # The bound is enforced at every admit; submits between
+            # admits may transiently exceed it, but an admit always
+            # restores it — callers check AFTER stepping.
+            assert self.n_shed >= 0

@@ -55,6 +55,31 @@ def counts(prefix: str | None = None) -> dict:
             if isinstance(k, tuple) and k and k[0] == prefix}
 
 
+# -- host-side launch counters ---------------------------------------------
+#
+# ``bump`` counts TRACES (compiles) because it runs inside a jitted body;
+# ``launch`` counts host-side program DISPATCHES — it is called from
+# ordinary Python right where the engine launches (or would launch) a
+# compiled program. The zero-hop-burst regression in ``query/plan.py``
+# uses it: a tick's worth of completions must cost ONE slot-result
+# snapshot, however many admission chunks fed the tick. Kept in a
+# separate store so launch keys can carry plan-key tuples without
+# polluting :func:`compile_count`'s tag search.
+
+_LAUNCHES: Counter = Counter()
+
+
+def launch(key: Hashable):
+    """Record one host-side dispatch of the program identified by ``key``."""
+    _LAUNCHES[key] += 1
+
+
+def launch_count(key: Hashable) -> int:
+    """Dispatches recorded for ``key`` since process start (or reset)."""
+    return _LAUNCHES[key]
+
+
 def reset():
     """Clear all counters (test isolation)."""
     _TRACES.clear()
+    _LAUNCHES.clear()

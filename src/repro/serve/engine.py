@@ -50,7 +50,12 @@ class Request:
     t_done: float = 0.0
 
     @property
-    def latency(self) -> float:
+    def latency(self) -> Optional[float]:
+        """Serve latency in seconds, or None until the request has both
+        been submitted and completed (the raw difference of unset
+        timestamps would read as a large negative number)."""
+        if self.t_done == 0.0 or self.t_submit == 0.0:
+            return None
         return self.t_done - self.t_submit
 
 
@@ -276,7 +281,7 @@ class Engine:
                 n_tokens += self._run_wave(wave)
                 n_waves += 1
         dt = max(time.perf_counter() - t0, 1e-9)
-        lats = [r.latency for r in self.done]
+        lats = [r.latency for r in self.done if r.latency is not None]
         return {
             "requests": len(self.done),
             "mode": "continuous" if self.sc.continuous else "wave",

@@ -1,0 +1,212 @@
+"""Result-cache unit battery (``repro/query/cache.py``).
+
+The bitwise guarantee lives in ``test_cache_properties.py``; this file
+pins the mechanism underneath it: exact-fingerprint keying, LRU bounds,
+journal-driven wholesale flush (vs provable no-op bumps), the
+version-guarded ``put``, the belt-and-braces tombstone drop on ``get``,
+and the engine-level integration (repeat queries hit and stay bitwise
+equal to an uncached engine across mutations).
+"""
+import numpy as np
+import pytest
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.cache import ResultCache
+from repro.query.engine import QueryConfig, QueryEngine
+from repro.query.index import build_index
+from repro.types import PAD_ID
+
+K, BEAM, HOPS = 10, 16, 3
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_dataset("synth", scale=0.1, seed=3)
+
+
+@pytest.fixture()
+def index(dataset):
+    return build_index(dataset, C2Params(k=10, b=64, t=8, max_cluster=48))
+
+
+@pytest.fixture(scope="module")
+def query_profiles():
+    qds = make_dataset("synth", scale=0.1, seed=77)
+    return [qds.profile(u) for u in range(24)]
+
+
+@pytest.fixture(scope="module")
+def insert_profiles():
+    ids = make_dataset("synth", scale=0.1, seed=5)
+    return [ids.profile(u) for u in range(8)]
+
+
+def _engine(index, cache=0, **kw):
+    kw.setdefault("refresh_every", 10 ** 9)
+    return QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                          cache=cache, **kw))
+
+
+# -- unit: keying, LRU, version guard --------------------------------------
+
+def test_key_is_exact_fingerprint_plus_knobs(index):
+    cache = ResultCache(index, capacity=4)
+    w = index.words[0]
+    base = cache.key(w, 7, K, HOPS)
+    assert base == cache.key(w.copy(), 7, K, HOPS)   # value equality
+    assert base != cache.key(index.words[1], 7, K, HOPS)
+    assert base != cache.key(w, 8, K, HOPS)
+    assert base != cache.key(w, 7, K + 1, HOPS)
+    assert base != cache.key(w, 7, K, HOPS + 1)
+
+
+def test_get_returns_copies_and_counts(index):
+    cache = ResultCache(index, capacity=4)
+    key = ("k", 1, K, HOPS)
+    assert cache.get(key) is None and cache.misses == 1
+    ids = np.arange(K, dtype=np.int32)
+    sims = np.linspace(1.0, 0.5, K, dtype=np.float32)
+    cache.put(key, ids, sims)
+    got_ids, got_sims = cache.get(key)
+    assert cache.hits == 1
+    np.testing.assert_array_equal(got_ids, ids)
+    np.testing.assert_array_equal(got_sims, sims)
+    got_ids[0] = -42  # caller mutations must not reach the cache
+    again, _ = cache.get(key)
+    assert again[0] == 0
+
+
+def test_lru_eviction_respects_recency(index):
+    cache = ResultCache(index, capacity=2)
+    ids = np.arange(K, dtype=np.int32)
+    sims = np.ones(K, np.float32)
+    for name in ("a", "b"):
+        cache.put((name,), ids, sims)
+    assert cache.get(("a",)) is not None  # refresh a → b becomes LRU
+    cache.put(("c",), ids, sims)
+    assert len(cache) == 2
+    assert cache.get(("b",)) is None      # evicted
+    assert cache.get(("a",)) is not None
+    assert cache.get(("c",)) is not None
+
+
+def test_put_refuses_results_straddling_a_mutation(index, insert_profiles):
+    eng = _engine(index)
+    cache = ResultCache(index, capacity=4)
+    key = ("stale",)
+    eng.insert(insert_profiles[0])  # version bump AFTER key was taken
+    assert index.version != cache.version
+    cache.put(key, np.arange(K, dtype=np.int32), np.ones(K, np.float32))
+    assert len(cache) == 0  # refused: computed against an older state
+    cache.sync()
+    cache.put(key, np.arange(K, dtype=np.int32), np.ones(K, np.float32))
+    assert len(cache) == 1  # same call accepted once reconciled
+
+
+def test_capacity_must_be_positive(index):
+    with pytest.raises(ValueError):
+        ResultCache(index, capacity=0)
+
+
+# -- unit: invalidation ----------------------------------------------------
+
+def test_real_mutation_flushes_wholesale(index, insert_profiles):
+    eng = _engine(index)
+    cache = ResultCache(index, capacity=8)
+    cache.put(("x",), np.arange(K, dtype=np.int32), np.ones(K, np.float32))
+    eng.insert(insert_profiles[0])
+    cache.sync()
+    # A new row can reroute ANY descent — everything goes, not just
+    # entries naming touched ids.
+    assert len(cache) == 0 and cache.flushes == 1
+    assert cache.version == index.version
+    cache.sync()
+    assert cache.flushes == 1  # idempotent at the same version
+
+
+def test_noop_version_bump_keeps_entries(index):
+    cache = ResultCache(index, capacity=8)
+    cache.put(("x",), np.arange(K, dtype=np.int32), np.ones(K, np.float32))
+    index.version += 1  # bump with EMPTY journals (nothing recorded)
+    changed = index.rows_changed_since(cache.version)
+    if changed is None or changed:
+        pytest.skip("journals cannot prove this bump was a no-op")
+    cache.sync()
+    assert len(cache) == 1 and cache.flushes == 0
+    assert cache.version == index.version
+    assert cache.get(("x",)) is not None
+
+
+def test_tombstoned_id_is_never_served(index):
+    """Belt and braces: even if an entry naming a dead id survived (it
+    cannot, per the flush rule — poke the tombstone WITHOUT a version
+    bump to simulate exactly that impossible state), get() drops it."""
+    cache = ResultCache(index, capacity=4)
+    victim = int(index.alive_ids()[0])
+    ids = np.full(K, PAD_ID, np.int32)
+    ids[0] = victim
+    cache.put(("dead",), ids, np.ones(K, np.float32))
+    index.tombstone[victim] = True
+    try:
+        assert cache.get(("dead",)) is None
+        assert cache.stale_drops == 1 and cache.misses == 1
+        assert len(cache) == 0  # dropped, not retained
+    finally:
+        index.tombstone[victim] = False
+
+
+def test_stats_shape(index):
+    cache = ResultCache(index, capacity=4)
+    cache.get(("miss",))
+    cache.put(("x",), np.arange(K, dtype=np.int32), np.ones(K, np.float32))
+    cache.get(("x",))
+    s = cache.stats()
+    assert s == {"capacity": 4, "entries": 1, "hits": 1, "misses": 1,
+                 "hit_rate": 0.5, "flushes": 0, "stale_drops": 0}
+
+
+# -- engine integration ----------------------------------------------------
+
+@pytest.mark.parametrize("continuous", [False, True])
+def test_repeat_queries_hit_and_stay_bitwise(index, query_profiles,
+                                             continuous):
+    ref = _engine(index, cache=0, continuous=continuous, slots=8)
+    eng = _engine(index, cache=64, continuous=continuous, slots=8)
+    probe = query_profiles[:8]
+    r_ids, r_sims = ref.query_batch(probe)
+    c_ids, c_sims = eng.query_batch(probe)   # cold: fills
+    h_ids, h_sims = eng.query_batch(probe)   # warm: pure hits
+    st = eng.plan.cache.stats()
+    assert st["hits"] == len(probe)
+    assert st["misses"] == len(probe)
+    for got in ((c_ids, c_sims), (h_ids, h_sims)):
+        np.testing.assert_array_equal(got[0], r_ids)
+        np.testing.assert_array_equal(got[1], r_sims)
+
+
+def test_mutation_invalidates_then_tracks_fresh_truth(index, query_profiles,
+                                                      insert_profiles):
+    ref = _engine(index, cache=0)
+    eng = _engine(index, cache=64)
+    probe = query_profiles[:6]
+    eng.query_batch(probe)
+    assert len(eng.plan.cache) == len(probe)
+    for p in insert_profiles[:3]:
+        ref.insert(p)  # one engine mutates the SHARED index...
+    c_ids, c_sims = eng.query_batch(probe)  # ...the other must notice
+    assert eng.plan.cache.flushes == 1
+    r_ids, r_sims = ref.query_batch(probe)
+    np.testing.assert_array_equal(c_ids, r_ids)
+    np.testing.assert_array_equal(c_sims, r_sims)
+
+
+def test_removed_user_disappears_from_cached_results(index, query_profiles):
+    eng = _engine(index, cache=64)
+    probe = query_profiles[:6]
+    ids, _ = eng.query_batch(probe)
+    victim = int(ids[0][0])  # definitely part of a cached result
+    eng.remove_user(victim)
+    ids2, _ = eng.query_batch(probe)
+    assert eng.plan.cache.flushes == 1
+    assert not (ids2 == victim).any()

@@ -1,0 +1,358 @@
+"""SLO-aware serving battery.
+
+Locks down the PR-7 admission layer and its satellite fixes:
+
+* ``shed_and_select`` ordering (priority class, then earliest deadline,
+  then submission order) and its two shed populations (expired,
+  bounded-queue overflow);
+* SlotScheduler slo policy: admission order, explicit shedding with
+  exactly-once accounting (``n_submitted == n_admitted + pending +
+  n_shed``), ``drain_shed``;
+* engine-level rejected markers (shed requests complete WITHOUT results
+  and are excluded from latency/recall), in wave and continuous modes;
+* ``QueryRequest.latency`` None-until-served semantics (the old
+  ``0.0 - t_submit`` negative-latency bug);
+* heterogeneous-k ``recall_vs_brute_force`` (the old ``np.stack`` crash
+  on ragged id rows);
+* the zero-hop-burst regression: a continuous tick's completions cost
+  ONE slot-result snapshot (``sched.trace.launch_count``), however many
+  admission chunks fed it;
+* adaptive hop budgets: fewer ticks than fixed-budget serving at
+  near-parity recall, all requests still served exactly once;
+* the open-loop driver's stall guard: shedding counts as progress, a
+  stuck engine raises.
+"""
+import time
+from collections import deque
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import build_index
+from repro.sched import SlotScheduler, shed_and_select, trace
+
+K, BEAM, HOPS = 10, 16, 3
+
+
+@pytest.fixture(scope="module")
+def index():
+    ds = make_dataset("synth", scale=0.1, seed=3)
+    return build_index(ds, C2Params(k=10, b=64, t=8, max_cluster=48))
+
+
+@pytest.fixture(scope="module")
+def query_profiles():
+    qds = make_dataset("synth", scale=0.1, seed=77)
+    return [qds.profile(u) for u in range(48)]
+
+
+def _req(rid=0, pri=0, deadline=None):
+    return QueryRequest(rid=rid, profile=np.array([1, 2, 3], np.int32),
+                        priority=pri, deadline=deadline)
+
+
+# -- shed_and_select -------------------------------------------------------
+
+def test_select_orders_by_class_then_deadline_then_submission():
+    pending = deque([_req(0, pri=1), _req(1, pri=0, deadline=5.0),
+                     _req(2, pri=0, deadline=2.0), _req(3, pri=1),
+                     _req(4, pri=0)])
+    selected, shed = shed_and_select(pending, 3, now=0.0)
+    assert not shed
+    # Class 0 first; inside the class earliest deadline wins and
+    # no-deadline (inf) goes last.
+    assert [r.rid for r in selected] == [2, 1, 4]
+    # Remainder keeps submission order for deterministic FIFO tiebreaks.
+    assert [r.rid for r in pending] == [0, 3]
+
+
+def test_select_sheds_expired_and_bounded_overflow():
+    pending = deque([_req(0, pri=0, deadline=0.5), _req(1, pri=0,
+                                                        deadline=10.0),
+                     _req(2, pri=1), _req(3, pri=1), _req(4, pri=1)])
+    selected, shed = shed_and_select(pending, 1, now=1.0, max_pending=1)
+    assert [r.rid for r in selected] == [1]
+    # rid 0 expired; rids 3, 4 are worst-ranked overflow past the bound
+    # (same class + deadline, so later submissions shed first).
+    assert sorted(r.rid for r in shed) == [0, 3, 4]
+    assert [r.rid for r in pending] == [2]
+
+
+def test_select_unbounded_never_sheds_unexpired():
+    pending = deque([_req(i, pri=i % 3) for i in range(20)])
+    selected, shed = shed_and_select(pending, 4, now=0.0, max_pending=0)
+    assert len(selected) == 4 and not shed and len(pending) == 16
+
+
+# -- SlotScheduler slo policy ----------------------------------------------
+
+def test_scheduler_slo_admission_shedding_and_accounting():
+    sched = SlotScheduler(2, policy="slo", max_pending=2,
+                          clock=lambda: 0.0)
+    for i in range(6):
+        sched.submit(_req(i, pri=1 if i < 4 else 0))
+    admitted = sched.admit()
+    # The two class-0 stragglers jump the four earlier class-1 submits.
+    assert [r.rid for _, r in admitted] == [4, 5]
+    assert [s for s, _ in admitted] == [0, 1]
+    # Queue bounded at 2: the two worst-ranked class-1 requests shed.
+    assert sched.n_shed == 2 and len(sched.pending) == 2
+    shed = sched.drain_shed()
+    assert sorted(r.rid for r in shed) == [2, 3]
+    assert sched.drain_shed() == []  # drained exactly once
+    sched.check_invariants()
+    # Release + drain the rest; exactly-once end to end.
+    sched.release(0)
+    sched.release(1)
+    assert [r.rid for _, r in sched.admit()] == [0, 1]
+    sched.release_many([0, 1])
+    sched.check_invariants()
+    assert sched.n_submitted == 6
+    assert sched.n_admitted == sched.n_completed == 4
+    assert sched.n_shed == 2
+
+
+def test_scheduler_slo_sheds_expired_by_injected_clock():
+    now = [0.0]
+    sched = SlotScheduler(1, policy="slo", clock=lambda: now[0])
+    sched.submit(_req(0, deadline=1.0))
+    sched.submit(_req(1))
+    now[0] = 2.0  # rid 0 expires while pending
+    admitted = sched.admit()
+    assert [r.rid for _, r in admitted] == [1]
+    assert [r.rid for r in sched.drain_shed()] == [0]
+    sched.check_invariants()
+
+
+def test_scheduler_rejects_bad_policy_and_bounds():
+    with pytest.raises(ValueError):
+        SlotScheduler(4, policy="nope")
+    with pytest.raises(ValueError):
+        SlotScheduler(4, max_pending=-1)
+
+
+# -- engine-level rejected markers -----------------------------------------
+
+@pytest.mark.parametrize("continuous", [False, True])
+def test_expired_requests_complete_with_rejected_marker(
+        index, query_profiles, continuous):
+    eng = QueryEngine(index, QueryConfig(
+        k=K, beam=BEAM, hops=HOPS, admission="slo",
+        continuous=continuous, slots=4))
+    past = time.perf_counter() - 1.0
+    eng.submit(QueryRequest(rid=0, profile=query_profiles[0]))
+    eng.submit(QueryRequest(rid=1, profile=query_profiles[1],
+                            priority=1, deadline=past))
+    eng.submit(QueryRequest(rid=2, profile=query_profiles[2]))
+    stats = eng.run()
+    assert stats["requests"] == 3
+    assert stats["served"] == 2 and stats["shed"] == 1
+    rej = [r for r in eng.done if r.rejected]
+    assert len(rej) == 1 and rej[0].rid == 1
+    # Shed requests complete WITHOUT results and never count as served.
+    assert rej[0].ids is None and rej[0].sims is None
+    assert rej[0].status == "rejected" and rej[0].t_done > 0.0
+    served = [r for r in eng.done if r.status == "done"]
+    assert {r.rid for r in served} == {0, 2}
+    assert all(r.ids is not None for r in served)
+    # Recall skips the rejected request instead of crashing on ids=None.
+    assert eng.recall_vs_brute_force() > 0.5
+
+
+def test_wave_slo_serves_high_priority_class_first(index, query_profiles):
+    eng = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                         admission="slo", max_wave=4))
+    for rid in range(8):
+        eng.submit(QueryRequest(rid=rid, profile=query_profiles[rid],
+                                priority=0 if rid >= 4 else 1))
+    eng.run()
+    # First wave = the class-0 requests, despite later submission.
+    assert {r.rid for r in eng.done[:4]} == {4, 5, 6, 7}
+    assert {r.rid for r in eng.done[4:]} == {0, 1, 2, 3}
+
+
+def test_fifo_engine_never_sheds(index, query_profiles):
+    eng = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS))
+    past = time.perf_counter() - 1.0
+    for rid in range(4):
+        eng.submit(QueryRequest(rid=rid, profile=query_profiles[rid],
+                                deadline=past))  # fifo ignores deadlines
+    stats = eng.run()
+    assert stats["served"] == 4 and stats["shed"] == 0
+    assert not any(r.rejected for r in eng.done)
+
+
+# -- latency semantics (satellite bugfix) ----------------------------------
+
+def test_latency_is_none_until_served():
+    r = _req(0)
+    assert r.latency is None          # neither timestamp set
+    r.t_submit = 5.0
+    assert r.latency is None          # submitted, not completed — the
+    #                                   old code returned -5.0 here
+    r.t_done = 6.5
+    assert r.latency == pytest.approx(1.5)
+
+
+def test_stats_latency_excludes_unserved(index, query_profiles):
+    eng = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                         admission="slo"))
+    past = time.perf_counter() - 1.0
+    eng.submit(QueryRequest(rid=0, profile=query_profiles[0]))
+    eng.submit(QueryRequest(rid=1, profile=query_profiles[1],
+                            priority=1, deadline=past))
+    stats = eng.run()
+    # One served request: every latency stat is its (positive) latency;
+    # the old negative-poisoning bug made these go below zero.
+    assert stats["p50_latency_s"] > 0.0
+    assert stats["p95_latency_s"] > 0.0
+    assert stats["mean_latency_s"] > 0.0
+
+
+# -- heterogeneous-k recall (satellite bugfix) -----------------------------
+
+def test_recall_vs_brute_force_handles_mixed_k(index, query_profiles):
+    eng5 = QueryEngine(index, QueryConfig(k=5, beam=BEAM, hops=HOPS))
+    eng10 = QueryEngine(index, QueryConfig(k=10, beam=BEAM, hops=HOPS))
+    for rid in range(6):
+        eng5.submit(QueryRequest(rid=rid, profile=query_profiles[rid]))
+        eng10.submit(QueryRequest(rid=rid,
+                                  profile=query_profiles[6 + rid]))
+    eng5.run()
+    eng10.run()
+    mixed = eng5.done + eng10.done  # ragged id rows: k=5 and k=10
+    rec = eng10.recall_vs_brute_force(mixed)  # old code: np.stack raised
+    assert 0.0 < rec <= 1.0
+    # Mixed recall is the size-weighted mean of the per-k groups.
+    r5 = eng10.recall_vs_brute_force(eng5.done)
+    r10 = eng10.recall_vs_brute_force(eng10.done)
+    expect = (r5 * len(eng5.done) + r10 * len(eng10.done)) / len(mixed)
+    assert rec == pytest.approx(expect)
+
+
+# -- zero-hop burst: one snapshot per tick (satellite perf fix) ------------
+
+def test_zero_hop_burst_costs_one_snapshot_per_tick(index, query_profiles):
+    eng = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                         continuous=True, slots=8))
+    eng.submit(QueryRequest(rid=-1, profile=query_profiles[0]))
+    eng.run()
+    eng.done.clear()
+    key = ("slot_results", eng.plan.key)
+    # A zero-hop burst larger than the slot count, plus normal requests:
+    # the old admit loop snapshotted once per admission chunk.
+    n_zero = 12
+    for rid in range(n_zero):
+        eng.submit(QueryRequest(rid=rid, profile=query_profiles[rid],
+                                hops=0))
+    for rid in range(n_zero, n_zero + 4):
+        eng.submit(QueryRequest(rid=rid, profile=query_profiles[rid]))
+    while eng.busy():
+        before = trace.launch_count(key)
+        n = eng.step()
+        assert trace.launch_count(key) - before == (1 if n else 0), \
+            "a tick's completions must cost exactly one slot-result " \
+            "snapshot"
+    assert len(eng.done) == n_zero + 4
+    # Zero-hop results are wave hops=0 results, bitwise.
+    w_ids, w_sims = eng.query_batch(query_profiles[:n_zero], hops=0)
+    by_rid = {r.rid: r for r in eng.done}
+    for rid in range(n_zero):
+        np.testing.assert_array_equal(by_rid[rid].ids, w_ids[rid])
+        np.testing.assert_array_equal(by_rid[rid].sims, w_sims[rid])
+
+
+# -- adaptive hop budgets --------------------------------------------------
+
+def test_adaptive_budgets_save_ticks_at_near_parity_recall(
+        index, query_profiles):
+    def serve(patience):
+        eng = QueryEngine(index, QueryConfig(
+            k=K, beam=BEAM, hops=2 * HOPS, continuous=True, slots=8,
+            adaptive=patience))
+        for rid, p in enumerate(query_profiles[:16]):
+            eng.submit(QueryRequest(rid=-1 - rid, profile=p))
+        eng.run()
+        eng.done.clear()
+        t0 = eng.n_ticks
+        for rid, p in enumerate(query_profiles):
+            eng.submit(QueryRequest(rid=rid, profile=p))
+        eng.run()
+        assert len(eng.done) == len(query_profiles)  # all served once
+        return (eng.n_ticks - t0,
+                eng.recall_vs_brute_force(eng.done))
+
+    fixed_ticks, fixed_recall = serve(0)
+    adapt_ticks, adapt_recall = serve(1)
+    assert adapt_ticks <= fixed_ticks
+    assert adapt_recall >= fixed_recall - 0.02
+
+
+def test_adaptive_requires_continuous_batching():
+    with pytest.raises(ValueError):
+        QueryConfig(k=K, adaptive=2).spec()
+
+
+def test_max_pending_requires_slo():
+    with pytest.raises(ValueError):
+        QueryConfig(k=K, max_pending=8).spec()
+
+
+# -- open-loop stall guard (satellite bugfix) ------------------------------
+
+def _load_query_bench():
+    import importlib.util
+    from pathlib import Path
+
+    bench = Path(__file__).resolve().parent.parent / "benchmarks"
+    spec = importlib.util.spec_from_file_location(
+        "query_bench", bench / "query_bench.py")
+    qb = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(qb)
+    return qb
+
+
+def test_open_loop_raises_on_stuck_engine_not_on_shedding():
+    qb = _load_query_bench()
+
+    class StuckEngine:
+        """Accepts work, never completes any — the bug the guard is for."""
+
+        def __init__(self):
+            self.queue = deque()
+            self.done = []
+            self.plan = SimpleNamespace(scheduler=None)
+
+        def busy(self):
+            return bool(self.queue)
+
+        def step(self):
+            return 0
+
+    profiles = [np.array([1, 2, 3], np.int32)] * 3
+    with pytest.raises(RuntimeError, match="stopped completing work"):
+        qb.open_loop(StuckEngine(), profiles, rate_qps=1000.0,
+                     stall_s=0.2)
+
+    class SheddingEngine(StuckEngine):
+        """Completes everything as rejected — overload response, NOT a
+        stall; the old assertion could not tell these apart."""
+
+        def step(self):
+            n = 0
+            while self.queue:
+                r = self.queue.popleft()
+                r.status = "rejected"
+                r.t_done = time.perf_counter()
+                self.done.append(r)
+                n += 1
+            return n
+
+    row = qb.open_loop(SheddingEngine(), profiles, rate_qps=1000.0,
+                       stall_s=0.2)
+    assert row["shed"] == 3 and row["served"] == 0
+    assert row["p95_latency_ms"] is None  # no served latencies to rank
