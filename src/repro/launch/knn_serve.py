@@ -37,6 +37,15 @@ every request with a D-millisecond deadline, ``--adaptive P`` frees a
 continuous slot once its top-k prefix has held P hops, and
 ``--cache N`` serves exact-fingerprint repeats from an N-entry result
 cache invalidated by index-mutation journals.
+
+Re-balance flags (``repro/query/rebalance.py``, shards > 1 only):
+``--rebalance-every N`` measures shard imbalance every N scheduler
+steps and blue/green-swaps to a freshly derived plan when it exceeds
+``--rebalance-threshold`` (merge-based subgraph rebuild, in-flight
+beams remapped, result cache flushed); ``--resident-configs M``
+restricts shard residency to clusters of the first M hash
+configurations (tiered residency: ~t/M per-shard memory for a small
+recall cost; routing still sees every cluster).
 """
 from __future__ import annotations
 
@@ -102,6 +111,17 @@ def main(argv=None):
     ap.add_argument("--cache", type=int, default=0,
                     help="fingerprint result-cache capacity, journal-"
                          "invalidated on index mutation (0 = off)")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="measure shard imbalance every this many "
+                         "scheduler steps; blue/green-swap the plan "
+                         "past the threshold (0 = off; needs --shards)")
+    ap.add_argument("--rebalance-threshold", type=float, default=1.25,
+                    help="measured imbalance (max/mean resident cluster "
+                         "mass) that triggers a re-balance swap")
+    ap.add_argument("--resident-configs", type=int, default=0,
+                    help="tiered residency: only clusters of the first "
+                         "M hash configurations contribute shard "
+                         "residents (0 = all t; needs --shards)")
     ap.add_argument("--index", default=None, help="load a saved index")
     ap.add_argument("--save-index", default=None, help="save the built index")
     ap.add_argument("--seed", type=int, default=0)
@@ -130,7 +150,10 @@ def main(argv=None):
         shards=args.shards, continuous=args.continuous, slots=args.slots,
         kernel=args.kernel, ttl=args.ttl, repair_every=args.repair_every,
         admission=args.admission, max_pending=args.max_pending,
-        adaptive=args.adaptive, cache=args.cache))
+        adaptive=args.adaptive, cache=args.cache,
+        resident_configs=args.resident_configs,
+        rebalance_every=args.rebalance_every,
+        rebalance_threshold=args.rebalance_threshold))
     print(f"[serve] plan: {engine.plan.describe()}")
 
     # Unseen profiles from the same distribution (different seed).
@@ -165,9 +188,13 @@ def main(argv=None):
 
     sd = engine.sharded_state()  # after inserts: the waves reuse this state
     if sd is not None:
+        mb = [round(b / 1e6, 2) for b in sd.resident_bytes()]
         print(f"[serve] sharded: {sd.n_shards} shards, resident rows "
-              f"{[len(r) for r in sd.plan.residents]}, "
-              f"imbalance {sd.plan.imbalance:.2f}, "
+              f"{[len(r) for r in sd.plan.residents]} "
+              f"({mb} MB"
+              + (f", configs {sd.plan.resident_configs}/{index.t}"
+                 if sd.plan.resident_configs else "")
+              + f"), imbalance {sd.plan.imbalance:.2f}, "
               f"{'mesh' if sd.mesh is not None else 'vmap'} execution")
 
     if not profiles:

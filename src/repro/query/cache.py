@@ -90,6 +90,20 @@ class ResultCache:
         self.flushes += 1
         self.version = ix.version
 
+    def invalidate(self):
+        """Flush unconditionally — for events the journals cannot see.
+
+        A shard re-balance swap (``query/rebalance.py``) mutates no
+        index content, so :meth:`sync` would provably keep the cache —
+        yet the partition (and therefore every descent result) changed.
+        Counts as a flush, so in-flight requests that straddled the
+        swap fail the flush-count check at completion and never
+        populate the cache with pre-swap results.
+        """
+        self._entries.clear()
+        self.flushes += 1
+        self.version = self.index.version
+
     # -- lookup / fill -----------------------------------------------------
 
     def get(self, key: tuple):

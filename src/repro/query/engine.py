@@ -40,6 +40,7 @@ from repro.eval.metrics import knn_recall
 from repro.lifecycle import LifecycleConfig, LifecycleManager
 from repro.query.index import KNNIndex
 from repro.query.plan import DescentPlan, PlanSpec
+from repro.query.rebalance import RebalanceConfig, Rebalancer
 from repro.query.router import (fingerprint_profiles, placements,
                                 profiles_to_csr)
 from repro.query.search import exact_knn
@@ -110,6 +111,13 @@ class QueryConfig:
                                # prefix held for this many hops (patience)
     cache: int = 0             # >0: fingerprint-keyed result-cache
                                # capacity (journal-invalidated)
+    resident_configs: int = 0  # tiered residency: only clusters of the
+                               # first m hash configurations contribute
+                               # shard residents (0 = all t; shards > 1)
+    rebalance_every: int = 0   # background re-balance check cadence in
+                               # scheduler steps (0 = off; shards > 1)
+    rebalance_threshold: float = 1.25  # measured imbalance that triggers
+                               # a blue/green plan swap
 
     def spec(self) -> PlanSpec:
         """Map the flag pile onto a validated plan on the three axes."""
@@ -122,7 +130,8 @@ class QueryConfig:
             seeds_per_config=self.seeds_per_config,
             shard_oversample=self.shard_oversample,
             admission=self.admission, max_pending=self.max_pending,
-            adaptive=self.adaptive, cache=self.cache)
+            adaptive=self.adaptive, cache=self.cache,
+            resident_configs=self.resident_configs)
 
 
 class QueryEngine:
@@ -138,6 +147,15 @@ class QueryEngine:
         self.lifecycle = LifecycleManager(
             self, LifecycleConfig(ttl=self.qc.ttl,
                                   repair_every=self.qc.repair_every))
+        if self.qc.rebalance_every > 0 and self.qc.shards <= 1:
+            raise ValueError(
+                "rebalance_every re-balances the SHARD partition; a "
+                "single-device placement has nothing to re-balance "
+                "(use shards > 1)")
+        self.rebalance = Rebalancer(
+            self.plan, RebalanceConfig(
+                every=self.qc.rebalance_every,
+                threshold=self.qc.rebalance_threshold))
 
     @property
     def n_ticks(self) -> int:
@@ -174,10 +192,14 @@ class QueryEngine:
         interleaved with service; :meth:`run` loops it until drained.
         Lifecycle maintenance (TTL expiry, churn repair) fires AFTER the
         plan step — between compiled programs — so continuous slots
-        in flight never see a half-applied mutation mid-hop.
+        in flight never see a half-applied mutation mid-hop. The shard
+        re-balancer runs last: its imbalance measurement (and any
+        blue/green swap) sees the step's lifecycle mutations already
+        journaled, and the swap lands before the next compiled program.
         """
         n = self.plan.step(self.queue, self.done)
         self.lifecycle.maintain()
+        self.rebalance.maintain()
         return n
 
     def tick(self) -> int:
@@ -229,6 +251,8 @@ class QueryEngine:
         }
         if self.plan.cache is not None:
             stats["cache"] = self.plan.cache.stats()
+        if self.rebalance.active:
+            stats["rebalance"] = self.rebalance.stats()
         return stats
 
     # -- online insertion --------------------------------------------------

@@ -218,6 +218,18 @@ class KNNIndex:
         return len(self.cluster_config)
 
     @property
+    def row_bytes(self) -> int:
+        """Serving bytes one resident row costs a shard: adjacency +
+        reverse adjacency + fingerprint words (all int32/uint32) + card
+        + local→global id + tombstone flag. Tiered residency
+        (``plan_shards(resident_configs=)``) and the bench's residency
+        sweep price per-shard memory with this."""
+        kg = self._bufs["graph_ids"].shape[1]
+        kr = self._bufs["rev_ids"].shape[1]
+        w = self._bufs["words"].shape[1]
+        return 4 * (kg + kr + w) + 4 + 4 + 1
+
+    @property
     def gf(self) -> GoldFinger:
         return GoldFinger(words=self.words, card=self.card)
 

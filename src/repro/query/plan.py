@@ -98,6 +98,9 @@ class PlanSpec:
     adaptive: int = 0           # continuous: free a slot once its top-k
                                 # prefix held this many hops (0 = off)
     cache: int = 0              # fingerprint result-cache capacity (0=off)
+    resident_configs: int = 0   # tiered residency: clusters of the first
+                                # m hash configurations contribute shard
+                                # residents (0 = all t; sharded only)
 
     def __post_init__(self):
         if self.placement < 1:
@@ -141,6 +144,14 @@ class PlanSpec:
         if self.cache < 0:
             raise ValueError(f"cache capacity must be >= 0, "
                              f"got {self.cache}")
+        if self.resident_configs < 0:
+            raise ValueError(f"resident_configs must be >= 0, "
+                             f"got {self.resident_configs}")
+        if self.resident_configs > 0 and self.placement == 1:
+            raise ValueError(
+                "resident_configs restricts SHARD residency to a subset "
+                "of hash configurations; a single-device placement hosts "
+                "every row (use placement > 1)")
 
     @property
     def kernel(self) -> bool:
@@ -165,6 +176,8 @@ class PlanSpec:
             extras.append(f"adaptive({self.adaptive})")
         if self.cache:
             extras.append(f"cache({self.cache})")
+        if self.resident_configs:
+            extras.append(f"resident_configs({self.resident_configs})")
         return base + (" + " + ", ".join(extras) if extras else "")
 
 
@@ -308,7 +321,8 @@ class DescentPlan:
                 or self._sharded.n_shards != self.spec.placement):
             self._sharded = ShardedDescent(
                 self.index, self.spec.placement,
-                oversample=self.spec.shard_oversample)
+                oversample=self.spec.shard_oversample,
+                resident_configs=self.spec.resident_configs)
         else:
             self._sharded.sync()
         return self._sharded
@@ -317,6 +331,18 @@ class DescentPlan:
         """The delta-synced ShardedDescent, or None for single-device
         placements. Public accessor for diagnostics."""
         return self._sync_sharded() if self.spec.placement > 1 else None
+
+    def note_replan(self):
+        """A blue/green re-balance swapped the sharded partition
+        (``query/rebalance.py``). No index content changed — every
+        journal would PROVE a no-op — but placement is the one axis
+        that legitimately changes results, so cached pre-swap entries
+        must never be served: flush explicitly. The flush counter bump
+        also stops in-flight continuous requests (admitted pre-swap,
+        completing post-swap) from populating the cache with straddled
+        results."""
+        if self.cache is not None:
+            self.cache.invalidate()
 
     # -- raw wave-program search (any plan; insert + benchmarks use it) ----
 
@@ -636,6 +662,13 @@ class DescentPlan:
                 st.beam_ids = jnp.where(
                     st.beam_ids == PAD_ID, PAD_ID,
                     jax.vmap(lambda m, b: m[b])(mp, safe))
+                # A re-balance swap may have EVICTED beam rows from
+                # their shard (the map sends them to PAD): mask their
+                # sims so dead lanes cannot win a merge. Under the
+                # monotone frozen-base extension no live lane maps to
+                # PAD, so this is the identity there.
+                st.beam_sims = jnp.where(st.beam_ids == PAD_ID, NEG_INF,
+                                         st.beam_sims)
                 if spec.adaptive > 0:
                     # Stored prefixes are in pre-reshard local labels —
                     # restart every stability streak rather than risk a

@@ -1,0 +1,229 @@
+"""Background shard re-balance: blue/green plan swap with merge-based
+subgraph rebuild.
+
+The frozen-base shard plan never re-balances: ``extend_plan`` sends new
+clusters round-robin and new users to ``u % S``, so the measured
+``imbalance`` (max/mean resident cluster mass per shard) drifts without
+bound under sustained inserts — the placement-layer version of the
+"laborious spurious work" C² exists to avoid. This module closes that
+gap without ever taking the index offline:
+
+* **Trigger** — a :class:`repro.sched.Cadence` fires every
+  ``RebalanceConfig.every`` scheduler steps (between compiled programs,
+  exactly like lifecycle maintenance); each firing re-measures imbalance
+  from CURRENT cluster sizes (the delta sync deliberately leaves
+  ``ShardPlan.imbalance`` stale — that would be O(members) per insert).
+* **Re-derive** — when the measurement exceeds
+  ``RebalanceConfig.threshold``, a fresh :func:`plan_shards` is derived
+  from the current index (same LPT packing a cold start would get,
+  tiered residency included).
+* **Merge-based rebuild** — the new per-shard resident tensors are
+  constructed by *symmetric merge* of the OLD shard subgraphs' rows
+  ("On the Merge of k-NN Graph", Zhao et al.): every shard's local row
+  is the global adjacency row with non-resident lanes dropped to PAD,
+  so uniting the copies across all shards hosting a user reconstructs
+  the global row lane-by-lane. The delta :meth:`ShardedDescent.sync`
+  runs first (consuming the row / membership / tombstone journals —
+  journal compaction keeps that bounded), so the old device tensors are
+  current and the merge reads THEM, not the global index. Lanes no
+  surviving co-resident copy retains (an edge whose endpoints never
+  shared a shard) are patched from the index and counted —
+  ``merge_stats`` reports the recovered fraction — which keeps the
+  rebuilt tensors bitwise-equal to a from-scratch ``plan_shards``
+  re-scatter (the property the hypothesis battery locks down).
+* **Blue/green swap** — :meth:`ShardedDescent.adopt_plan` installs the
+  plan + tensors + old→new local-id beam remap in one host-side call
+  between scheduler steps: in-flight continuous slots keep descending
+  (rows evicted from their shard drop to PAD with sims masked), and no
+  request ever observes a half-swapped generation. The plan's
+  :class:`~repro.query.cache.ResultCache` is invalidated explicitly —
+  a swap changes no index content, so no journal proves anything, but
+  placement is the one axis that changes results and pre-swap entries
+  must never be served.
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.core.distributed import lpt_loads
+from repro.query.sharded import ShardedDescent, ShardPlan, plan_shards
+from repro.sched import Cadence, trace
+from repro.types import PAD_ID
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceConfig:
+    """Knobs for the background re-balancer (engine flag-pile mapped)."""
+
+    every: int = 0          # check cadence in scheduler steps (0 = off)
+    threshold: float = 1.25  # measured imbalance that triggers a swap
+    merge: bool = True      # symmetric-merge rebuild (False: re-scatter
+                            # from the index — same tensors, used as the
+                            # property-test baseline)
+
+
+def measured_imbalance(index, plan: ShardPlan) -> float:
+    """Max/mean resident cluster mass per shard at CURRENT sizes.
+
+    The delta sync keeps ``plan.imbalance`` frozen at derivation time;
+    this is the live measurement the re-balance trigger compares against
+    its threshold. Non-resident configurations under tiered residency
+    carry no rows and therefore no load.
+    """
+    sizes = index.cluster_sizes().astype(np.float64)
+    if plan.resident_configs:
+        sizes = np.where(
+            np.asarray(index.cluster_config) < plan.resident_configs,
+            sizes, 0.0)
+    nc = min(len(sizes), len(plan.cluster_shard))
+    loads = lpt_loads(sizes[:nc], plan.cluster_shard[:nc], plan.n_shards)
+    return float(loads.max() / max(loads.mean(), 1e-9))
+
+
+def merge_subgraph_rows(sd: ShardedDescent):
+    """Reconstruct global row content by symmetric merge of the (synced)
+    shard subgraphs; returns ``(src, stats)``.
+
+    ``src`` quacks like the index (``graph_ids / rev_ids / words / card
+    / tombstone``) and feeds :meth:`ShardedDescent._materialize` — the
+    new shards' rows come from the old shards' device state instead of
+    a global re-scatter. Per lane, every hosting shard's copy is either
+    PAD (target not co-resident there) or the global id, so the union
+    across hosting shards recovers the row; fingerprints / card /
+    tombstone are identical on every copy and come from the first host.
+
+    A lane stays unrecoverable only when NO old shard hosted both
+    endpoints. Those are patched from the index and counted in
+    ``stats`` — the audit that makes the merged rebuild bitwise-equal
+    to a from-scratch ``plan_shards`` build rather than approximately
+    so.
+    """
+    ix = sd.index
+    n = ix.n
+    plan = sd.plan
+    l_graph, l_rev, l_words, l_card, _, l_tomb = \
+        (np.asarray(a) for a in sd._dev)
+    kg, kr = l_graph.shape[2], l_rev.shape[2]
+    graph = np.full((n, kg), PAD_ID, dtype=np.int32)
+    rev = np.full((n, kr), PAD_ID, dtype=np.int32)
+    words = np.zeros((n, l_words.shape[2]), dtype=l_words.dtype)
+    card = np.zeros(n, dtype=l_card.dtype)
+    tomb = np.zeros(n, dtype=bool)
+    seen = np.zeros(n, dtype=bool)
+    for s in range(plan.n_shards):
+        res = plan.residents[s]
+        loc = sd._g2l[s, res]
+        l2g = np.asarray(sd._dev[4])[s]
+        g = _to_global(l2g, l_graph[s][loc])
+        r = _to_global(l2g, l_rev[s][loc])
+        # Symmetric merge: a lane already recovered elsewhere agrees
+        # bitwise (every copy remaps the same global row), so first
+        # non-PAD wins.
+        graph[res] = np.where(graph[res] == PAD_ID, g, graph[res])
+        rev[res] = np.where(rev[res] == PAD_ID, r, rev[res])
+        first = ~seen[res]
+        words[res[first]] = l_words[s][loc[first]]
+        card[res[first]] = l_card[s][loc[first]]
+        tomb[res[first]] = l_tomb[s][loc[first]]
+        seen[res] = True
+    assert seen.all(), "shard residency no longer covers every user"
+    # Audit pass: lanes whose endpoints never shared a shard cannot be
+    # recovered from subgraph copies — patch them from the index so the
+    # rebuild stays bitwise-equal to a from-scratch scatter.
+    lost_g = (graph == PAD_ID) & (ix.graph_ids != PAD_ID)
+    lost_r = (rev == PAD_ID) & (ix.rev_ids != PAD_ID)
+    graph = np.where(lost_g, ix.graph_ids, graph)
+    rev = np.where(lost_r, ix.rev_ids, rev)
+    total = int((ix.graph_ids != PAD_ID).sum() + (ix.rev_ids != PAD_ID).sum())
+    patched = int(lost_g.sum() + lost_r.sum())
+    stats = {
+        "rows": int(n),
+        "lanes": total,
+        "lanes_patched": patched,
+        "merge_coverage": round(1.0 - patched / max(total, 1), 4),
+    }
+    src = SimpleNamespace(graph_ids=graph, rev_ids=rev, words=words,
+                          card=card, tombstone=tomb)
+    return src, stats
+
+
+def _to_global(l2g: np.ndarray, local_ids: np.ndarray) -> np.ndarray:
+    safe = np.where(local_ids == PAD_ID, 0, local_ids)
+    return np.where(local_ids == PAD_ID, PAD_ID, l2g[safe])
+
+
+class Rebalancer:
+    """Cadence-gated background re-balancer owned by a QueryEngine.
+
+    ``maintain()`` runs after every scheduler step (after lifecycle
+    maintenance, so TTL expiry / repair mutations of the SAME step are
+    already journaled and measured). It is a no-op for single-device
+    placements and while the cadence is cold; a firing measures
+    imbalance and swaps only past the threshold. ``swap()`` is also
+    callable directly (benchmarks force swaps to isolate the mechanism).
+    """
+
+    def __init__(self, plan, cfg: RebalanceConfig):
+        self.plan = plan        # the DescentPlan (owns sharded state)
+        self.cfg = cfg
+        self.cadence = Cadence(cfg.every)
+        self.n_checks = 0
+        self.n_swaps = 0
+        self.last_imbalance: float | None = None
+        self.merge_stats: dict = {}
+
+    @property
+    def active(self) -> bool:
+        return self.cfg.every > 0 and self.plan.spec.placement > 1
+
+    def maintain(self) -> float | None:
+        """One between-steps tick; returns the post-swap imbalance when
+        a swap fired, else None."""
+        if not self.active or not self.cadence.tick():
+            return None
+        return self.check()
+
+    def check(self, force: bool = False) -> float | None:
+        """Measure imbalance; swap when past threshold (or ``force``)."""
+        sd = self.plan.sharded_state()  # delta sync: journals consumed
+        imb = measured_imbalance(sd.index, sd.plan)
+        self.n_checks += 1
+        self.last_imbalance = imb
+        sd.plan.imbalance = imb  # refresh the delta-path-stale metric
+        if not force and imb <= self.cfg.threshold:
+            return None
+        return self.swap(sd)
+
+    def swap(self, sd: ShardedDescent | None = None) -> float:
+        """Blue/green swap to a fresh ``plan_shards`` partition; returns
+        the new plan's imbalance."""
+        spec = self.plan.spec
+        if sd is None:
+            sd = self.plan.sharded_state()
+        new_plan = plan_shards(sd.index, spec.placement,
+                               resident_configs=spec.resident_configs)
+        src = None
+        if self.cfg.merge:
+            src, self.merge_stats = merge_subgraph_rows(sd)
+        sd.adopt_plan(new_plan, src=src)
+        self.plan.note_replan()  # placement changed: flush cached results
+        self.n_swaps += 1
+        self.last_imbalance = new_plan.imbalance
+        trace.launch(("rebalance_swap", self.plan.key))
+        return new_plan.imbalance
+
+    def stats(self) -> dict:
+        out = {
+            "every": self.cfg.every,
+            "threshold": self.cfg.threshold,
+            "checks": self.n_checks,
+            "swaps": self.n_swaps,
+            "imbalance": (round(self.last_imbalance, 4)
+                          if self.last_imbalance is not None else None),
+        }
+        if self.merge_stats:
+            out["merge"] = dict(self.merge_stats)
+        return out

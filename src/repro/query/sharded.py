@@ -78,14 +78,41 @@ class ShardPlan:
     residents: list[np.ndarray]   # sorted unique global user ids per shard
     owner: np.ndarray             # int64[n] — the one shard seeding each user
     imbalance: float              # max/mean assigned cluster-size load
+    version: int = -1             # index.version at derivation (journal
+                                  # floor for extend_plan's scoped scans)
+    resident_configs: int = 0     # tiered residency: only clusters of hash
+                                  # configurations < this contribute
+                                  # residents (0 = all t configurations)
 
     @property
     def base_n(self) -> int:
         """Users covered by this plan (== index.n when it was derived)."""
         return len(self.owner)
 
+    def validate(self) -> "ShardPlan":
+        """Assert the ``owner ∈ residents`` invariant.
 
-def plan_shards(index: KNNIndex, n_shards: int) -> ShardPlan:
+        Every user's routed seeds are explored ONLY on the shard owning
+        it (:meth:`ShardedDescent.shard_seeds`); if that shard does not
+        host the user's rows, ``_g2l`` maps the seed to PAD and the
+        whole basin silently vanishes. Derivation paths call this once
+        per plan (the per-insert delta sync keeps the invariant by
+        construction and skips the O(n log n) check).
+        """
+        for s, res in enumerate(self.residents):
+            owned = np.flatnonzero(self.owner == s)
+            hosted = np.isin(owned, res, assume_unique=False)
+            if not hosted.all():
+                bad = owned[~hosted][:8]
+                raise AssertionError(
+                    f"shard {s} owns users it does not host "
+                    f"(e.g. {bad.tolist()}): their owner-partitioned "
+                    f"seeds would be silently dropped")
+        return self
+
+
+def plan_shards(index: KNNIndex, n_shards: int, *,
+                resident_configs: int = 0) -> ShardPlan:
     """LPT bin-packing of FRH clusters onto ``n_shards`` serving shards.
 
     Serving cost is linear in resident rows (descent gathers + scoring),
@@ -94,40 +121,61 @@ def plan_shards(index: KNNIndex, n_shards: int) -> ShardPlan:
     sets, the plan fixes a disjoint *ownership*: every user belongs to
     exactly one shard — the shard of the largest cluster claiming it —
     which is where routed seeds naming that user are explored.
+
+    ``resident_configs`` = m > 0 restricts residency (and ownership
+    claims) to clusters of the first m hash configurations — tiered
+    residency. With t configurations every user is resident on up to t
+    shards; a subset trades a little recall (fewer local rows → more
+    cross-shard edges dropped) for ~t/m per-shard memory. Users in no
+    selected cluster ride the leftover stride, so coverage stays total;
+    routing is untouched (seeds from any configuration descend on their
+    owner shard).
     """
+    rc = resident_configs if 0 < resident_configs < index.t else 0
     sizes = index.cluster_sizes().astype(np.float64)
-    assign = lpt_assign(sizes, n_shards)
+    res_cluster = (np.asarray(index.cluster_config) < rc if rc
+                   else np.ones(index.n_clusters, dtype=bool))
+    eff = np.where(res_cluster, sizes, 0.0)
+    assign = lpt_assign(eff, n_shards)
     residents: list[np.ndarray] = []
     covered = np.zeros(index.n, dtype=bool)
     for s in range(n_shards):
         mems = [index.cluster_users(ci)
-                for ci in np.flatnonzero(assign == s)]
+                for ci in np.flatnonzero((assign == s) & res_cluster)]
         res = (np.unique(np.concatenate(mems)).astype(np.int64)
                if mems else np.zeros(0, np.int64))
         res = res[(res >= 0) & (res < index.n)]
         residents.append(res)
         covered[res] = True
     owner = np.full(index.n, -1, dtype=np.int64)
-    for ci in np.argsort(-sizes, kind="stable"):  # big clusters claim first
+    for ci in np.argsort(-eff, kind="stable"):  # big clusters claim first
+        if not res_cluster[ci]:
+            continue  # non-resident configurations cannot claim owners
         mem = index.cluster_users(int(ci))
         mem = mem[(mem >= 0) & (mem < index.n)]
         free = mem[owner[mem] < 0]
         owner[free] = assign[ci]
     # Unclustered users (singleton clusters are dropped at build; fresh
-    # inserts may not be registered yet) still need a home shard.
+    # inserts may not be registered yet; non-resident configurations
+    # under tiered residency) still need a home shard. The same stride
+    # assigns residency AND ownership, so ``owner ∈ residents`` holds by
+    # construction — ownership is never handed to a shard that does not
+    # host the user's rows (that would silently drop its seeds).
     leftovers = np.flatnonzero(~covered)
     if len(leftovers):
         residents = [np.union1d(res, leftovers[s::n_shards])
                      for s, res in enumerate(residents)]
-    unowned = np.flatnonzero(owner < 0)
-    for s in range(n_shards):
-        owner[unowned[s::n_shards]] = s
-    # Balance metric: assigned cluster-size mass per shard (residency
-    # alone under-reports skew — clusters overlap across configurations).
-    loads = lpt_loads(sizes, assign, n_shards)
+        for s in range(n_shards):
+            owner[leftovers[s::n_shards]] = s
+    # Balance metric: assigned resident cluster-size mass per shard
+    # (residency alone under-reports skew — clusters overlap across
+    # configurations; non-resident configurations carry no rows).
+    loads = lpt_loads(eff, assign, n_shards)
     imbalance = float(loads.max() / max(loads.mean(), 1e-9))
     return ShardPlan(n_shards=n_shards, cluster_shard=assign,
-                     residents=residents, owner=owner, imbalance=imbalance)
+                     residents=residents, owner=owner, imbalance=imbalance,
+                     version=index.version,
+                     resident_configs=rc).validate()
 
 
 def extend_plan(base: ShardPlan, index: KNNIndex) -> ShardPlan:
@@ -142,29 +190,54 @@ def extend_plan(base: ShardPlan, index: KNNIndex) -> ShardPlan:
     * users unseen by ``base`` live on (and are owned by) their home
       shard ``u % S``, plus every shard whose clusters register them;
     * membership is append-only, so resident sets only grow — a user
-      never migrates off a shard until a fresh :func:`plan_shards`.
+      never migrates off a shard until a fresh :func:`plan_shards`
+      (the background re-balancer's blue/green swap,
+      ``query/rebalance.py``, is that one exception).
+
+    Membership scans are scoped by the journal: only clusters born or
+    membership-touched since ``base`` was derived can contribute
+    residents beyond ``base.residents`` (an untouched base cluster's
+    members are already in it), so the one-shot re-derivation costs
+    O(journal + new clusters) scans instead of O(S·C). When the
+    membership journal no longer reaches back to ``base.version`` the
+    full scan runs instead — same result, never a wrong one.
     """
     S = base.n_shards
     base_nc = len(base.cluster_shard)
     n = index.n
+    rc = base.resident_configs
     cluster_shard = np.concatenate([
         base.cluster_shard,
         np.arange(base_nc, index.n_clusters, dtype=np.int64) % S])
+    res_cluster = (np.asarray(index.cluster_config) < rc if rc
+                   else np.ones(index.n_clusters, dtype=bool))
     owner = np.concatenate([
         base.owner, np.arange(base.base_n, n, dtype=np.int64) % S])
     home = np.arange(base.base_n, n, dtype=np.int64)
+    mems = (index.members_added_since(base.version)
+            if base.version >= 0 else None)
+    if mems is None:  # journal expired (or a pre-journal plan): full scan
+        scan = [np.flatnonzero((cluster_shard == s) & res_cluster)
+                for s in range(S)]
+    else:
+        touched = ({int(ci) for ci, _ in mems}
+                   | set(range(base_nc, index.n_clusters)))
+        scan = [sorted(ci for ci in touched
+                       if cluster_shard[ci] == s and res_cluster[ci])
+                for s in range(S)]
     residents = []
     for s in range(S):
         parts = [base.residents[s], home[home % S == s]]
-        for ci in np.flatnonzero(cluster_shard == s):
+        for ci in scan[s]:
             mem = index.cluster_users(int(ci)).astype(np.int64)
             parts.append(mem[(mem >= 0) & (mem < n)])
         residents.append(np.unique(np.concatenate(parts)))
     sizes = index.cluster_sizes().astype(np.float64)
-    loads = lpt_loads(sizes, cluster_shard, S)
+    loads = lpt_loads(np.where(res_cluster, sizes, 0.0), cluster_shard, S)
     imbalance = float(loads.max() / max(loads.mean(), 1e-9))
     return ShardPlan(n_shards=S, cluster_shard=cluster_shard,
-                     residents=residents, owner=owner, imbalance=imbalance)
+                     residents=residents, owner=owner, imbalance=imbalance,
+                     version=base.version, resident_configs=rc).validate()
 
 
 class ShardedDescent:
@@ -179,12 +252,18 @@ class ShardedDescent:
 
     def __init__(self, index: KNNIndex, n_shards: int,
                  plan: ShardPlan | None = None, use_mesh: bool | None = None,
-                 oversample: float = 1.5):
+                 oversample: float = 1.5, resident_configs: int = 0):
         assert n_shards >= 1
         self.index = index
         self.oversample = oversample
-        self.base_plan = plan or plan_shards(index, n_shards)
+        self.base_plan = plan or plan_shards(
+            index, n_shards, resident_configs=resident_configs)
         self.plan = self.base_plan
+        # Bumped by every blue/green swap (query/rebalance.py): all
+        # device tensors + plan + pending beam remap move together
+        # between scheduler steps, so a generation is never observed
+        # half-swapped.
+        self.generation = 0
         S = self.plan.n_shards
         if use_mesh is None:  # auto: one device per shard when available
             use_mesh = S > 1 and jax.device_count() >= S
@@ -210,9 +289,19 @@ class ShardedDescent:
         safe = np.where(ids == PAD_ID, 0, ids)
         return np.where(ids == PAD_ID, PAD_ID, g2l_row[safe])
 
-    def _shard_block(self, s: int, cap: int):
-        """Host tensors of shard ``s`` at ``cap`` rows (rebuild unit)."""
+    def _shard_block(self, s: int, cap: int, src=None):
+        """Host tensors of shard ``s`` at ``cap`` rows (rebuild unit).
+
+        ``src`` overrides WHERE row content is read from: anything with
+        ``graph_ids / rev_ids / words / card / tombstone`` [n]-row
+        arrays — by default the index itself, during a re-balance swap
+        the symmetric-merge reconstruction of the old shard subgraphs
+        (:func:`repro.query.rebalance.merge_subgraph_rows`). Shapes and
+        the g2l width always come from the index.
+        """
         ix = self.index
+        if src is None:
+            src = ix
         res = self.plan.residents[s]
         m = len(res)
         kg, kr = ix.k, ix.rev_ids.shape[1]
@@ -229,14 +318,14 @@ class ShardedDescent:
         words = np.zeros((cap, W), dtype=np.uint32)
         card = np.zeros(cap, dtype=np.int32)
         tomb = np.zeros(cap, dtype=bool)
-        graph[:m] = self._remap(g2l, ix.graph_ids[res])
-        rev[:m] = self._remap(g2l, ix.rev_ids[res])
-        words[:m] = ix.words[res]
-        card[:m] = ix.card[res]
-        tomb[:m] = ix.tombstone[res]
+        graph[:m] = self._remap(g2l, src.graph_ids[res])
+        rev[:m] = self._remap(g2l, src.rev_ids[res])
+        words[:m] = src.words[res]
+        card[:m] = src.card[res]
+        tomb[:m] = src.tombstone[res]
         return l2g, g2l, graph, rev, words, card, tomb
 
-    def _materialize(self):
+    def _materialize(self, src=None):
         """Full (re)build of every shard's resident tensors.
 
         First use, capacity crossings, and journal-expiry fall back here;
@@ -250,7 +339,7 @@ class ShardedDescent:
         cap = max(capacity_of(len(r), minimum=64)
                   for r in self.plan.residents)
         self.cap = cap
-        blocks = [self._shard_block(s, cap) for s in range(S)]
+        blocks = [self._shard_block(s, cap, src=src) for s in range(S)]
         self._g2l = np.stack([b[1] for b in blocks])
         arrays = (
             np.stack([b[2] for b in blocks]),   # l_graph
@@ -310,10 +399,13 @@ class ShardedDescent:
         if g2l.shape[1] < ix.n:  # index crossed a doubling boundary
             g2l = np.pad(g2l, ((0, 0), (0, ix.capacity - g2l.shape[1])),
                          constant_values=PAD_ID)
+        rc = self.plan.resident_configs
         adds: list[set[int]] = [set() for _ in range(S)]
         for u in range(old_n, ix.n):
             adds[u % S].add(u)
         for ci, u in mems:
+            if rc and int(ix.cluster_config[ci]) >= rc:
+                continue  # tiered residency: configuration not resident
             s = int(cluster_shard[ci])
             if g2l[s, u] == PAD_ID:
                 adds[s].add(u)
@@ -339,7 +431,8 @@ class ShardedDescent:
         # a sharded engine); rebuilds and extend_plan refresh it.
         self.plan = ShardPlan(
             n_shards=S, cluster_shard=cluster_shard, residents=residents,
-            owner=owner, imbalance=self.plan.imbalance)
+            owner=owner, imbalance=self.plan.imbalance,
+            version=self.plan.version, resident_configs=rc)
         cap = max(capacity_of(len(r), minimum=64) for r in residents)
         if cap != self.cap:  # doubling boundary: shapes change anyway
             self._materialize()
@@ -396,11 +489,39 @@ class ShardedDescent:
             self._record_remap(old_l2g)
         return "delta"
 
+    def adopt_plan(self, plan: ShardPlan, src=None) -> None:
+        """Blue/green swap: install a freshly derived partition and
+        rebuild every resident tensor in one shot.
+
+        The re-balancer (``query/rebalance.py``) calls this BETWEEN
+        scheduler steps with a fresh :func:`plan_shards` — the one
+        reshard where residency is NOT monotone (rows migrate off
+        shards). ``src`` supplies row content reconstructed by symmetric
+        merge of the old shard subgraphs; None re-scatters from the
+        index (bitwise the same tensors — the merge is audited against
+        the index, see ``merge_subgraph_rows``). In-flight slot beams
+        survive through the recorded old→new local map: rows still
+        resident keep descending under new labels, evicted rows drop to
+        PAD (their sims are masked to NEG_INF when the continuous plan
+        applies the map). The plan, tensors, g2l, and pending remap all
+        move in this one host-side call, so no request ever observes a
+        half-swapped generation.
+        """
+        old_l2g = np.asarray(self._dev[4])
+        self.base_plan = plan
+        self.plan = plan
+        self._materialize(src=src)
+        self._record_remap(old_l2g)
+        self.generation += 1
+
     def _record_remap(self, old_l2g: np.ndarray):
         """Accumulate an old-local → new-local id map after a reshard
-        that may have shifted local ids. Residency is monotone, so every
-        previously-resident row still has a local id — the map is total
-        on live lanes (PAD stays PAD)."""
+        that may have shifted local ids. Under the frozen-base extension
+        residency is monotone, so every previously-resident row still
+        has a local id — the map is total on live lanes (PAD stays
+        PAD). After a re-balance swap (:meth:`adopt_plan`) rows may have
+        left their shard: those lanes map to PAD, and the continuous
+        plan masks their sims out of the beam."""
         S = old_l2g.shape[0]
         rows = np.arange(S)[:, None]
         safe = np.where(old_l2g == PAD_ID, 0, old_l2g)
@@ -417,7 +538,9 @@ class ShardedDescent:
         continuous plan applies it to in-flight per-shard slot beams
         before the next hop — beam *contents* (global identity + sims)
         are unchanged, only their local labels move, so results stay
-        bitwise wave-identical across mid-stream reshards."""
+        bitwise wave-identical across mid-stream reshards. Lanes the map
+        sends to PAD (rows evicted by a re-balance swap) must also have
+        their sims masked to NEG_INF by the consumer."""
         mp, self._beam_remap = self._beam_remap, None
         return mp
 
@@ -471,6 +594,14 @@ class ShardedDescent:
     def shard_beam(self, beam: int, k: int) -> int:
         """Per-shard frontier width for a fleet-level ``beam``."""
         return max(k, int(np.ceil(self.oversample * beam / self.n_shards)))
+
+    def resident_bytes(self) -> list[int]:
+        """Per-shard bytes of RESIDENT rows (adjacency + reverse +
+        fingerprint words + card + l2g + tombstone) — the quantity
+        tiered residency trades recall against (padding to ``cap``
+        excluded: it is shared dead weight, not per-row cost)."""
+        per_row = self.index.row_bytes
+        return [len(r) * per_row for r in self.plan.residents]
 
 
 def g2l_local(g2l_row: np.ndarray, r: int) -> bool:

@@ -1,0 +1,273 @@
+"""Deterministic battery for the background re-balancer
+(query/rebalance.py) and the sharding/bench fixes that ride with it:
+the ``owner ∈ residents`` plan invariant, journal-scoped ``extend_plan``
+membership scans, tiered residency (``resident_configs``), the
+blue/green swap (trigger cadence, cache flush, beam remap math), and
+the query_bench median-row selection fix. The hypothesis interleaving
+battery lives in tests/test_rebalance_properties.py.
+"""
+import copy
+import dataclasses
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import build_index
+from repro.query.rebalance import measured_imbalance
+from repro.query.sharded import ShardedDescent, extend_plan, plan_shards
+from repro.types import PAD_ID
+
+from test_plan import _assert_matches_rebuild  # same-dir test module
+
+K, BEAM, HOPS = 10, 16, 3
+
+
+@pytest.fixture(scope="module")
+def index():
+    ds = make_dataset("synth", scale=0.1, seed=3)
+    return build_index(ds, C2Params(k=10, b=64, t=8, max_cluster=48))
+
+
+@pytest.fixture(scope="module")
+def query_profiles():
+    qds = make_dataset("synth", scale=0.1, seed=77)
+    return [qds.profile(u) for u in range(32)]
+
+
+@pytest.fixture(scope="module")
+def insert_profiles():
+    ids = make_dataset("synth", scale=0.1, seed=99)
+    return [ids.profile(u) for u in range(48)]
+
+
+def _serve(engine, profiles):
+    for rid, p in enumerate(profiles):
+        engine.submit(QueryRequest(rid=rid, profile=p))
+    engine.run()
+    return {r.rid: (np.asarray(r.ids), np.asarray(r.sims))
+            for r in engine.done[-len(profiles):]}
+
+
+def _assert_same(a, b, msg=""):
+    assert set(a) == set(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid][0], b[rid][0],
+                                      err_msg=f"{msg} ids rid={rid}")
+        np.testing.assert_array_equal(a[rid][1], b[rid][1],
+                                      err_msg=f"{msg} sims rid={rid}")
+
+
+# -- owner ∈ residents invariant -------------------------------------------
+
+def test_validate_rejects_owner_outside_residents(index):
+    plan = plan_shards(index, 3)  # derivation validates internally
+    victim = int(np.flatnonzero(plan.owner == 0)[0])
+    res = [r.copy() for r in plan.residents]
+    res[0] = res[0][res[0] != victim]
+    bad = dataclasses.replace(plan, residents=res)
+    with pytest.raises(AssertionError, match="owns users"):
+        bad.validate()
+
+
+def test_unowned_users_are_owned_by_a_hosting_shard(index):
+    """The leftover stride hands residency AND ownership to the same
+    shard — under tiered residency (where most users ride the stride)
+    every owner must still host its user's rows."""
+    for m in (0, 2, 4):
+        plan = plan_shards(index, 3, resident_configs=m)
+        for s in range(3):
+            owned = np.flatnonzero(plan.owner == s)
+            assert np.isin(owned, plan.residents[s]).all(), (m, s)
+        covered = np.zeros(index.n, dtype=bool)
+        for r in plan.residents:
+            covered[r] = True
+        assert covered.all(), f"resident_configs={m} lost coverage"
+
+
+# -- journal-scoped extend_plan --------------------------------------------
+
+def test_extend_plan_scopes_membership_scans(index, insert_profiles,
+                                             monkeypatch):
+    ix = copy.deepcopy(index)
+    eng = QueryEngine(ix, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                      max_wave=8, shards=3,
+                                      refresh_every=10**9))
+    base = eng.sharded_state().base_plan
+    for p in insert_profiles[:6]:
+        eng.insert(p)
+    calls = []
+    orig = ix.cluster_users
+    monkeypatch.setattr(
+        ix, "cluster_users", lambda ci: (calls.append(ci), orig(ci))[1])
+    scoped = extend_plan(base, ix)
+    scoped_calls = len(calls)
+    calls.clear()
+    full = extend_plan(dataclasses.replace(base, version=-1), ix)
+    full_calls = len(calls)
+    # Same plan either way (the scoped scan is an optimization, never a
+    # different answer), but the journal-scoped path only scans clusters
+    # born or membership-touched since the base was derived.
+    np.testing.assert_array_equal(scoped.cluster_shard, full.cluster_shard)
+    np.testing.assert_array_equal(scoped.owner, full.owner)
+    for s, (a, b) in enumerate(zip(scoped.residents, full.residents)):
+        np.testing.assert_array_equal(a, b, err_msg=f"residents shard={s}")
+    assert scoped_calls < full_calls, (scoped_calls, full_calls)
+    assert full_calls >= index.n_clusters  # the O(S·C) scan it replaces
+
+
+# -- tiered residency ------------------------------------------------------
+
+def test_tiered_residency_shrinks_memory(index):
+    full = ShardedDescent(index, 3, use_mesh=False)
+    tier = ShardedDescent(index, 3, use_mesh=False, resident_configs=2)
+    assert tier.plan.resident_configs == 2
+    assert sum(len(r) for r in tier.plan.residents) < \
+        sum(len(r) for r in full.plan.residents)
+    assert sum(tier.resident_bytes()) < sum(full.resident_bytes())
+    # m >= t (or 0) means full residency — identical plans.
+    off = ShardedDescent(index, 3, use_mesh=False,
+                         resident_configs=index.t)
+    assert off.plan.resident_configs == 0
+    for a, b in zip(off.plan.residents, full.plan.residents):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tiered_residency_spec_requires_sharding(index):
+    with pytest.raises(ValueError, match="resident_configs"):
+        QueryEngine(index, QueryConfig(resident_configs=2))
+
+
+def test_tiered_residency_recall_and_delta_sync(index, query_profiles,
+                                                insert_profiles):
+    full_eng = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                              max_wave=32, shards=3))
+    _serve(full_eng, query_profiles)
+    full_recall = full_eng.recall_vs_brute_force()
+
+    ix = copy.deepcopy(index)
+    eng = QueryEngine(ix, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                      max_wave=32, shards=3,
+                                      resident_configs=4,
+                                      refresh_every=10**9))
+    _serve(eng, query_profiles)
+    assert eng.recall_vs_brute_force() >= full_recall - 0.1
+    # Journal-driven delta sync under restricted residency still equals
+    # the from-scratch extend_plan rebuild, bitwise.
+    for p in insert_profiles[:8]:
+        eng.insert(p)
+    _serve(eng, query_profiles)
+    _assert_matches_rebuild(eng)
+
+
+# -- rebalancer trigger / cadence / swap -----------------------------------
+
+def test_rebalance_config_requires_sharding(index):
+    with pytest.raises(ValueError, match="rebalance"):
+        QueryEngine(index, QueryConfig(rebalance_every=4))
+
+
+def test_rebalancer_cadence_and_threshold(index, query_profiles):
+    ix = copy.deepcopy(index)
+    eng = QueryEngine(ix, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                      max_wave=2, shards=2,
+                                      rebalance_every=2,
+                                      rebalance_threshold=10.0))
+    _serve(eng, query_profiles[:8])  # 4 waves -> the cadence fires twice
+    reb = eng.rebalance
+    assert reb.active
+    assert reb.n_checks >= 1
+    assert reb.n_swaps == 0  # threshold unreachable: measure, never swap
+    assert reb.last_imbalance is not None
+    assert measured_imbalance(ix, eng.sharded_state().plan) == \
+        pytest.approx(reb.last_imbalance)
+    gen0 = eng.sharded_state().generation
+    post = reb.check(force=True)  # the swap machinery works regardless
+    assert post is not None and post >= 1.0 - 1e-9
+    assert reb.n_swaps == 1
+    assert eng.sharded_state().generation == gen0 + 1
+    assert "swaps" in reb.stats() and reb.stats()["swaps"] == 1
+
+
+def test_swap_is_invisible_at_fixed_index_state(index, query_profiles):
+    """On an unmutated index a swap re-derives the SAME partition, so
+    serving must be bitwise unchanged — and a cache-on engine must stay
+    bitwise-equal to cache-off across the swap (flushed, not stale)."""
+    on = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                        max_wave=32, shards=2, cache=64,
+                                        rebalance_every=10**9))
+    off = QueryEngine(index, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                         max_wave=32, shards=2,
+                                         rebalance_every=10**9))
+    a0 = _serve(on, query_profiles)
+    b0 = _serve(off, query_profiles)
+    _assert_same(a0, b0, "pre-swap")
+    _serve(on, query_profiles)
+    assert on.plan.cache.hits > 0  # the cache actually served
+    f0 = on.plan.cache.flushes
+    on.rebalance.swap()
+    off.rebalance.swap()
+    assert on.plan.cache.flushes == f0 + 1  # journal-invisible event
+    assert len(on.plan.cache) == 0
+    a1 = _serve(on, query_profiles)
+    b1 = _serve(off, query_profiles)
+    _assert_same(a1, b1, "post-swap cache-on vs cache-off")
+    _assert_same(a1, a0, "same-plan swap must not move results")
+
+
+def test_adopt_plan_records_total_remap(index, insert_profiles):
+    """The old→new local-id map a swap leaves for in-flight beams is
+    exactly new_g2l ∘ old_l2g: still-resident rows get their new local
+    id, evicted rows drop to PAD (the continuous plan masks their sims).
+    """
+    ix = copy.deepcopy(index)
+    eng = QueryEngine(ix, QueryConfig(k=K, beam=BEAM, hops=HOPS,
+                                      max_wave=8, shards=3,
+                                      refresh_every=10**9,
+                                      rebalance_every=10**9))
+    eng.query_batch([insert_profiles[0]])  # builds the sharded state
+    sd = eng.sharded_state()
+    for p in insert_profiles[:10]:
+        eng.insert(p)
+    sd.sync()
+    sd.take_beam_remap()  # drop any pending map from the insert burst
+    old_l2g = np.asarray(sd._dev[4]).copy()
+    eng.rebalance.swap()
+    mp = sd.take_beam_remap()
+    assert mp is not None and mp.shape == old_l2g.shape
+    for s in range(sd.n_shards):
+        safe = np.where(old_l2g[s] == PAD_ID, 0, old_l2g[s])
+        want = np.where(old_l2g[s] == PAD_ID, PAD_ID, sd._g2l[s][safe])
+        np.testing.assert_array_equal(mp[s], want, err_msg=f"shard={s}")
+    assert sd.take_beam_remap() is None  # consumed
+
+
+# -- query_bench median-row fix --------------------------------------------
+
+def test_median_row_reports_one_coherent_rep():
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                           / "benchmarks"))
+    try:
+        from query_bench import median_row
+    finally:
+        sys.path.pop(0)
+    rows = [
+        {"rate_qps": 10.0, "achieved_qps": 9.0, "p50_latency_ms": 5.0,
+         "p95_latency_ms": 50.0, "max_latency_ms": 60.0},
+        {"rate_qps": 10.0, "achieved_qps": 7.0, "p50_latency_ms": 1.0,
+         "p95_latency_ms": 20.0, "max_latency_ms": 30.0},
+        {"rate_qps": 10.0, "achieved_qps": 8.0, "p50_latency_ms": 9.0,
+         "p95_latency_ms": 40.0, "max_latency_ms": 45.0},
+    ]
+    out = median_row(rows)
+    # The rep with the median p95 (40.0) is reported WHOLE. The old
+    # per-key median would have stitched p50=5.0 (rep 0) onto p95=40.0
+    # (rep 2) — a row no rep measured.
+    assert out == {"rate_qps": 10.0, "achieved_qps": 8.0,
+                   "p50_latency_ms": 9.0, "p95_latency_ms": 40.0,
+                   "max_latency_ms": 45.0,
+                   "p95_latency_ms_reps": [50.0, 20.0, 40.0]}

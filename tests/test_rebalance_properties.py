@@ -1,0 +1,200 @@
+"""Hypothesis battery for the blue/green re-balance swap: across ANY
+interleaving of insert / delete / cohort-flush / query with swaps mixed
+in, (a) the final device state is bitwise-equal to a from-scratch
+rebuild of the current plan, (b) a merge-based swap (symmetric merge of
+the old shard subgraphs) equals a re-scatter swap bitwise — tensors AND
+every query answered along the way, (c) a cache-on engine stays
+bitwise-equal to cache-off (no pre-swap entry is ever served), and
+(d) mid-flight swaps under continuous serving are invisible on an
+unmutated index (the same-plan swap is a results no-op even for
+in-flight slot beams). tests/test_rebalance.py carries the
+deterministic battery."""
+import copy
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # [test] extra; skip, don't break collection
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.rebalance import RebalanceConfig, Rebalancer
+
+from test_plan import _assert_matches_rebuild  # same-dir test module
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    from repro.query.index import build_index
+
+    ds = make_dataset("synth", scale=0.05, seed=5)
+    return build_index(ds, C2Params(k=8, b=64, t=4, max_cluster=32))
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    qds = make_dataset("synth", scale=0.05, seed=7)
+    return [qds.profile(u) for u in range(24)]
+
+
+OPS = ["insert", "delete", "flush", "query", "swap"]
+
+
+def _drive(eng, reb, ops, profiles, out=None):
+    """Apply one op sequence; deletes draw from a fixed-seed stream so
+    two engines fed the same ``ops`` see identical mutations."""
+    rng = np.random.default_rng(11)
+    n_ins = 0
+    for op in ops:
+        if op == "insert":
+            eng.insert(profiles[8 + (n_ins % 16)])
+            n_ins += 1
+        elif op == "delete":
+            alive = eng.index.alive_ids()
+            if len(alive) > 8:
+                eng.remove_user(int(alive[rng.integers(len(alive))]))
+        elif op == "flush":
+            eng.flush_cohort()
+        elif op == "query":
+            ids, sims = eng.query_batch(profiles[:4])
+            if out is not None:
+                out.append((np.asarray(ids), np.asarray(sims)))
+        else:
+            reb.swap()
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(ops=st.lists(st.sampled_from(OPS), min_size=2, max_size=10),
+       n_shards=st.integers(min_value=2, max_value=3))
+def test_any_interleaving_with_swaps_matches_rebuild(small_index, profiles,
+                                                     ops, n_shards):
+    """After any op sequence containing swaps, the delta-maintained
+    device state equals a from-scratch materialization of the extended
+    current base plan — the swap resets the frozen base, it never
+    corrupts the sync discipline."""
+    ix = copy.deepcopy(small_index)
+    eng = QueryEngine(ix, QueryConfig(k=8, beam=12, hops=2,
+                                      shards=n_shards,
+                                      refresh_every=10**9,
+                                      rebalance_every=10**9))
+    eng.query_batch(profiles[:4])  # freeze the initial base plan
+    _drive(eng, eng.rebalance, ops, profiles)
+    _assert_matches_rebuild(eng)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(ops=st.lists(st.sampled_from(OPS), min_size=2, max_size=10),
+       n_shards=st.integers(min_value=2, max_value=3))
+def test_merge_swap_equals_rescatter_swap(small_index, profiles, ops,
+                                          n_shards):
+    """The symmetric-merge rebuild (rows united from the old shard
+    subgraphs + audit patch) and the plain index re-scatter produce
+    bitwise-identical shard tensors and answers, whatever churn preceded
+    the swap."""
+    results = {}
+    states = {}
+    for merge in (True, False):
+        ix = copy.deepcopy(small_index)
+        eng = QueryEngine(ix, QueryConfig(k=8, beam=12, hops=2,
+                                          shards=n_shards,
+                                          refresh_every=10**9))
+        reb = Rebalancer(eng.plan, RebalanceConfig(every=10**9,
+                                                   merge=merge))
+        out = []
+        eng.query_batch(profiles[:4])
+        _drive(eng, reb, ops, profiles, out=out)
+        sd = eng.sharded_state()  # syncs trailing mutations
+        results[merge] = out
+        states[merge] = (np.asarray(sd._g2l).copy(),
+                         tuple(np.asarray(a).copy() for a in sd._dev))
+    assert len(results[True]) == len(results[False])
+    for i, (a, b) in enumerate(zip(results[True], results[False])):
+        np.testing.assert_array_equal(a[0], b[0], err_msg=f"ids query {i}")
+        np.testing.assert_array_equal(a[1], b[1], err_msg=f"sims query {i}")
+    np.testing.assert_array_equal(states[True][0], states[False][0])
+    names = ("l_graph", "l_rev", "l_words", "l_card", "l2g", "l_tomb")
+    for a, b, name in zip(states[True][1], states[False][1], names):
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(ops=st.lists(st.sampled_from(OPS), min_size=2, max_size=10))
+def test_cache_transparent_across_swaps(small_index, profiles, ops):
+    """Cache-on == cache-off bitwise across any interleaving of churn
+    and swaps; repeated queries force the cache to actually serve, and
+    a swap must flush it (pre-swap placement results are stale even
+    though no journal records the event)."""
+    outs = {}
+    for cap in (0, 64):
+        ix = copy.deepcopy(small_index)
+        eng = QueryEngine(ix, QueryConfig(k=8, beam=12, hops=2, shards=2,
+                                          refresh_every=10**9, cache=cap,
+                                          rebalance_every=10**9))
+        out = []
+        eng.query_batch(profiles[:4])
+        _drive(eng, eng.rebalance, ops, profiles, out=out)
+        # Repeat the same wave twice: with a cache the second pass is
+        # served from entries written by the first — which must reflect
+        # the CURRENT placement, not any pre-swap one.
+        for _ in range(2):
+            ids, sims = eng.query_batch(profiles[:4])
+            out.append((np.asarray(ids), np.asarray(sims)))
+        outs[cap] = out
+        if cap and not any(op in ("insert", "delete", "flush", "swap")
+                           for op in ops[-1:]):
+            pass  # hit-rate assertions live in the deterministic battery
+    assert len(outs[0]) == len(outs[64])
+    for i, (a, b) in enumerate(zip(outs[0], outs[64])):
+        np.testing.assert_array_equal(a[0], b[0], err_msg=f"ids query {i}")
+        np.testing.assert_array_equal(a[1], b[1], err_msg=f"sims query {i}")
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(swap_ticks=st.sets(st.integers(min_value=1, max_value=8),
+                          min_size=1, max_size=3))
+def test_mid_flight_swaps_are_invisible_on_fixed_index(small_index,
+                                                       profiles,
+                                                       swap_ticks):
+    """Continuous serving with swaps fired BETWEEN ticks while slots are
+    in flight: on an unmutated index the re-derived plan is identical,
+    so the blue/green swap (tensor rebuild + in-flight beam remap) must
+    be bitwise invisible — every request completes with exactly the
+    results of an engine that never swapped, and the cache flushes once
+    per swap (no half-swapped generation is ever observed)."""
+    ix = copy.deepcopy(small_index)
+    eng = QueryEngine(ix, QueryConfig(k=8, beam=12, hops=2, shards=2,
+                                      continuous=True, slots=5, cache=16,
+                                      rebalance_every=10**9))
+    ref = QueryEngine(small_index, QueryConfig(k=8, beam=12, hops=2,
+                                               shards=2, continuous=True,
+                                               slots=5))
+    fired = []
+
+    def do_swap(engine, tick):
+        if tick in swap_ticks:
+            engine.rebalance.swap()
+            fired.append(engine.sharded_state().generation)
+
+    for rid, p in enumerate(profiles):
+        eng.submit(QueryRequest(rid=rid, profile=p))
+        ref.submit(QueryRequest(rid=rid, profile=p))
+    stats = eng.run(on_tick=do_swap)
+    ref.run()
+    assert stats["requests"] == len(profiles)
+    assert fired == list(range(1, len(fired) + 1))  # one generation per swap
+    assert eng.plan.cache.flushes == len(fired)
+    got = {r.rid: r for r in eng.done}
+    want = {r.rid: r for r in ref.done}
+    assert set(got) == set(want)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid].ids, want[rid].ids,
+                                      err_msg=f"ids rid={rid}")
+        np.testing.assert_array_equal(got[rid].sims, want[rid].sims,
+                                      err_msg=f"sims rid={rid}")
