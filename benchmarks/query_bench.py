@@ -31,6 +31,12 @@ forced blue/green swap checks (merge rebuild bitwise vs from-scratch,
 cache flush, recall across the swap), and the tiered-residency sweep
 (``resident_configs`` subset size vs recall vs per-shard resident
 bytes).
+``--faults`` adds the fault-tolerance rows: kill 1 of N shards
+mid-open-loop (every request still answered, degraded answers stamped
+and their recall priced, health-machine walk to a failover rebuild,
+post-recovery wave bitwise vs pre-failure) and a crash between
+scheduler steps recovered from snapshot + write-ahead-log replay,
+gated bitwise — tensors and answers — against a never-crashed mirror.
 ``--smoke`` shrinks the workload for CI: it still exercises build,
 every serving plan, and insertion, and fails loudly (exit 1) if the
 sharded mode regresses against single-device beyond the allowed
@@ -139,7 +145,8 @@ def median_row(rows: list) -> dict:
 
 def open_loop(engine: QueryEngine, profiles, rate_qps: float,
               budgets=None, seed: int = 0, stall_s: float = 60.0,
-              priorities=None, deadline_ms: float = 0.0) -> dict:
+              priorities=None, deadline_ms: float = 0.0,
+              clock=None) -> dict:
     """Poisson-arrival open-loop serving through ``engine.step()``.
 
     Requests are submitted at their arrival times (exponential
@@ -159,7 +166,15 @@ def open_loop(engine: QueryEngine, profiles, rate_qps: float,
     guard therefore watches completions of EITHER kind — it fires only
     when the engine stops completing work for ``stall_s`` seconds,
     which is a serving bug, never a load response.
+
+    ``clock`` (optional, default ``time.perf_counter``) makes the loop
+    time-source injectable: pass a ``repro.sched.ManualClock`` and the
+    run advances virtual time only through the idle-sleep path (the
+    clock's ``sleep`` doubles as ``advance``), so tests drive the whole
+    open loop without a single real ``time.sleep``.
     """
+    clock = clock or time.perf_counter
+    sleep = getattr(clock, "sleep", time.sleep)
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_qps,
                                          size=len(profiles)))
@@ -172,11 +187,11 @@ def open_loop(engine: QueryEngine, profiles, rate_qps: float,
     sched = engine.plan.scheduler
     n_steps = 0
     max_depth = 0
-    t0 = time.perf_counter()
+    t0 = clock()
     t_progress = t0
     i = 0
     while len(engine.done) - n_done0 < len(reqs):
-        now = time.perf_counter() - t0
+        now = clock() - t0
         while i < len(reqs) and arrivals[i] <= now:
             req = reqs[i]
             # Latency counts from the ARRIVAL time, not from when the
@@ -192,12 +207,12 @@ def open_loop(engine: QueryEngine, profiles, rate_qps: float,
         max_depth = max(max_depth, depth)
         if engine.busy():
             if engine.step():
-                t_progress = time.perf_counter()
+                t_progress = clock()
             n_steps += 1
         elif i < len(reqs):  # idle: sleep to the next arrival
-            t_progress = time.perf_counter()
-            time.sleep(max(min(arrivals[i] - now, 0.01), 0.0))
-        if time.perf_counter() - t_progress > stall_s:
+            t_progress = clock()
+            sleep(max(min(arrivals[i] - now, 0.01), 0.0))
+        if clock() - t_progress > stall_s:
             part = engine.done[n_done0:]
             n_srv = sum(1 for r in part if r.status == "done")
             n_shd = sum(1 for r in part if r.rejected)
@@ -208,7 +223,7 @@ def open_loop(engine: QueryEngine, profiles, rate_qps: float,
                 f"{stall_s:.0f}s. Shedding counts as progress here, so "
                 f"this is a serving bug, not admission-control load "
                 f"response.")
-    dt = max(time.perf_counter() - t0, 1e-9)
+    dt = max(clock() - t0, 1e-9)
     finished = engine.done[n_done0:]
     served = [r for r in finished if r.status == "done"]
     n_shed = len(finished) - len(served)
@@ -813,6 +828,140 @@ def run_residency_sweep(index, profiles, k: int, beam: int, hops: int,
     return {"t": t, "shards": shards, "rows": rows}
 
 
+def run_faults(index0, profiles, k: int, beam: int, hops: int,
+               insert_pool, seed: int = 0, shards: int = 2) -> dict:
+    """Fault-tolerance rows, both CI-gated.
+
+    (a) kill 1 of ``shards`` mid-open-loop: the surviving fleet must
+    keep answering EVERY request (degraded answers stamped, their
+    recall priced against brute force), walk the dead shard through
+    the health machine (suspect -> backoff re-probes -> dead), rebuild
+    it from survivors + index via the merge path, blue/green-swap the
+    plan back in, and then serve a wave BITWISE equal to the
+    pre-failure wave — fail-and-recover must be invisible after the
+    fact (nothing mutated the index, so any drift is a failover bug).
+
+    (b) crash between scheduler steps mid-mutation-stream: recovery
+    from the latest snapshot + write-ahead-log replay must land an
+    engine whose index tensors AND served answers are bitwise what a
+    never-crashed mirror (driven through the identical mutations,
+    including the step the crash pre-empted) holds.
+    """
+    import copy
+    import shutil
+    import tempfile
+
+    from repro.faults import (CrashStore, EngineCrash, FaultInjector,
+                              FaultPlan, HealthConfig)
+    from repro.query.index import _ROWS
+    from repro.sched import ManualClock
+
+    def wave(eng, ps):
+        base = len(eng.done)
+        for rid, p in enumerate(ps):
+            eng.submit(QueryRequest(rid=rid, profile=p))
+        eng.run()
+        part = eng.done[base:]
+        return ({r.rid: (np.asarray(r.ids), np.asarray(r.sims))
+                 for r in part},
+                round(eng.recall_vs_brute_force(part), 4))
+
+    def same(a, b):
+        return set(a) == set(b) and all(
+            np.array_equal(a[r][0], b[r][0])
+            and np.array_equal(a[r][1], b[r][1]) for r in a)
+
+    # -- (a) kill/failover under an open-loop stream ------------------
+    # The injector starts DISARMED so the pre-failure wave measures the
+    # healthy fleet; arm() restarts its step count, so the kill lands
+    # on the 3rd serving step of the open loop — mid-stream.
+    inj = FaultInjector(FaultPlan.parse("kill:1@2"), armed=False,
+                        health=HealthConfig(max_retries=2, backoff_cap=2,
+                                            recover_after=6))
+    eng = QueryEngine(copy.deepcopy(index0), QueryConfig(
+        k=k, beam=beam, hops=hops, shards=shards, continuous=True,
+        slots=8, max_wave=len(profiles)), faults=inj)
+    pre, pre_recall = wave(eng, profiles)
+    inj.arm()
+    n_done0 = len(eng.done)
+    row = open_loop(eng, profiles, rate_qps=64.0, seed=seed + 21,
+                    stall_s=120.0)
+    finished = eng.done[n_done0:]
+    deg = [r for r in finished if r.status == "done" and r.degraded]
+    # Idle steps walk the health machine the rest of the way to the
+    # failover swap if the open loop drained before it fired.
+    idle = 0
+    while (eng.degraded or eng.failover.n_failovers == 0) and idle < 200:
+        eng.step()
+        idle += 1
+    post, post_recall = wave(eng, profiles)
+    kill_row = {
+        "submitted": len(profiles),
+        "served": row["served"],
+        "shed": row["shed"],
+        "degraded_served": len(deg),
+        "degraded_recall": (round(eng.recall_vs_brute_force(deg), 4)
+                            if deg else None),
+        "failovers": int(eng.failover.n_failovers),
+        "recovery_steps": eng.failover.recovery_steps,
+        "idle_steps_to_recover": idle,
+        "health": list(eng.failover.health.state),
+        "recall_pre_failure": pre_recall,
+        "recall_post_recovery": post_recall,
+        "post_recovery_bitwise": bool(same(pre, post)),
+        "open_loop": {key: row[key] for key in
+                      ("achieved_qps", "p50_latency_ms", "p95_latency_ms",
+                       "max_queue_depth")},
+        "injector": eng.faults.stats(),
+    }
+
+    # -- (b) crash + snapshot/WAL recovery ----------------------------
+    tmp = tempfile.mkdtemp(prefix="query_bench_faults_")
+    qc = QueryConfig(k=k, beam=beam, hops=hops, shards=shards,
+                     max_wave=16, refresh_every=6)
+    store = CrashStore(tmp, every=3)
+    ceng = QueryEngine(copy.deepcopy(index0), qc, clock=ManualClock(),
+                       faults=FaultInjector(FaultPlan.parse("crash@5")),
+                       store=store)
+    mirror = QueryEngine(copy.deepcopy(index0), qc, clock=ManualClock())
+    crashed = False
+    for t in range(10):
+        for e in (ceng, mirror):
+            e.insert(insert_pool[t])
+            if t % 3 == 2:
+                e.remove_user(10 * t)
+        try:
+            ceng.step()
+        except EngineCrash:
+            crashed = True
+            break
+        mirror.step()
+    if crashed:
+        mirror.step()  # the mirror runs the step the crash pre-empted
+    wal_at_crash = int(store.wal.n_records)
+    rec_eng = QueryEngine.recover(tmp, qc, clock=ManualClock())
+    rows_ok = all(np.array_equal(getattr(rec_eng.index, name),
+                                 getattr(mirror.index, name))
+                  for name in _ROWS)
+    probe = profiles[:16]
+    a, recall_rec = wave(rec_eng, probe)
+    b, _ = wave(mirror, probe)
+    crash_row = {
+        "crashed": bool(crashed),
+        "crash_step": 5,
+        "snapshot_every": 3,
+        "snapshots": int(store.n_snapshots),
+        "wal_records_at_crash": wal_at_crash,
+        "rows_bitwise": bool(rows_ok),
+        "answers_bitwise": bool(same(a, b)),
+        "recovered_version": int(rec_eng.index.version),
+        "recall_after_recovery": recall_rec,
+    }
+    shutil.rmtree(tmp, ignore_errors=True)
+    return {"shards": shards, "kill_failover": kill_row,
+            "crash_recovery": crash_row}
+
+
 def descent_scoring_stats(index, profiles, k: int, beam: int, hops: int,
                           seeds_per_config: int = 16) -> dict:
     """Per-hop scored-candidate counts through the fused kernel on the
@@ -848,7 +997,7 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
         shards: int = 2, oversample: float = 1.25,
         continuous: bool = False, slots: int = 32,
         churn: bool = False, overload: bool = False,
-        rebalance: bool = False) -> dict:
+        rebalance: bool = False, faults: bool = False) -> dict:
     if shards < 2:
         raise SystemExit("query_bench compares sharded vs single-device "
                          "serving; --shards must be >= 2")
@@ -944,6 +1093,16 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
                                             hops, shards,
                                             oversample=oversample)
 
+    # Fault-tolerance arms run on private deepcopies (and the crash arm
+    # in a throwaway store dir), so they too run BEFORE the insert
+    # benchmark mutates the shared index.
+    faults_rec = None
+    if faults:
+        f_ds = make_dataset(dataset, scale=scale, seed=seed + 4)
+        f_pool = [f_ds.profile(u) for u in range(min(12, f_ds.n_users))]
+        faults_rec = run_faults(index, profiles, k, beam, hops, f_pool,
+                                seed=seed, shards=shards)
+
     # Online insertion through the amortized-growth path (single engine;
     # the index is shared, so the sharded engine reshards lazily).
     t0 = time.perf_counter()
@@ -996,6 +1155,7 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
            else {}),
         **({"residency_sweep": residency_rec} if residency_rec is not None
            else {}),
+        **({"faults": faults_rec} if faults_rec is not None else {}),
     }
 
 
@@ -1029,6 +1189,12 @@ def main():
                          "vs rebalanced imbalance under skewed insert "
                          "growth, forced blue/green swap checks, and "
                          "the tiered-residency sweep")
+    ap.add_argument("--faults", action="store_true",
+                    help="add fault-tolerance rows: kill 1 shard mid-"
+                         "open-loop (keeps answering, degraded recall "
+                         "priced, failover rebuild, post-recovery "
+                         "bitwise) and crash + snapshot/WAL-replay "
+                         "bitwise recovery")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI run; exit 1 on sharded regression")
     ap.add_argument("--out", default="BENCH_query.json")
@@ -1041,7 +1207,7 @@ def main():
               args.hops, shards=args.shards, oversample=args.oversample,
               continuous=args.continuous, slots=args.slots,
               churn=args.churn, overload=args.overload,
-              rebalance=args.rebalance)
+              rebalance=args.rebalance, faults=args.faults)
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(json.dumps(rec, indent=2))
     print(f"[query_bench] wrote {args.out}")
@@ -1244,6 +1410,53 @@ def main():
                   f"{fs['recall_delta']} merge_coverage="
                   f"{fs['merge']['merge_coverage']} rebalanced_final={fin} "
                   f"frozen_final={rb['frozen']['final_imbalance']}")
+        if args.faults:
+            # Kill-recover gate: killing 1 of N shards mid-open-loop
+            # must never drop a request, degraded answers must stay
+            # useful (bounded recall, not zero — survivors still own
+            # their basins), the failover must actually fire, and the
+            # recovered fleet must answer BITWISE what the pre-failure
+            # fleet answered (no mutations happened, so any drift is a
+            # rebuild/swap bug).
+            kf = rec["faults"]["kill_failover"]
+            if kf["served"] != kf["submitted"] or kf["shed"] != 0:
+                print(f"[query_bench] FAIL faults: dropped requests under "
+                      f"shard kill: served={kf['served']}/"
+                      f"{kf['submitted']} shed={kf['shed']}",
+                      file=sys.stderr)
+                sys.exit(1)
+            if kf["degraded_served"] == 0:
+                print("[query_bench] FAIL faults: kill window served no "
+                      "degraded requests (injection did not land)",
+                      file=sys.stderr)
+                sys.exit(1)
+            if kf["degraded_recall"] is None or kf["degraded_recall"] < 0.2:
+                print(f"[query_bench] FAIL faults: degraded recall "
+                      f"collapsed: {kf['degraded_recall']}",
+                      file=sys.stderr)
+                sys.exit(1)
+            if kf["failovers"] < 1 or not kf["post_recovery_bitwise"]:
+                print(f"[query_bench] FAIL faults: failover did not "
+                      f"restore the fleet: failovers={kf['failovers']} "
+                      f"post_recovery_bitwise="
+                      f"{kf['post_recovery_bitwise']}", file=sys.stderr)
+                sys.exit(1)
+            # Crash-consistency gate: snapshot + WAL replay must be
+            # bitwise — tensors AND answers — against the never-crashed
+            # mirror.
+            cr = rec["faults"]["crash_recovery"]
+            if not (cr["crashed"] and cr["rows_bitwise"]
+                    and cr["answers_bitwise"]):
+                print(f"[query_bench] FAIL faults: crash recovery not "
+                      f"bitwise: {cr}", file=sys.stderr)
+                sys.exit(1)
+            print(f"[query_bench] faults smoke OK: "
+                  f"degraded_served={kf['degraded_served']} "
+                  f"degraded_recall={kf['degraded_recall']} "
+                  f"failovers={kf['failovers']} post_recovery=bitwise "
+                  f"crash_recovery=bitwise "
+                  f"(snapshots={cr['snapshots']}, "
+                  f"wal_records={cr['wal_records_at_crash']})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""Fault injection, degraded serving, failover, and crash recovery.
+
+Submodules (importable individually to keep import graphs shallow):
+
+* ``plan``     — :class:`FaultPlan` / :class:`FaultInjector` /
+  :class:`EngineCrash`: seeded, scheduled faults at the plan-step
+  boundary (``kill:S@T``, ``fail:S@T+D``, ``slow:S@T+D:MS``,
+  ``crash@T``).
+* ``health``   — per-shard health state machine (healthy → suspect →
+  dead → recovering) with capped exponential-backoff probing.
+* ``failover`` — :class:`FailoverManager`: masks dead shards out of
+  serving, rebuilds their tensors from survivors, blue/green-swaps.
+* ``wal``      — :class:`WriteAheadLog` / :class:`CrashStore`: snapshot
+  + journal replay, bitwise crash recovery.
+"""
+from repro.faults.failover import FailoverManager
+from repro.faults.health import (DEAD, HEALTHY, RECOVERING, SUSPECT,
+                                 FleetHealth, HealthConfig)
+from repro.faults.plan import (EngineCrash, FaultEvent, FaultInjector,
+                               FaultPlan)
+from repro.faults.wal import CrashStore, WriteAheadLog, replay
+
+__all__ = [
+    "EngineCrash", "FaultEvent", "FaultPlan", "FaultInjector",
+    "HEALTHY", "SUSPECT", "DEAD", "RECOVERING",
+    "HealthConfig", "FleetHealth", "FailoverManager",
+    "WriteAheadLog", "CrashStore", "replay",
+]

@@ -1,0 +1,132 @@
+"""Degraded-mode serving + failover rebuild for the sharded placement.
+
+One manager per engine glues three mechanisms together around the
+scheduler-step boundary:
+
+* **Detection** (:meth:`FailoverManager.observe`, BEFORE the plan
+  step) — asks the injector which shards are down this step, feeds the
+  per-shard health machine (healthy → suspect → dead, with capped
+  exponential-backoff probing — see repro/faults/health.py), and masks
+  every non-healthy shard out of serving: its owned seeds are dropped
+  (``ShardedDescent.set_dead``), its merge contribution is wiped, and
+  its in-flight continuous beams are cleared
+  (``DescentPlan.mask_shard_slots``) so survivors keep answering with a
+  bounded recall loss instead of the fleet stalling.
+* **Recovery** (:meth:`FailoverManager.maintain`, AFTER lifecycle and
+  re-balance maintenance) — once a dead shard's ``recover_after`` dwell
+  elapses, its resident tensors are rebuilt from the SURVIVORS'
+  subgraphs via :func:`~repro.query.rebalance.merge_subgraph_rows`
+  with the unhealthy set excluded (rows resident only on dead shards
+  are patched from the index), a fresh ``plan_shards`` partition is
+  derived, and :meth:`ShardedDescent.adopt_plan` blue/green-swaps it in
+  between compiled programs — beams remapped, result cache flushed via
+  ``note_replan`` exactly like a re-balance swap.
+* **Isolation** — while any shard is unhealthy the re-balancer defers
+  (``Rebalancer.check`` sees ``sd.dead``) and lifecycle maintenance is
+  skipped by the engine: neither may bake degraded descent results or a
+  dead shard's stale tensors into the graph.
+
+Single-device placements have no shards to fail: the manager stays
+inert (``active`` False) and every hook is a no-op.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.faults.health import FleetHealth, HealthConfig
+from repro.query.rebalance import merge_subgraph_rows
+from repro.query.sharded import plan_shards
+
+
+class FailoverManager:
+    """Owns fleet health + the recovery rebuild for one DescentPlan."""
+
+    def __init__(self, plan, injector, cfg: HealthConfig | None = None):
+        self.plan = plan
+        self.injector = injector
+        cfg = cfg or getattr(injector, "health", None) or HealthConfig()
+        self.cfg = cfg
+        self.health = (FleetHealth(plan.spec.placement, cfg)
+                       if plan.spec.placement > 1 else None)
+        self.n_failovers = 0
+        self.recovery_steps: list[int] = []
+        self.last_merge_stats: dict = {}
+
+    @property
+    def active(self) -> bool:
+        return self.health is not None
+
+    @property
+    def degraded(self) -> bool:
+        """True while any shard is masked out of serving."""
+        return self.active and bool(self.health.serving_mask().any())
+
+    # -- before the plan step ---------------------------------------------
+
+    def observe(self):
+        """Probe the injector, advance health, mask unhealthy shards."""
+        if not self.active:
+            return
+        h = self.health
+        down = np.array([self.injector.shard_down(s)
+                         for s in range(h.n_shards)], dtype=bool)
+        h.observe(down)
+        mask = h.serving_mask()
+        sd = self.plan.sharded_state()
+        if not np.array_equal(mask, sd.dead):
+            newly = mask & ~sd.dead
+            sd.set_dead(mask)
+            if newly.any():
+                # Wipe the downed shards' in-flight beams NOW — their
+                # candidates came from tensors we no longer trust.
+                self.plan.mask_shard_slots(newly)
+
+    # -- after lifecycle / rebalance maintenance --------------------------
+
+    def maintain(self):
+        """Rebuild + swap for shards whose recovery dwell elapsed."""
+        if not self.active:
+            return None
+        h = self.health
+        ready = h.ready_for_recovery()
+        if not ready:
+            return None
+        for s in ready:
+            h.mark_recovering(s)
+        sd = self.plan.sharded_state()
+        spec = self.plan.spec
+        # Rebuild reads SURVIVORS only: every non-healthy shard (the
+        # recovering ones included — their tensors are the stale state
+        # we are replacing) is excluded from the merge.
+        exclude = np.flatnonzero(h.serving_mask())
+        src, self.last_merge_stats = merge_subgraph_rows(
+            sd, exclude=exclude)
+        new_plan = plan_shards(sd.index, spec.placement,
+                               resident_configs=spec.resident_configs)
+        sd.adopt_plan(new_plan, src=src)   # resets sd.dead to all-False
+        self.plan.note_replan()            # placement changed: flush cache
+        for s in ready:
+            self.injector.clear_shard(s)
+            self.recovery_steps.append(int(h.step - h.dead_since[s]))
+            h.mark_healthy(s)
+        self.n_failovers += 1
+        # Shards STILL unhealthy after this swap (e.g. a second failure
+        # overlapping the first's recovery) must stay masked in the new
+        # generation.
+        mask = h.serving_mask()
+        if mask.any():
+            sd.set_dead(mask)
+            self.plan.mask_shard_slots(mask)
+        return self.last_merge_stats
+
+    def stats(self) -> dict:
+        out = {
+            "active": self.active,
+            "failovers": self.n_failovers,
+            "recovery_steps": list(self.recovery_steps),
+        }
+        if self.active:
+            out.update(self.health.stats())
+        if self.last_merge_stats:
+            out["merge"] = dict(self.last_merge_stats)
+        return out

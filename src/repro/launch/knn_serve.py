@@ -46,6 +46,16 @@ beams remapped, result cache flushed); ``--resident-configs M``
 restricts shard residency to clusters of the first M hash
 configurations (tiered residency: ~t/M per-shard memory for a small
 recall cost; routing still sees every cluster).
+
+Fault-tolerance flags (``repro/faults/``): ``--fault-plan SPEC``
+schedules deterministic faults at the plan-step boundary
+(``kill:S@T``, ``fail:S@T+D``, ``slow:S@T+D:MS``, ``crash@T`` —
+separated by ``;``); killed shards are masked out and served around
+(degraded recall reported), then rebuilt from survivors and swapped
+back in. ``--store DIR --snapshot-every N`` persists periodic index
+snapshots plus a write-ahead journal of every mutation;
+``--recover DIR`` skips the build entirely and restores the engine —
+bitwise — from the last snapshot + WAL replay.
 """
 from __future__ import annotations
 
@@ -56,6 +66,7 @@ import numpy as np
 
 from repro.core.params import params_for
 from repro.data.synthetic import make_dataset
+from repro.faults.plan import EngineCrash
 from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
 from repro.query.index import KNNIndex, build_index
 
@@ -122,10 +133,52 @@ def main(argv=None):
                     help="tiered residency: only clusters of the first "
                          "M hash configurations contribute shard "
                          "residents (0 = all t; needs --shards)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault schedule: kill:S@T, "
+                         "fail:S@T+D, slow:S@T+D:MS, crash@T "
+                         "(';'-separated; steps count scheduler steps)")
+    ap.add_argument("--store", default=None,
+                    help="crash-store directory: snapshots + write-"
+                         "ahead journal of every index mutation")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot cadence in scheduler steps (journal "
+                         "compaction; 0 = snapshot only at startup)")
+    ap.add_argument("--recover", default=None,
+                    help="recover the engine from this crash-store "
+                         "directory (skips the build; last snapshot + "
+                         "WAL replay, bitwise)")
     ap.add_argument("--index", default=None, help="load a saved index")
     ap.add_argument("--save-index", default=None, help="save the built index")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    faults = None
+    if args.fault_plan:
+        from repro.faults import FaultInjector, FaultPlan
+        faults = FaultInjector(FaultPlan.parse(args.fault_plan))
+        print(f"[serve] fault plan: {faults.plan.describe()}")
+    store = None
+    if args.store:
+        from repro.faults import CrashStore
+        store = CrashStore(args.store, every=args.snapshot_every)
+
+    qc = QueryConfig(
+        k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
+        shards=args.shards, continuous=args.continuous, slots=args.slots,
+        kernel=args.kernel, ttl=args.ttl, repair_every=args.repair_every,
+        admission=args.admission, max_pending=args.max_pending,
+        adaptive=args.adaptive, cache=args.cache,
+        resident_configs=args.resident_configs,
+        rebalance_every=args.rebalance_every,
+        rebalance_threshold=args.rebalance_threshold)
+
+    if args.recover:
+        engine = QueryEngine.recover(args.recover, qc, faults=faults,
+                                     store=store)
+        index = engine.index
+        print(f"[serve] recovered from {args.recover}: {index.n} users, "
+              f"{index.n_clusters} clusters, version {index.version}")
+        return _serve(args, engine, index)
 
     if args.index:
         index = KNNIndex.load(args.index)
@@ -145,15 +198,11 @@ def main(argv=None):
         index.save(args.save_index)
         print(f"[serve] index saved to {args.save_index}")
 
-    engine = QueryEngine(index, QueryConfig(
-        k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
-        shards=args.shards, continuous=args.continuous, slots=args.slots,
-        kernel=args.kernel, ttl=args.ttl, repair_every=args.repair_every,
-        admission=args.admission, max_pending=args.max_pending,
-        adaptive=args.adaptive, cache=args.cache,
-        resident_configs=args.resident_configs,
-        rebalance_every=args.rebalance_every,
-        rebalance_threshold=args.rebalance_threshold))
+    engine = QueryEngine(index, qc, faults=faults, store=store)
+    return _serve(args, engine, index)
+
+
+def _serve(args, engine, index):
     print(f"[serve] plan: {engine.plan.describe()}")
 
     # Unseen profiles from the same distribution (different seed).
@@ -214,7 +263,17 @@ def main(argv=None):
         engine.submit(QueryRequest(
             rid=rid, profile=p,
             priority=0 if rid < n_high else 1, deadline=deadline))
-    stats = engine.run()
+    try:
+        stats = engine.run()
+    except EngineCrash as e:
+        # The injected crash lands between scheduler steps: every
+        # mutation is journaled, in-flight requests are lost (clients
+        # retry). Report what was durable and exit like a real death.
+        print(f"[serve] CRASHED: {e}")
+        if engine.store is not None:
+            print(f"[serve] recover with: --recover {args.store}  "
+                  f"(store: {engine.store.stats()})")
+        return {"requests": 0, "crashed": True}, 0.0
     recall = engine.recall_vs_brute_force()
     unit = "ticks" if args.continuous else "waves"
     print(f"[serve] {stats['requests']} queries in {stats['waves']} {unit} "
@@ -234,6 +293,24 @@ def main(argv=None):
               f"{c['hits'] + c['misses']} lookups "
               f"(rate {c['hit_rate']:.2f}), {c['entries']}/{c['capacity']} "
               f"entries, {c['flushes']} flushes")
+    if "faults" in stats:
+        f = stats["faults"]
+        degraded = [r for r in engine.done if getattr(r, "degraded", False)]
+        deg_recall = (engine.recall_vs_brute_force(degraded)
+                      if degraded else None)
+        print(f"[serve] faults: {f.get('shards_down', 0)} shards down, "
+              f"{f.get('deaths', 0)} deaths, "
+              f"{f.get('retries', 0)} retries, "
+              f"{f.get('backoff_steps', 0)} backoff steps, "
+              f"{f.get('failovers', 0)} failovers | "
+              f"{len(degraded)} served degraded"
+              + (f" (degraded recall@{args.k} {deg_recall:.3f})"
+                 if deg_recall is not None else ""))
+    if "store" in stats:
+        s = stats["store"]
+        print(f"[serve] store: {s['snapshots']} snapshots, "
+              f"{s['wal_records']} WAL records since last "
+              f"(cadence {s['every']})")
     return stats, recall
 
 

@@ -228,8 +228,18 @@ class LifecycleManager:
         """One maintenance tick: advance the clock, expire stale rows,
         and fire the repair cadence. The engine calls this after every
         scheduler step; with an all-default config it is a no-op beyond
-        the clock."""
+        the clock.
+
+        While the fleet is DEGRADED (a shard masked out — see
+        repro/faults) only the clock advances: TTL expiry and churn
+        repair both re-link rows via descents over the surviving
+        shards, and baking those degraded results into the graph would
+        outlive the failure. Deferred work fires on the first healthy
+        tick (the touched cohort is kept; stale rows are re-measured)."""
         self.clock += 1
+        if getattr(self.engine, "degraded", False):
+            return {"clock": self.clock, "expired": 0, "relinked": 0,
+                    "deferred": True}
         n_expired = self.expire_stale()
         n_relinked = 0
         if self._repair_cadence.tick() and self._touched:

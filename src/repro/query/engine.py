@@ -63,6 +63,9 @@ class QueryRequest:
     t_submit: float = 0.0
     t_done: float = 0.0
     status: str = "pending"              # pending | done | rejected
+    degraded: bool = False               # served while >=1 shard was
+                                         # masked out (bounded recall
+                                         # loss; never cached)
 
     @property
     def rejected(self) -> bool:
@@ -135,10 +138,15 @@ class QueryConfig:
 
 
 class QueryEngine:
-    def __init__(self, index: KNNIndex, qc: QueryConfig | None = None):
+    def __init__(self, index: KNNIndex, qc: QueryConfig | None = None, *,
+                 clock=None, faults=None, store=None):
         self.index = index
         self.qc = qc or QueryConfig()
-        self.plan = DescentPlan(index, self.qc.spec())
+        # Injectable clock (same pattern as SlotScheduler): tests drive
+        # a sched.ManualClock so latency / deadline / backoff behavior
+        # is deterministic without a single time.sleep.
+        self.clock = clock or time.perf_counter
+        self.plan = DescentPlan(index, self.qc.spec(), clock=self.clock)
         self.queue: deque[QueryRequest] = deque()
         self.done: list[QueryRequest] = []
         self.n_inserted = 0
@@ -156,6 +164,17 @@ class QueryEngine:
             self.plan, RebalanceConfig(
                 every=self.qc.rebalance_every,
                 threshold=self.qc.rebalance_threshold))
+        # Fault pipeline (repro/faults): injector → health/failover →
+        # crash store. Deferred imports keep repro.query importable
+        # without the faults package in the graph.
+        self.faults = faults
+        self.failover = None
+        if faults is not None:
+            from repro.faults.failover import FailoverManager
+            self.failover = FailoverManager(self.plan, faults)
+        self.store = store
+        if store is not None:
+            store.attach(self)
 
     @property
     def n_ticks(self) -> int:
@@ -178,8 +197,13 @@ class QueryEngine:
     # -- queue / serving loop ----------------------------------------------
 
     def submit(self, req: QueryRequest):
-        req.t_submit = time.perf_counter()
+        req.t_submit = self.clock()
         self.queue.append(req)
+
+    @property
+    def degraded(self) -> bool:
+        """True while the fleet serves with >=1 shard masked out."""
+        return self.failover is not None and self.failover.degraded
 
     def busy(self) -> bool:
         """True while requests are queued or (continuous) in flight."""
@@ -193,13 +217,29 @@ class QueryEngine:
         Lifecycle maintenance (TTL expiry, churn repair) fires AFTER the
         plan step — between compiled programs — so continuous slots
         in flight never see a half-applied mutation mid-hop. The shard
-        re-balancer runs last: its imbalance measurement (and any
-        blue/green swap) sees the step's lifecycle mutations already
-        journaled, and the swap lands before the next compiled program.
+        re-balancer runs after lifecycle: its imbalance measurement
+        (and any blue/green swap) sees the step's lifecycle mutations
+        already journaled, and the swap lands before the next compiled
+        program.
+
+        The fault pipeline brackets all of it: the injector's
+        ``begin_step`` fires FIRST (a ``crash@T`` lands before any work
+        of step T — the boundary the WAL guarantees consistency at) and
+        the failover probe masks newly-dead shards before the plan step
+        serves. Failover recovery and the crash store run LAST, so a
+        recovery swap / snapshot sees the step's mutations journaled.
         """
+        if self.faults is not None:
+            self.faults.begin_step()  # may raise EngineCrash
+        if self.failover is not None:
+            self.failover.observe()
         n = self.plan.step(self.queue, self.done)
         self.lifecycle.maintain()
         self.rebalance.maintain()
+        if self.failover is not None:
+            self.failover.maintain()
+        if self.store is not None:
+            self.store.maintain(self)
         return n
 
     def tick(self) -> int:
@@ -217,7 +257,7 @@ class QueryEngine:
         the interleaved insert-under-load tests (and any mid-stream
         mutation) use.
         """
-        t0 = time.perf_counter()
+        t0 = self.clock()
         n_steps = 0
         n_new_done = 0
         continuous = self.qc.continuous
@@ -226,7 +266,7 @@ class QueryEngine:
                 on_tick(self, n_steps)
             n_new_done += self.step()
             n_steps += 1
-        dt = max(time.perf_counter() - t0, 1e-9)
+        dt = max(self.clock() - t0, 1e-9)
         recent = self.done[-n_new_done:] if n_new_done else []
         # Latency percentiles cover SERVED requests only: a rejected
         # (shed) request's submit→shed interval is queueing, not
@@ -253,6 +293,15 @@ class QueryEngine:
             stats["cache"] = self.plan.cache.stats()
         if self.rebalance.active:
             stats["rebalance"] = self.rebalance.stats()
+        if self.faults is not None:
+            faults = dict(self.faults.stats())
+            if self.failover is not None:
+                faults.update(self.failover.stats())
+            faults["degraded_served"] = sum(
+                1 for r in recent if getattr(r, "degraded", False))
+            stats["faults"] = faults
+        if self.store is not None:
+            stats["store"] = self.store.stats()
         return stats
 
     # -- online insertion --------------------------------------------------
@@ -315,6 +364,38 @@ class QueryEngine:
         self._cohort = []  # drained only after the refresh succeeded
         self.n_refreshes += 1
         return n_new
+
+    # -- crash recovery (snapshot + WAL replay — src/repro/faults/wal) -----
+
+    @classmethod
+    def recover(cls, path, qc: QueryConfig | None = None, *,
+                clock=None, faults=None, store=None) -> "QueryEngine":
+        """Rebuild an engine from a :class:`~repro.faults.wal.CrashStore`
+        directory: load the last snapshot, replay the WAL suffix, and —
+        for sharded configs — restore the frozen base plan from its
+        sidecar so the serving partition extends the SAME lineage the
+        crashed engine was on (``extend_plan`` composes: extending the
+        restored base over the replayed index lands bitwise where the
+        live plan was). Passing ``store`` re-attaches persistence: the
+        first act of the recovered engine is a fresh snapshot, so a
+        second crash replays from there, not from before the first.
+        """
+        from repro.faults.wal import CrashStore
+        index, base_plan, manifest = CrashStore.load(path)
+        eng = cls(index, qc, clock=clock, faults=faults)
+        eng.lifecycle.clock = int(manifest.get("lifecycle_clock", 0))
+        if base_plan is not None and eng.qc.shards == base_plan.n_shards:
+            from repro.query.sharded import ShardedDescent, extend_plan
+            spec = eng.qc.spec()
+            eng.plan._sharded = ShardedDescent(
+                index, base_plan.n_shards,
+                plan=extend_plan(base_plan, index),
+                oversample=spec.shard_oversample,
+                resident_configs=spec.resident_configs)
+        if store is not None:
+            eng.store = store
+            store.attach(eng)  # snapshot AFTER the plan restore
+        return eng
 
     # -- quality -----------------------------------------------------------
 

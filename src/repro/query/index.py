@@ -127,6 +127,11 @@ class KNNIndex:
         self.split_depth = int(split_depth)
         self.version = int(version)  # bumped on mutation (engine cache key)
         self._lut: dict | None = None
+        # Optional write-ahead log (repro/faults/wal.py). When attached,
+        # every public mutator records (op, args) BEFORE applying, so a
+        # crash between scheduler steps can replay the suffix onto the
+        # last snapshot and land bitwise where the live index was.
+        self._wal = None
         # Members appended online, per cluster index (consolidated into
         # the CSR on save / refresh_cohort).
         self._extra_members: dict[int, list[int]] = {}
@@ -266,7 +271,20 @@ class KNNIndex:
             sizes[ci] += len(extra)
         return sizes
 
+    def attach_wal(self, wal) -> None:
+        """Start write-ahead logging every mutation into ``wal`` (an
+        object with ``record(op, **args)`` — see repro/faults/wal.py)."""
+        self._wal = wal
+
+    def detach_wal(self):
+        """Stop logging; returns the detached WAL (or None)."""
+        wal, self._wal = self._wal, None
+        return wal
+
     def add_cluster_member(self, ci: int, user: int):
+        if self._wal is not None:
+            self._wal.record("add_cluster_member", ci=int(ci),
+                             user=int(user))
         self._extra_members.setdefault(ci, []).append(int(user))
         self._log_member(ci, user)
 
@@ -330,6 +348,10 @@ class KNNIndex:
         be a previously removed user's row (its liveness flip rides the
         deletion journal so synced device masks follow).
         """
+        if self._wal is not None:
+            self._wal.record("append_user", words_row=words_row,
+                             card_row=card_row, nbr_ids=nbr_ids,
+                             nbr_sims=nbr_sims)
         reused = bool(self._free_rows)
         if reused:
             u = heapq.heappop(self._free_rows)
@@ -495,6 +517,8 @@ class KNNIndex:
         append-only for delta resharding); the router filters dead
         members at seed time. The freed row joins the reuse list.
         """
+        if self._wal is not None:
+            self._wal.record("remove_user", u=int(u))
         u = self._check_live(u)
         bufs = self._bufs
         graph_ids, graph_sims = bufs["graph_ids"], bufs["graph_sims"]
@@ -533,6 +557,9 @@ class KNNIndex:
         (fed by a localized neighbors-of-neighbors descent) to move
         ``u``'s forward edges to its new neighborhood.
         """
+        if self._wal is not None:
+            self._wal.record("swap_profile", u=int(u), words_row=words_row,
+                             card_row=card_row)
         u = self._check_live(u)
         bufs = self._bufs
         bufs["words"][u] = np.asarray(words_row, np.uint32)
@@ -563,6 +590,9 @@ class KNNIndex:
         descent over ``u``'s (new) fingerprint; ``u`` itself and
         tombstoned ids are dropped defensively.
         """
+        if self._wal is not None:
+            self._wal.record("relink_user", u=int(u), nbr_ids=nbr_ids,
+                             nbr_sims=nbr_sims)
         u = self._check_live(u)
         bufs = self._bufs
         graph_ids, graph_sims = bufs["graph_ids"], bufs["graph_sims"]
@@ -617,7 +647,11 @@ class KNNIndex:
 
     def touch_row(self, u: int, clock: int):
         """Stamp ``u``'s TTL clock (host-only state: never shipped to
-        device, so no journal entry and no version bump)."""
+        device, so no journal entry and no version bump — but it IS
+        write-ahead logged, because TTL expiry decisions after recovery
+        must match the never-crashed engine's)."""
+        if self._wal is not None:
+            self._wal.record("touch_row", u=int(u), clock=int(clock))
         self._bufs["last_touch"][self._check_live(u)] = clock
 
     # -- cohort refresh (amortized re-clustering) --------------------------
@@ -643,6 +677,22 @@ class KNNIndex:
         if max_cluster is None:
             base_sizes = np.diff(self.cluster_offsets)
             max_cluster = int(base_sizes.max()) if len(base_sizes) else 64
+        # WAL records the *resolved* max_cluster (the default depends on
+        # consolidation state, which a snapshot normalizes) and suspends
+        # itself for the body: the nested add_cluster_member calls are
+        # deterministic consequences of this one record.
+        if self._wal is not None:
+            self._wal.record("refresh_cohort", items=items, offsets=offsets,
+                             user_ids=user_ids, max_cluster=int(max_cluster))
+        wal, self._wal = self._wal, None
+        try:
+            return self._refresh_cohort(items, offsets, user_ids,
+                                        max_cluster)
+        finally:
+            self._wal = wal
+
+    def _refresh_cohort(self, items, offsets, user_ids: np.ndarray,
+                        max_cluster: int) -> int:
         item_h = hashing.item_hashes(np.asarray(items, np.int32),
                                      self.hash_seeds, self.b)
         cands = hashing.user_distinct_hashes_np(
@@ -706,20 +756,70 @@ class KNNIndex:
         self._extra_members = {}
         self._lut = None
 
+    @staticmethod
+    def _pack_touched_log(log):
+        """(version, rows) journal → (versions, flat rows, offsets)."""
+        versions = np.array([v for v, _ in log], dtype=np.int64)
+        lengths = np.array([len(rows) for _, rows in log], dtype=np.int64)
+        offsets = np.zeros(len(log) + 1, dtype=np.int64)
+        np.cumsum(lengths, out=offsets[1:])
+        flat = np.array([r for _, rows in log for r in rows],
+                        dtype=np.int64)
+        return versions, flat, offsets
+
+    def _journal_arrays(self) -> dict:
+        """Journal state as savez-able arrays. Persisting the journals
+        matters: without them a loaded index starts with empty logs whose
+        bases sit at the load-time version, so the first post-load delta
+        ``sync()`` silently falls back to full shard rematerialization."""
+        rv, rf, ro = self._pack_touched_log(self._row_log)
+        tv, tf, to = self._pack_touched_log(self._tomb_log)
+        mem = (np.array(self._member_log, dtype=np.int64).reshape(-1, 3)
+               if self._member_log else np.zeros((0, 3), dtype=np.int64))
+        return {
+            "jrn_row_versions": rv, "jrn_row_rows": rf,
+            "jrn_row_offsets": ro,
+            "jrn_row_base": np.int64(self._row_log_base),
+            "jrn_tomb_versions": tv, "jrn_tomb_rows": tf,
+            "jrn_tomb_offsets": to,
+            "jrn_tomb_base": np.int64(self._tomb_log_base),
+            "jrn_members": mem,
+            "jrn_member_base": np.int64(self._member_log_base),
+        }
+
+    def _restore_journals(self, z) -> None:
+        def unpack(versions, flat, offsets):
+            return [(int(v), tuple(int(r) for r in flat[offsets[i]:
+                                                        offsets[i + 1]]))
+                    for i, v in enumerate(versions)]
+        self._row_log = unpack(z["jrn_row_versions"], z["jrn_row_rows"],
+                               z["jrn_row_offsets"])
+        self._row_log_base = int(z["jrn_row_base"])
+        self._tomb_log = unpack(z["jrn_tomb_versions"], z["jrn_tomb_rows"],
+                                z["jrn_tomb_offsets"])
+        self._tomb_log_base = int(z["jrn_tomb_base"])
+        self._member_log = [(int(v), int(ci), int(u))
+                            for v, ci, u in z["jrn_members"]]
+        self._member_log_base = int(z["jrn_member_base"])
+
     def save(self, path: str | Path):
         self.consolidate()
         arrays = {name: getattr(self, name) for name in _ROWS + _TABLES}
         meta = {name: np.int64(getattr(self, name)) for name in _META}
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
-        np.savez(path, **arrays, **meta)
+        np.savez(path, **arrays, **meta, **self._journal_arrays())
 
     @classmethod
     def load(cls, path: str | Path) -> "KNNIndex":
         z = np.load(path)
-        kw = {name: z[name] for name in z.files if name not in _META}
+        kw = {name: z[name] for name in z.files
+              if name not in _META and not name.startswith("jrn_")}
         kw.update({name: int(z[name]) for name in _META})
-        return cls(**kw)
+        ix = cls(**kw)
+        if "jrn_row_base" in z.files:  # pre-journal artifacts load fine
+            ix._restore_journals(z)
+        return ix
 
 
 def build_index(ds: Dataset, params: C2Params | None = None, *,

@@ -192,13 +192,14 @@ class _SlotState:
     """
 
     def __init__(self, index: KNNIndex, spec: PlanSpec, beam: int,
-                 pin=None):
+                 pin=None, clock=None):
         n_slots = spec.slots
         self.beam = beam
         self.admit_cap = int(np.clip(n_slots // 4, 8, 32))
         self.seed_cols = index.t * spec.seeds_per_config
         self.sched = SlotScheduler(n_slots, policy=spec.admission,
-                                   max_pending=spec.max_pending)
+                                   max_pending=spec.max_pending,
+                                   clock=clock)
         self.q_words = jnp.zeros((n_slots, index.words.shape[1]),
                                  jnp.uint32)
         self.q_card = jnp.zeros(n_slots, jnp.int32)
@@ -238,11 +239,15 @@ class DescentPlan:
     program (used for insert searches and benchmarks under any plan).
     """
 
-    def __init__(self, index: KNNIndex, spec: PlanSpec):
+    def __init__(self, index: KNNIndex, spec: PlanSpec, clock=None):
         self.index = index
         self.spec = spec
         self.key = spec.key
         self.beam = max(spec.beam, spec.k)
+        # Injectable clock (defaults to wall time): every completion /
+        # shed / deadline stamp in the serving loop reads it, so fault
+        # and SLO tests drive latency deterministically (sched.ManualClock).
+        self.clock = clock or time.perf_counter
         self._single = None     # (version, cap, device arrays)
         self._sharded = None    # ShardedDescent (delta-synced)
         self._slots: Optional[_SlotState] = None
@@ -332,6 +337,36 @@ class DescentPlan:
         placements. Public accessor for diagnostics."""
         return self._sync_sharded() if self.spec.placement > 1 else None
 
+    def _degraded(self) -> bool:
+        """True while any shard is masked out of serving (fault layer).
+        Completions stamped in a degraded window carry
+        ``req.degraded = True`` and are never cached."""
+        sd = self._sharded
+        return sd is not None and bool(sd.dead.any())
+
+    def mask_shard_slots(self, down) -> None:
+        """Wipe the in-flight per-shard slot beams of newly-downed
+        shards (bool[S] mask): their lanes drop to PAD/NEG_INF so a
+        dead shard's pre-failure beam content cannot win a release-time
+        merge. Survivor shards' beams are untouched — in-flight
+        requests keep descending on the healthy fleet. No-op for wave
+        plans (no slot state) and single placements."""
+        if self._slots is None or self.spec.placement <= 1:
+            return
+        down = np.asarray(down, dtype=bool)
+        if not down.any():
+            return
+        st = self._slots
+        d = jnp.asarray(down)[:, None, None]
+        st.beam_ids = jnp.where(d, PAD_ID, st.beam_ids)
+        st.beam_sims = jnp.where(d, NEG_INF, st.beam_sims)
+        if self.spec.adaptive > 0:
+            # Prefixes were computed against the full fleet — restart
+            # every stability streak rather than free a slot on a
+            # pre-failure comparison.
+            st.streak[:] = 0
+            st.fresh[:] = True
+
     def note_replan(self):
         """A blue/green re-balance swapped the sharded partition
         (``query/rebalance.py``). No index content changed — every
@@ -384,9 +419,13 @@ class DescentPlan:
                           self.spec.seeds_per_config, placed=m_placed)
             m_ids, m_sims = self.descend_rows(qw[miss], qc[miss], seeds,
                                               k, hops=hops)
+            degraded = self._degraded()
             for j, i in enumerate(miss):
                 out_ids[i], out_sims[i] = m_ids[j], m_sims[j]
-                self.cache.put(keys[i], m_ids[j], m_sims[j])
+                if degraded:
+                    self.cache.degraded_skips += 1
+                else:
+                    self.cache.put(keys[i], m_ids[j], m_sims[j])
         return out_ids, out_sims
 
     def descend_rows(self, q_words, q_card, seeds, k: int, *,
@@ -467,7 +506,7 @@ class DescentPlan:
         enter ``done`` (counted, latency-excluded) rather than vanish."""
         if not shed:
             return 0
-        now = time.perf_counter()
+        now = self.clock()
         for r in shed:
             r.status = "rejected"
             r.t_done = now
@@ -489,7 +528,7 @@ class DescentPlan:
         n_done = 0
         if spec.admission == "slo":
             wave, shed = shed_and_select(queue, spec.max_wave,
-                                         time.perf_counter(),
+                                         self.clock(),
                                          spec.max_pending)
             n_done = self._reject(shed, done)
         else:
@@ -501,11 +540,13 @@ class DescentPlan:
         hops = max(r.hops if r.hops is not None else spec.hops
                    for r in wave)
         ids, sims = self.query_batch([r.profile for r in wave], hops=hops)
-        now = time.perf_counter()
+        now = self.clock()
+        degraded = self._degraded()
         for j, r in enumerate(wave):
             r.ids, r.sims = ids[j], sims[j]
             r.t_done = now
             r.status = "done"
+            r.degraded = degraded
             done.append(r)
         return len(wave) + n_done
 
@@ -520,7 +561,8 @@ class DescentPlan:
                 beam = sd.shard_beam(self.beam, self.spec.k)
                 if sd.mesh is not None:
                     pin = sd._pin
-            self._slots = _SlotState(self.index, self.spec, beam, pin=pin)
+            self._slots = _SlotState(self.index, self.spec, beam, pin=pin,
+                                     clock=self.clock)
         return self._slots
 
     def _slot_results(self, st: _SlotState):
@@ -569,7 +611,7 @@ class DescentPlan:
             m_items, m_offsets = items, offsets
         else:
             rows = []
-            now = time.perf_counter()
+            now = self.clock()
             for j, (slot, req) in enumerate(admitted):
                 budget = req.hops if req.hops is not None else spec.hops
                 ck = self.cache.key(qw[j], qc[j], spec.k, budget)
@@ -739,17 +781,25 @@ class DescentPlan:
         if not finished.any():
             return n_done
         ids, sims = self._slot_results(st)
-        now = time.perf_counter()
+        now = self.clock()
+        degraded = self._degraded()
         slots = np.flatnonzero(finished)
         for slot, req in zip(slots, sched.release_many(slots)):
             req.ids = ids[slot].copy()
             req.sims = sims[slot].copy()
             req.t_done = now
             req.status = "done"
+            req.degraded = degraded
             done.append(req)
             n_done += 1
             if (self.cache is not None and exact[slot]
                     and getattr(req, "_cache_flushes", -1)
                     == self.cache.flushes):
-                self.cache.put(req._cache_key, req.ids, req.sims)
+                if degraded:
+                    # A masked-fleet answer is NOT what a healthy
+                    # descent would return — serving it later as a
+                    # cache hit would outlive the failure window.
+                    self.cache.degraded_skips += 1
+                else:
+                    self.cache.put(req._cache_key, req.ids, req.sims)
         return n_done

@@ -83,7 +83,7 @@ def measured_imbalance(index, plan: ShardPlan) -> float:
     return float(loads.max() / max(loads.mean(), 1e-9))
 
 
-def merge_subgraph_rows(sd: ShardedDescent):
+def merge_subgraph_rows(sd: ShardedDescent, exclude=()):
     """Reconstruct global row content by symmetric merge of the (synced)
     shard subgraphs; returns ``(src, stats)``.
 
@@ -100,10 +100,18 @@ def merge_subgraph_rows(sd: ShardedDescent):
     ``stats`` — the audit that makes the merged rebuild bitwise-equal
     to a from-scratch ``plan_shards`` build rather than approximately
     so.
+
+    ``exclude`` names shards whose device tensors must NOT be read —
+    the failover path (repro/faults/failover.py) passes the unhealthy
+    set, so a dead shard's rows rebuild from survivors + the index
+    only. Rows resident nowhere else are patched wholesale from the
+    index (counted as ``rows_unseen``); with an empty ``exclude`` full
+    residency coverage is asserted as before.
     """
     ix = sd.index
     n = ix.n
     plan = sd.plan
+    exclude = frozenset(int(s) for s in exclude)
     l_graph, l_rev, l_words, l_card, _, l_tomb = \
         (np.asarray(a) for a in sd._dev)
     kg, kr = l_graph.shape[2], l_rev.shape[2]
@@ -114,6 +122,8 @@ def merge_subgraph_rows(sd: ShardedDescent):
     tomb = np.zeros(n, dtype=bool)
     seen = np.zeros(n, dtype=bool)
     for s in range(plan.n_shards):
+        if s in exclude:
+            continue
         res = plan.residents[s]
         loc = sd._g2l[s, res]
         l2g = np.asarray(sd._dev[4])[s]
@@ -129,7 +139,16 @@ def merge_subgraph_rows(sd: ShardedDescent):
         card[res[first]] = l_card[s][loc[first]]
         tomb[res[first]] = l_tomb[s][loc[first]]
         seen[res] = True
-    assert seen.all(), "shard residency no longer covers every user"
+    rows_unseen = 0
+    if exclude:
+        missing = np.flatnonzero(~seen)
+        rows_unseen = len(missing)
+        if rows_unseen:  # resident only on excluded shards: index-patch
+            words[missing] = ix.words[missing]
+            card[missing] = ix.card[missing]
+            tomb[missing] = ix.tombstone[missing]
+    else:
+        assert seen.all(), "shard residency no longer covers every user"
     # Audit pass: lanes whose endpoints never shared a shard cannot be
     # recovered from subgraph copies — patch them from the index so the
     # rebuild stays bitwise-equal to a from-scratch scatter.
@@ -145,6 +164,9 @@ def merge_subgraph_rows(sd: ShardedDescent):
         "lanes_patched": patched,
         "merge_coverage": round(1.0 - patched / max(total, 1), 4),
     }
+    if exclude:
+        stats["excluded"] = sorted(exclude)
+        stats["rows_unseen"] = rows_unseen
     src = SimpleNamespace(graph_ids=graph, rev_ids=rev, words=words,
                           card=card, tombstone=tomb)
     return src, stats
@@ -172,6 +194,7 @@ class Rebalancer:
         self.cadence = Cadence(cfg.every)
         self.n_checks = 0
         self.n_swaps = 0
+        self.n_deferred = 0  # checks skipped while the fleet is degraded
         self.last_imbalance: float | None = None
         self.merge_stats: dict = {}
 
@@ -189,6 +212,13 @@ class Rebalancer:
     def check(self, force: bool = False) -> float | None:
         """Measure imbalance; swap when past threshold (or ``force``)."""
         sd = self.plan.sharded_state()  # delta sync: journals consumed
+        if sd.dead.any():
+            # Degraded fleet: a re-balance swap would read the dead
+            # shard's tensors into the merge and reset its mask. The
+            # failover manager owns recovery; re-balancing resumes once
+            # every shard is healthy again.
+            self.n_deferred += 1
+            return None
         imb = measured_imbalance(sd.index, sd.plan)
         self.n_checks += 1
         self.last_imbalance = imb
@@ -221,6 +251,7 @@ class Rebalancer:
             "threshold": self.cfg.threshold,
             "checks": self.n_checks,
             "swaps": self.n_swaps,
+            "deferred": self.n_deferred,
             "imbalance": (round(self.last_imbalance, 4)
                           if self.last_imbalance is not None else None),
         }

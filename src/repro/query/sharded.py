@@ -66,7 +66,7 @@ from repro.knn.topk import merge_topk
 from repro.query.index import KNNIndex
 from repro.query.search import descent_kernel
 from repro.sched import trace
-from repro.types import PAD_ID
+from repro.types import NEG_INF, PAD_ID
 
 
 @dataclasses.dataclass
@@ -264,6 +264,11 @@ class ShardedDescent:
         # between scheduler steps, so a generation is never observed
         # half-swapped.
         self.generation = 0
+        # Degraded-serving mask (repro/faults): True shards are down —
+        # their owned seeds drop at shard_seeds and their merge lanes
+        # are neutralized, so survivors keep answering (bounded recall
+        # loss) until the failover rebuild swaps the shard back in.
+        self.dead = np.zeros(self.plan.n_shards, dtype=bool)
         S = self.plan.n_shards
         if use_mesh is None:  # auto: one device per shard when available
             use_mesh = S > 1 and jax.device_count() >= S
@@ -513,6 +518,9 @@ class ShardedDescent:
         self._materialize(src=src)
         self._record_remap(old_l2g)
         self.generation += 1
+        # The swap installs freshly rebuilt tensors for every shard; the
+        # failover manager re-masks any shard that is still unhealthy.
+        self.dead = np.zeros(self.plan.n_shards, dtype=bool)
 
     def _record_remap(self, old_l2g: np.ndarray):
         """Accumulate an old-local → new-local id map after a reshard
@@ -550,18 +558,33 @@ class ShardedDescent:
     def n_shards(self) -> int:
         return self.plan.n_shards
 
+    def set_dead(self, mask) -> None:
+        """Install the degraded-serving mask (bool[n_shards]); dead
+        shards stop receiving seeds and stop contributing to merges
+        from the next descent on."""
+        mask = np.asarray(mask, dtype=bool)
+        assert mask.shape == (self.plan.n_shards,), mask.shape
+        self.dead = mask.copy()
+
     def shard_seeds(self, seeds: np.ndarray) -> np.ndarray:
         """Partition routed global seeds by ownership and remap to local.
 
         Returns int32[S, q, S_cols]: seed ids in shard-local coordinates;
         a seed appears on exactly the shard owning that user (PAD
-        elsewhere), so the fleet explores disjoint basins.
+        elsewhere), so the fleet explores disjoint basins. Seeds owned
+        by a dead shard are dropped entirely — their basins are the
+        degraded-mode recall loss — rather than re-homed: survivors do
+        not host those rows (tiered residency may not host them at
+        all), and a deterministic drop is what the masked-seed parity
+        test pins against a shard-excluded rebuild.
         """
         S = self.n_shards
         safe = np.where(seeds == PAD_ID, 0, seeds)
         owned = ((self.plan.owner[safe][None]
                   == np.arange(S)[:, None, None])
                  & (seeds[None] != PAD_ID))              # [S, q, cols]
+        if self.dead.any():
+            owned &= ~self.dead[:, None, None]
         local = self._g2l[:, safe]
         return np.where(owned, local, PAD_ID)
 
@@ -589,6 +612,13 @@ class ShardedDescent:
         else:
             ids, sims = _vmapped_descent(*args, k=k, beam=shard_beam,
                                          hops=hops, kernel=kernel, tag=tag)
+        if self.dead.any():
+            # Belt and braces on top of the seed drop: a dead shard
+            # contributes nothing to the merge even if a stale seed
+            # slipped in (e.g. a continuous slot admitted pre-failure).
+            alive = jnp.asarray(~self.dead)[:, None, None]
+            ids = jnp.where(alive, ids, PAD_ID)
+            sims = jnp.where(alive, sims, NEG_INF)
         return _merge_shard_topk(ids, sims, k)
 
     def shard_beam(self, beam: int, k: int) -> int:

@@ -1,4 +1,5 @@
 """Continuous-batching scheduler shared by the query and LM engines."""
 from repro.sched.scheduler import (ADMISSION_POLICIES, Cadence,  # noqa: F401
-                                   SlotScheduler, shed_and_select)
+                                   ManualClock, SlotScheduler,
+                                   shed_and_select)
 from repro.sched import trace  # noqa: F401

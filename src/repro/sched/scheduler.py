@@ -108,6 +108,39 @@ def shed_and_select(pending, n: int, now: float,
     return selected, shed
 
 
+class ManualClock:
+    """Injectable deterministic clock for engines, schedulers and fault
+    tests.
+
+    Everywhere the serving stack reads wall time (``QueryEngine``,
+    ``DescentPlan``, :class:`SlotScheduler` deadlines, the fault
+    injector's slow-shard latency) it goes through an injectable
+    ``clock()`` callable defaulting to ``time.perf_counter``. A
+    ``ManualClock`` only moves when :meth:`advance` is called, so
+    latency stats, deadline shedding and backoff windows become pure
+    functions of the test script — no ``time.sleep``, no flaky timing.
+
+    ``sleep(dt)`` is an alias for ``advance(dt)`` so code written
+    against ``time.sleep`` (open-loop pacing, injected slow-shard
+    latency) can take the same object.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance a clock backwards ({dt})")
+        self.now += float(dt)
+        return self.now
+
+    def sleep(self, dt: float) -> None:
+        self.advance(dt)
+
+
 class Cadence:
     """Deterministic periodic trigger for between-tick maintenance.
 

@@ -163,7 +163,8 @@ def test_stats_shape(index):
     cache.get(("x",))
     s = cache.stats()
     assert s == {"capacity": 4, "entries": 1, "hits": 1, "misses": 1,
-                 "hit_rate": 0.5, "flushes": 0, "stale_drops": 0}
+                 "hit_rate": 0.5, "flushes": 0, "stale_drops": 0,
+                 "degraded_skips": 0}
 
 
 # -- engine integration ----------------------------------------------------

@@ -1,0 +1,192 @@
+"""Hypothesis battery for the fault-tolerance stack: (a) a crash at ANY
+step of ANY mutation schedule, under any plan shape (1|2 shards ×
+wave|continuous), recovers via snapshot + WAL replay to an index that
+is bitwise-equal — tensors, consolidated cluster tables, and served
+answers — to a never-crashed engine driven identically; (b) any
+kill/recover interleaving under serving never returns a user removed
+before the request was submitted, keeps serving through the degraded
+window, and converges back to healthy (the post-recovery fleet answers
+bitwise what a fresh engine on the same index answers).
+tests/test_faults.py carries the deterministic battery."""
+import copy
+import tempfile
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # [test] extra; skip, don't break collection
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.params import C2Params
+from repro.data.synthetic import make_dataset
+from repro.faults import (CrashStore, EngineCrash, FaultInjector, FaultPlan,
+                          HealthConfig)
+from repro.query.engine import QueryConfig, QueryEngine, QueryRequest
+from repro.query.index import _ROWS
+from repro.sched import ManualClock
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    from repro.query.index import build_index
+
+    ds = make_dataset("synth", scale=0.05, seed=5)
+    return build_index(ds, C2Params(k=8, b=64, t=4, max_cluster=32))
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    qds = make_dataset("synth", scale=0.05, seed=7)
+    return [qds.profile(u) for u in range(40)]
+
+
+def _schedule(ops_seed: int, n_steps: int):
+    """A deterministic per-step mutation schedule: same seed ⇒ same ops
+    applied to every engine under comparison."""
+    rng = np.random.default_rng(ops_seed)
+    sched = []
+    for _ in range(n_steps):
+        ops = []
+        if rng.random() < 0.7:
+            ops.append(("insert", int(rng.integers(8, 40))))
+        if rng.random() < 0.3:
+            ops.append(("remove", int(rng.integers(0, 100))))
+        if rng.random() < 0.2:
+            ops.append(("touch", int(rng.integers(100, 180))))
+        sched.append(ops)
+    return sched
+
+
+def _apply(eng, ops, profiles, removed):
+    for op, a in ops:
+        if op == "insert":
+            eng.insert(profiles[a])
+        elif op == "remove":
+            if a not in removed and not eng.index.tombstone[a]:
+                eng.remove_user(a)
+            removed.add(a)
+        elif op == "touch":
+            if not eng.index.tombstone[a]:
+                eng.touch(a)
+
+
+def _wave(eng, profiles, n=8):
+    base = len(eng.done)
+    for rid, p in enumerate(profiles[:n]):
+        eng.submit(QueryRequest(rid=rid, profile=p))
+    eng.run()
+    return [(np.asarray(r.ids), np.asarray(r.sims))
+            for r in eng.done[base:]]
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(crash_step=st.integers(min_value=1, max_value=9),
+       shards=st.integers(min_value=1, max_value=2),
+       continuous=st.booleans(),
+       ops_seed=st.integers(min_value=0, max_value=10**6))
+def test_any_crash_point_recovers_bitwise(small_index, profiles, crash_step,
+                                          shards, continuous, ops_seed):
+    """Crash at any step of any schedule under any plan shape: snapshot
+    + WAL replay lands bitwise where the never-crashed mirror is."""
+    qc = QueryConfig(k=8, beam=12, hops=2, shards=shards,
+                     continuous=continuous, slots=8, max_wave=8,
+                     refresh_every=6)
+    sched = _schedule(ops_seed, 12)
+    tmp = tempfile.mkdtemp()
+    eng = QueryEngine(copy.deepcopy(small_index), qc, clock=ManualClock(),
+                      faults=FaultInjector(
+                          FaultPlan((FaultPlan.parse(
+                              f"crash@{crash_step}").events))),
+                      store=CrashStore(tmp, every=3))
+    mirror = QueryEngine(copy.deepcopy(small_index), qc, clock=ManualClock())
+    rA, rB = set(), set()
+    crashed = False
+    for ops in sched:
+        _apply(eng, ops, profiles, rA)
+        try:
+            eng.step()
+        except EngineCrash:
+            crashed = True
+            break
+        _apply(mirror, ops, profiles, rB)
+        mirror.step()
+    assert crashed  # crash_step <= len(sched) guarantees it fired
+    # The crash pre-empted the step AFTER eng applied its ops: the
+    # mirror applies the same ops and runs the step the crash ate.
+    _apply(mirror, sched[eng.faults.step], profiles, rB)
+    mirror.step()
+
+    rec = QueryEngine.recover(tmp, qc, clock=ManualClock())
+    assert rec.index.version == mirror.index.version
+    for name in _ROWS:
+        np.testing.assert_array_equal(getattr(rec.index, name),
+                                      getattr(mirror.index, name),
+                                      err_msg=name)
+    rec.index.consolidate(), mirror.index.consolidate()
+    for name in ("cluster_members", "cluster_offsets", "cluster_paths",
+                 "cluster_config"):
+        np.testing.assert_array_equal(getattr(rec.index, name),
+                                      getattr(mirror.index, name),
+                                      err_msg=name)
+    # Served answers, not just tensors: a fresh wave answers bitwise
+    # the same on both (the mirror's leftover in-flight slots are
+    # independent of fresh submissions).
+    for (ia, sa), (ib, sb) in zip(_wave(rec, profiles),
+                                  _wave(mirror, profiles)):
+        np.testing.assert_array_equal(ia, ib)
+        np.testing.assert_array_equal(sa, sb)
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(kill_step=st.integers(min_value=0, max_value=6),
+       kill_shard=st.integers(min_value=0, max_value=1),
+       ops_seed=st.integers(min_value=0, max_value=10**6),
+       continuous=st.booleans())
+def test_any_kill_recover_interleaving_serves_and_converges(
+        small_index, profiles, kill_step, kill_shard, ops_seed, continuous):
+    """Kill either shard at any step with removes interleaved: every
+    request completes, no result names a user removed before it was
+    submitted, the fleet converges back to healthy, and post-recovery
+    answers equal a fresh engine's on the same index."""
+    qc = QueryConfig(k=8, beam=12, hops=2, shards=2,
+                     continuous=continuous, slots=8, max_wave=8)
+    inj = FaultInjector(
+        FaultPlan.parse(f"kill:{kill_shard}@{kill_step}"),
+        health=HealthConfig(max_retries=1, backoff_cap=1, recover_after=2))
+    eng = QueryEngine(copy.deepcopy(small_index), qc, clock=ManualClock(),
+                      faults=inj)
+    rng = np.random.default_rng(ops_seed)
+    removed: set[int] = set()
+    for t in range(10):
+        removed_at_submit = set(removed)
+        base = len(eng.done)
+        for rid, p in enumerate(profiles[t:t + 4]):
+            eng.submit(QueryRequest(rid=1000 * t + rid, profile=p))
+        if rng.random() < 0.4:
+            a = int(rng.integers(0, 100))
+            if not eng.index.tombstone[a]:
+                eng.remove_user(a)
+                removed.add(a)
+        eng.run()  # drain: every submitted request completes
+        for r in eng.done[base:]:
+            assert r.status == "done"
+            served = set(int(i) for i in r.ids if i >= 0)
+            # Nothing removed BEFORE submission is ever served (later
+            # removes may race a result legally).
+            assert not (served & removed_at_submit), (t, r.rid)
+    # Idle steps let the health machine walk dead -> recovered.
+    for _ in range(20):
+        eng.step()
+    assert not eng.degraded
+    assert eng.failover.n_failovers >= 1
+    assert eng.failover.health.state == ["healthy", "healthy"]
+    # Converged: the recovered fleet answers exactly like a fresh
+    # engine built on the SAME mutated index.
+    fresh = QueryEngine(eng.index, qc, clock=ManualClock())
+    for (ia, sa), (ib, sb) in zip(_wave(eng, profiles),
+                                  _wave(fresh, profiles)):
+        np.testing.assert_array_equal(ia, ib)
+        np.testing.assert_array_equal(sa, sb)
