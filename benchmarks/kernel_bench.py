@@ -9,14 +9,19 @@ Two sections:
   (jnp popcount ref, jnp MXU bit-plane, fused goldfinger_knn kernel).
 * **descent** — the serving hot path, per beam width: the unfused jnp
   hop (score every ``beam·(kg+kr)`` lane, dedup after, wide top-k) vs
-  the fused descent_score kernel, with the kernel's scored-lane counts
-  showing how much estimator work dedup-before-scoring removes.
+  the fused descent_score kernel in BOTH placements — blocked-VMEM
+  tables and HBM-resident tables with per-chunk candidate-row DMA —
+  with the kernel's scored-lane counts showing how much estimator work
+  dedup-before-scoring removes and the DMA path's byte columns showing
+  the HBM traffic the suppressed-lane skip avoids.
 
     PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke]
 
 ``--smoke`` shrinks both sections for CI and fails loudly (exit 1) if
-the fused descent hop drifts from the jnp oracle by a single bit or
-stops reducing scored work.
+the fused descent hop (either placement) drifts from the jnp oracle by
+a single bit, stops reducing scored work, moves no DMA / saves no
+bytes on the dedup-heavy workload, or re-misses the shape-keyed
+autotuner cache on a repeated shape.
 """
 from __future__ import annotations
 
@@ -106,6 +111,7 @@ def run_descent(scale: float = 0.1, n_queries: int = 128,
     kg, kr = g.shape[1], r.shape[1]
 
     jnp_hop = jax.jit(ds_ref.descent_hop_ref)
+    W = w.shape[1]
     rows = []
     for beam in beams:
         bi, bs = descent_init(w, c, qw, qc, seeds, beam=beam)
@@ -113,13 +119,25 @@ def run_descent(scale: float = 0.1, n_queries: int = 128,
         t_jnp = _time(jnp_hop, g, r, w, c, qw, qc, bi, bs)
         t_pal = _time(lambda *a: ds_ops.descent_hop(*a),
                       g, r, w, c, qw, qc, bi, bs)
+        t_dma = _time(lambda *a: ds_ops.descent_hop(*a, dma=True),
+                      g, r, w, c, qw, qc, bi, bs)
         ri, rs = jnp_hop(g, r, w, c, qw, qc, bi, bs)
-        ki, ks, nsc = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
-                                         with_counts=True)
+        ki, ks, nsc, _, _ = ds_ops.descent_hop(
+            g, r, w, c, qw, qc, bi, bs, with_counts=True)
+        di, dsim, dnsc, dmab, saved = ds_ops.descent_hop(
+            g, r, w, c, qw, qc, bi, bs, dma=True, with_counts=True)
         np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
         np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+        np.testing.assert_array_equal(np.asarray(di), np.asarray(ri))
+        np.testing.assert_array_equal(np.asarray(dsim), np.asarray(rs))
+        # DMA accounting must agree with the scored-lane counter: the
+        # kernel fetches exactly the surviving lanes' fingerprint rows.
+        np.testing.assert_array_equal(np.asarray(dmab),
+                                      np.asarray(dnsc) * W * 4)
         total = beam * (kg + kr)
         scored = float(np.asarray(nsc).mean())
+        q_dma = float(np.asarray(dmab).mean())
+        q_saved = float(np.asarray(saved).mean())
         rows.append({
             "beam": beam, "n": index.n, "n_queries": len(profiles),
             "candidates_per_hop": total,
@@ -127,13 +145,21 @@ def run_descent(scale: float = 0.1, n_queries: int = 128,
             "scored_fraction": round(scored / total, 3),
             "jnp_hop_ms": round(t_jnp * 1e3, 2),
             "fused_interpret_ms": round(t_pal * 1e3, 2),
+            "fused_dma_interpret_ms": round(t_dma * 1e3, 2),
+            "dma_kb_per_query": round(q_dma / 1e3, 2),
+            "dma_saved_kb_per_query": round(q_saved / 1e3, 2),
+            "dma_saved_fraction": round(q_saved / (q_dma + q_saved), 3),
         })
     for row in rows:
         print(f"[descent] beam={row['beam']:3d}: scored "
               f"{row['scored_per_hop_mean']:7.1f}/{row['candidates_per_hop']}"
               f" lanes ({row['scored_fraction']:.0%}) | jnp "
               f"{row['jnp_hop_ms']:.1f} ms, fused(interpret) "
-              f"{row['fused_interpret_ms']:.1f} ms")
+              f"{row['fused_interpret_ms']:.1f} ms, fused-dma(interpret) "
+              f"{row['fused_dma_interpret_ms']:.1f} ms | dma "
+              f"{row['dma_kb_per_query']:.1f} KB/q, skipped "
+              f"{row['dma_saved_kb_per_query']:.1f} KB/q "
+              f"({row['dma_saved_fraction']:.0%})")
     return emit(rows, "kernel_bench_descent")
 
 
@@ -143,7 +169,10 @@ def main():
                     help="small CI run; exit 1 on fused-hop drift")
     args = ap.parse_args()
     if args.smoke:
+        from repro.kernels.descent_score import tune
+
         run(n=256)
+        tune.clear()
         try:
             rows = run_descent(scale=0.05, n_queries=48, beams=(8, 16))
         except AssertionError as e:
@@ -154,7 +183,17 @@ def main():
             print("[kernel_bench] FAIL dedup-before-scoring removed no "
                   "work", file=sys.stderr)
             sys.exit(1)
-        print("[kernel_bench] smoke OK")
+        if not all(row["dma_saved_kb_per_query"] > 0 for row in rows):
+            print("[kernel_bench] FAIL suppressed-lane DMA skip saved "
+                  "no bytes on a dedup-heavy workload", file=sys.stderr)
+            sys.exit(1)
+        # Shape-keyed autotuner: the first dma hop per beam width is a
+        # cache miss, every repeat (timing reps + counted rerun) a hit.
+        if tune.stats["misses"] != 2 or tune.stats["hits"] < 2:
+            print(f"[kernel_bench] FAIL autotuner cache re-missed on a "
+                  f"repeated shape: {tune.stats}", file=sys.stderr)
+            sys.exit(1)
+        print(f"[kernel_bench] smoke OK (tune cache {tune.stats})")
         return
     run()
     run_descent()

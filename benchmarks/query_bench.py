@@ -1,8 +1,10 @@
 """Query-serving benchmark: QPS, latency percentiles, recall@k vs brute
 force, for cold (compile included) and warm waves, in single-device and
 sharded modes — each also through the fused Pallas descent-scoring
-kernel (``*_kernel`` rows + a ``descent_scoring`` block reporting
-scored-lane counts per hop vs the unfused ``beam·(kg+kr)``) — plus
+kernel (``*_kernel`` rows, plus a ``single_dma`` row for its
+HBM-resident DMA placement, and a ``descent_scoring`` block reporting
+scored-lane counts per hop vs the unfused ``beam·(kg+kr)`` alongside
+the DMA path's bytes-moved / bytes-saved-per-query columns) — plus
 online-insert throughput.
 
     PYTHONPATH=src python benchmarks/query_bench.py [--dataset synth]
@@ -966,7 +968,11 @@ def descent_scoring_stats(index, profiles, k: int, beam: int, hops: int,
                           seeds_per_config: int = 16) -> dict:
     """Per-hop scored-candidate counts through the fused kernel on the
     same routed wave the serving rows answer: how many estimator lanes
-    survive dedup-before-scoring vs the unfused ``beam·(kg+kr)``."""
+    survive dedup-before-scoring vs the unfused ``beam·(kg+kr)``, and —
+    through the HBM-resident DMA placement of the same hop — how many
+    fingerprint bytes actually move vs how many the suppressed-lane
+    skip leaves in HBM. The DMA hop's (ids, sims) are asserted bitwise
+    against the VMEM hop's along the way."""
     import jax.numpy as jnp
 
     from repro.kernels.descent_score import ops as ds_ops
@@ -979,16 +985,31 @@ def descent_scoring_stats(index, profiles, k: int, beam: int, hops: int,
     w, c = jnp.asarray(index.words), jnp.asarray(index.card)
     beam = max(beam, k)
     bi, bs = descent_init(w, c, qw, qc, seeds, beam=beam)
-    per_hop = []
+    di, dsm = bi, bs
+    per_hop, dma_per_hop, saved_per_hop = [], [], []
     for _ in range(hops):
-        bi, bs, nsc = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
-                                         with_counts=True)
+        bi, bs, nsc, _, _ = ds_ops.descent_hop(
+            g, r, w, c, qw, qc, bi, bs, with_counts=True)
+        di, dsm, dnsc, dmab, saved = ds_ops.descent_hop(
+            g, r, w, c, qw, qc, di, dsm, dma=True, with_counts=True)
+        np.testing.assert_array_equal(np.asarray(di), np.asarray(bi))
+        np.testing.assert_array_equal(np.asarray(dsm), np.asarray(bs))
+        np.testing.assert_array_equal(np.asarray(dnsc), np.asarray(nsc))
         per_hop.append(float(np.asarray(nsc).mean()))
+        dma_per_hop.append(float(np.asarray(dmab).mean()))
+        saved_per_hop.append(float(np.asarray(saved).mean()))
     total = beam * (g.shape[1] + r.shape[1])
+    dma_b, saved_b = float(np.sum(dma_per_hop)), float(np.sum(saved_per_hop))
     return {
         "candidates_per_hop": total,
         "scored_per_hop_mean": [round(x, 1) for x in per_hop],
         "scored_fraction": round(float(np.mean(per_hop)) / total, 3),
+        "dma_kb_per_query_per_hop": [round(x / 1e3, 2)
+                                     for x in dma_per_hop],
+        "dma_kb_per_query": round(dma_b / 1e3, 2),
+        "dma_saved_kb_per_query": round(saved_b / 1e3, 2),
+        "dma_saved_fraction": round(saved_b / max(dma_b + saved_b, 1.0),
+                                    3),
     }
 
 
@@ -1026,13 +1047,25 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
     sharded_kernel = QueryEngine(index, QueryConfig(
         k=k, beam=beam, hops=hops, max_wave=n_queries, shards=shards,
         shard_oversample=oversample, kernel=True))
+    # The same fused hop with HBM-resident tables + per-chunk candidate
+    # DMA ("pallas_dma" scorer) — still bitwise, now with byte
+    # accounting for the suppressed-lane skip.
+    single_dma = QueryEngine(index, QueryConfig(
+        k=k, beam=beam, hops=hops, max_wave=n_queries, kernel=True,
+        dma=True))
     modes = {
         "single": _serve_waves(single, profiles, k),
         f"sharded_{shards}": _serve_waves(sharded, profiles, k),
         "single_kernel": _serve_waves(single_kernel, profiles, k),
         f"sharded_{shards}_kernel": _serve_waves(sharded_kernel, profiles, k),
+        "single_dma": _serve_waves(single_dma, profiles, k),
     }
     scoring = descent_scoring_stats(index, profiles, k, beam, hops)
+    served_dma = single_dma.plan.descent_stats
+    scoring["serving_dma_bytes_per_query"] = round(
+        served_dma["dma_bytes"] / max(served_dma["hop_queries"], 1), 1)
+    scoring["serving_bytes_saved_per_query"] = round(
+        served_dma["bytes_saved"] / max(served_dma["hop_queries"], 1), 1)
     sd = sharded.sharded_state()
     sharded_exec = "mesh" if sd is not None and sd.mesh is not None else "vmap"
 
@@ -1138,6 +1171,9 @@ def run(dataset: str = "synth", scale: float = 0.2, n_queries: int = 256,
             "sharded_recall_delta": round(
                 modes[f"sharded_{shards}_kernel"]["warm"][f"recall_at_{k}"]
                 - modes[f"sharded_{shards}"]["warm"][f"recall_at_{k}"], 4),
+            "dma_recall_delta": round(
+                modes["single_dma"]["warm"][f"recall_at_{k}"]
+                - modes["single"]["warm"][f"recall_at_{k}"], 4),
         },
         "sharded_vs_single": {
             "qps_ratio": round(sh["qps"] / max(sg["qps"], 1e-9), 3),
@@ -1229,7 +1265,8 @@ def main():
         # removed estimator work.
         kd = rec["kernel_vs_jnp"]
         frac = rec["descent_scoring"]["scored_fraction"]
-        if kd["recall_delta"] != 0.0 or kd["sharded_recall_delta"] != 0.0:
+        if (kd["recall_delta"] != 0.0 or kd["sharded_recall_delta"] != 0.0
+                or kd["dma_recall_delta"] != 0.0):
             print(f"[query_bench] FAIL kernel recall drift: {kd}",
                   file=sys.stderr)
             sys.exit(1)
@@ -1237,8 +1274,15 @@ def main():
             print(f"[query_bench] FAIL kernel scored no fewer lanes: "
                   f"{rec['descent_scoring']}", file=sys.stderr)
             sys.exit(1)
+        if not (rec["descent_scoring"]["dma_saved_kb_per_query"] > 0
+                and rec["descent_scoring"]["serving_bytes_saved_per_query"]
+                > 0):
+            print(f"[query_bench] FAIL DMA suppressed-lane skip saved no "
+                  f"bytes: {rec['descent_scoring']}", file=sys.stderr)
+            sys.exit(1)
         print(f"[query_bench] kernel smoke OK: recall_delta=0.0 "
-              f"scored_fraction={frac}")
+              f"scored_fraction={frac} dma_saved_fraction="
+              f"{rec['descent_scoring']['dma_saved_fraction']}")
         if args.continuous:
             # Streaming admission must keep result quality: recall parity
             # with waves (identical descent ⇒ tight margin even on noisy

@@ -1,0 +1,42 @@
+# One switch for every kernel package: interpret vs compiled Pallas.
+#
+# All three kernel wrappers (`descent_score.ops`, `goldfinger_knn.ops`,
+# `frh_minhash.ops`) resolve their `interpret=` argument through
+# `interpret_mode()` at trace time, so the whole repo flips between the
+# interpret-mode emulator (bitwise-checked against each package's
+# `ref.py`, runs anywhere including CPU CI) and compiled TPU kernels
+# with a single environment variable:
+#
+#   REPRO_PALLAS_INTERPRET=1   interpret mode (the default — CPU CI)
+#   REPRO_PALLAS_INTERPRET=0   compile for the attached accelerator
+#
+# Accepted falsy spellings: 0 / false / no / off (case-insensitive);
+# anything else — including unset — means interpret mode. Tests (and
+# callers that must not depend on ambient env) can pin the mode
+# programmatically with `set_interpret(True/False)`, which overrides the
+# environment until `set_interpret(None)` restores env-driven behavior.
+
+from __future__ import annotations
+
+import os
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_FALSY = frozenset({"0", "false", "no", "off"})
+
+_override: bool | None = None
+
+
+def set_interpret(value: bool | None) -> None:
+    """Pin interpret mode (True/False), or None to follow the env var."""
+    global _override
+    _override = None if value is None else bool(value)
+
+
+def interpret_mode() -> bool:
+    """Resolve the interpret flag: override first, then REPRO_PALLAS_INTERPRET."""
+    if _override is not None:
+        return _override
+    raw = os.environ.get(ENV_VAR)
+    if raw is None:
+        return True
+    return raw.strip().lower() not in _FALSY

@@ -42,12 +42,25 @@ precondition, which every real beam satisfies by construction (beams are
 A repeated beam id at two different sims would be ranked at its *first*
 lane by the reference's dedup and at its *max* lane here.
 
-The index arrays ride in whole (index_map pins block 0): the descent
-touches the fingerprint table essentially at random anyway, and at this
-repo's serving capacities it fits VMEM (n·W·4 bytes ≈ 0.2 MB at
-n=1600, W=32). A >VMEM-scale deployment would switch them to HBM
-refs with per-chunk DMA of the gathered rows — the chunked scoring loop
-is already shaped for that split.
+Two memory placements share this hop body:
+
+* :func:`hop_pallas` — the PR 4 layout: index arrays ride in whole as
+  VMEM-style operands (index_map pins block 0). Fine while the tables
+  fit VMEM (n·W·4 bytes ≈ 0.2 MB at n=1600, W=32).
+* :func:`hop_pallas_dma` — the memory-hierarchy-aware layout: all five
+  tables (adjacency fwd/rev, fingerprints, cardinalities, tombstones)
+  stay HBM/ANY-memory refs. Candidate *ids* are still gathered in VMEM,
+  but fingerprint/cardinality rows are fetched per score chunk by
+  double-buffered async-copy DMA into scoped VMEM scratch — copy-in of
+  chunk c+1 overlaps scoring of chunk c — and lanes the suppression mask
+  retired never issue a DMA at all, so the scored-lane counter directly
+  measures bytes not moved. The kernel emits per-query ``dma_bytes`` /
+  ``bytes_saved`` outputs (fingerprint bytes; the invariant
+  ``dma_bytes == n_scored·W·4`` is test-enforced).
+
+Both are bitwise-identical to each other and to the reference: they
+share the suppression mask, the chunked estimator
+(:func:`repro.kernels.scoring.score_gathered_chunk`) and the merge.
 """
 from __future__ import annotations
 
@@ -56,10 +69,55 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.scoring import score_gathered_chunk
 from repro.knn.topk import select_topk
 from repro.sketch.goldfinger import unpack_bits_int8
 from repro.types import NEG_INF, PAD_ID
+
+
+def _mask_dead_beam(beam_ids, beam_sims, tomb):
+    """(a0) tombstone masking of the beam itself, mirroring the ref's
+    pre-masking: lanes naming deleted rows drop to PAD/−inf before the
+    gather, so a dead beam entry contributes no candidates this hop."""
+    bq, B = beam_ids.shape
+    b_dead = (beam_ids != PAD_ID) & (jnp.take(
+        tomb, jnp.where(beam_ids == PAD_ID, 0, beam_ids).reshape(-1)
+    ).reshape(bq, B) > 0)
+    return (jnp.where(b_dead, PAD_ID, beam_ids),
+            jnp.where(b_dead, NEG_INF, beam_sims))
+
+
+def _suppress(cand, beam_ids, tomb):
+    """(a1)+(b) pre-scoring suppression.
+
+    Tombstoned candidates become PAD lanes *upstream* of the `need`
+    mask — stale edges to deleted rows retire exactly like PAD/in-beam
+    lanes (and are excluded from n_scored, which is how tests observe
+    the suppression). `need` then drops PAD lanes and lanes already in
+    the beam (merge would retire them as duplicates of columns 0..B-1 —
+    scoring them first is the waste this kernel removes)."""
+    bq, C = cand.shape
+    c_dead = (cand != PAD_ID) & (jnp.take(
+        tomb, jnp.where(cand == PAD_ID, 0, cand).reshape(-1)
+    ).reshape(bq, C) > 0)
+    cand = jnp.where(c_dead, PAD_ID, cand)
+    need = (cand != PAD_ID) & ~jnp.any(
+        cand[:, :, None] == beam_ids[:, None, :], axis=-1)
+    return cand, need
+
+
+def _merge(beam_ids, beam_sims, cand, cand_sims, out_ids_ref, out_sims_ref):
+    """(d) in-register merge over [beam | fwd | rev] — the reference
+    column order, so tie-breaks land exactly where lax.top_k puts them."""
+    B = beam_ids.shape[1]
+    top_sims, top_ids = select_topk(
+        jnp.concatenate([beam_sims, cand_sims], axis=1),
+        jnp.concatenate([beam_ids, cand], axis=1),
+        B, dedup_ids=True)
+    out_ids_ref[...] = jnp.where(top_sims == NEG_INF, PAD_ID, top_ids)
+    out_sims_ref[...] = top_sims
 
 
 def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref, tomb_ref,
@@ -71,17 +129,9 @@ def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref, tomb_ref,
     bq, B = beam_ids.shape
     kg = graph_ref.shape[1]
     kr = rev_ref.shape[1]
-    W = words_ref.shape[1]
     tomb = tomb_ref[...][:, 0]                          # [n] i32 (0|1)
 
-    # (a0) tombstone masking of the beam itself, mirroring the ref's
-    # pre-masking: lanes naming deleted rows drop to PAD/−inf before the
-    # gather, so a dead beam entry contributes no candidates this hop.
-    b_dead = (beam_ids != PAD_ID) & (jnp.take(
-        tomb, jnp.where(beam_ids == PAD_ID, 0, beam_ids).reshape(-1)
-    ).reshape(bq, B) > 0)
-    beam_ids = jnp.where(b_dead, PAD_ID, beam_ids)
-    beam_sims = jnp.where(b_dead, NEG_INF, beam_sims)
+    beam_ids, beam_sims = _mask_dead_beam(beam_ids, beam_sims, tomb)
 
     # (a) adjacency gather — candidate *ids* only.
     flat = jnp.where(beam_ids == PAD_ID, 0, beam_ids).reshape(-1)
@@ -93,20 +143,7 @@ def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref, tomb_ref,
     cand = jnp.concatenate([fwd, rev], axis=1)          # [bq, C]
     C = cand.shape[1]
 
-    # (a1) tombstoned candidates become PAD lanes *here*, upstream of the
-    # `need` mask — so stale edges to deleted rows are suppressed before
-    # the estimator exactly like PAD/in-beam lanes (they are excluded
-    # from n_scored, which is how tests observe the suppression).
-    c_dead = (cand != PAD_ID) & (jnp.take(
-        tomb, jnp.where(cand == PAD_ID, 0, cand).reshape(-1)
-    ).reshape(bq, C) > 0)
-    cand = jnp.where(c_dead, PAD_ID, cand)
-
-    # (b) suppression BEFORE scoring: PAD lanes and lanes already in the
-    # beam (merge would retire them as duplicates of columns 0..B-1 —
-    # scoring them first is the waste this kernel removes).
-    need = (cand != PAD_ID) & ~jnp.any(
-        cand[:, :, None] == beam_ids[:, None, :], axis=-1)
+    cand, need = _suppress(cand, beam_ids, tomb)
     nsc_ref[...] = jnp.sum(need, axis=1, dtype=jnp.int32).reshape(bq, 1)
 
     # (c) score surviving lanes, in chunks — the gathered fingerprint
@@ -115,8 +152,7 @@ def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref, tomb_ref,
     qcf = qc_ref[...].astype(jnp.float32)               # [bq, 1]
     words = words_ref[...]
     card = card_ref[...]                                # [n, 1] i32
-    if mxu:
-        q_bits = unpack_bits_int8(qw)                   # [bq, W·32] i8
+    q_bits = unpack_bits_int8(qw) if mxu else None      # [bq, W·32] i8
     sims_chunks = []
     for s in range(0, C, chunk):
         ids_c = cand[:, s:s + chunk]
@@ -127,36 +163,11 @@ def _hop_kernel(graph_ref, rev_ref, words_ref, card_ref, tomb_ref,
         cc = jnp.where(need_c,
                        jnp.take(card, safe, axis=0).reshape(bq, ch),
                        0).astype(jnp.float32)
-        if mxu:
-            # Tile-dense bit-plane matmul: chunk candidates × ALL tile
-            # queries on the MXU, keep the per-row diagonal.
-            c_bits = unpack_bits_int8(cw)               # [bq·ch, W·32]
-            inter3 = jax.lax.dot_general(
-                c_bits, q_bits, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.int32,
-            ).reshape(bq, ch, bq)
-            own = jax.lax.broadcasted_iota(jnp.int32, (bq, ch, bq), 0)
-            qid = jax.lax.broadcasted_iota(jnp.int32, (bq, ch, bq), 2)
-            inter = jnp.sum(jnp.where(own == qid, inter3, 0),
-                            axis=-1).astype(jnp.float32)
-        else:
-            inter = jnp.sum(
-                jax.lax.population_count(qw[:, None, :]
-                                         & cw.reshape(bq, ch, W)),
-                axis=-1).astype(jnp.float32)            # [bq, ch]
-        union = qcf + cc - inter
-        s_c = jnp.where(union > 0, inter / jnp.maximum(union, 1.0), 0.0)
-        sims_chunks.append(jnp.where(need_c, s_c, NEG_INF))
+        sims_chunks.append(
+            score_gathered_chunk(qw, qcf, q_bits, cw, cc, need_c, mxu=mxu))
     cand_sims = jnp.concatenate(sims_chunks, axis=1)
 
-    # (d) in-register merge over [beam | fwd | rev] — the reference
-    # column order, so tie-breaks land exactly where lax.top_k puts them.
-    top_sims, top_ids = select_topk(
-        jnp.concatenate([beam_sims, cand_sims], axis=1),
-        jnp.concatenate([beam_ids, cand], axis=1),
-        B, dedup_ids=True)
-    out_ids_ref[...] = jnp.where(top_sims == NEG_INF, PAD_ID, top_ids)
-    out_sims_ref[...] = top_sims
+    _merge(beam_ids, beam_sims, cand, cand_sims, out_ids_ref, out_sims_ref)
 
 
 @functools.partial(
@@ -213,3 +224,255 @@ def hop_pallas(graph_ids, rev_ids, words, card, tomb, q_words, q_card,
     )(graph_ids, rev_ids, words, card, tomb, q_words, q_card,
       beam_ids, beam_sims)
     return out_ids, out_sims, n_scored
+
+
+def _hop_kernel_dma(graph_hbm, rev_hbm, words_hbm, card_hbm, tomb_hbm,
+                    qw_ref, qc_ref, bi_ref, bs_ref,
+                    out_ids_ref, out_sims_ref, nsc_ref, dmab_ref, save_ref,
+                    tomb_s, bidx_s, adj_f, adj_r, cand_s, need_s,
+                    cw_buf, cc_buf, sem_t, sem_a, sem_c,
+                    *, chunk: int, mxu: bool, n_buffers: int):
+    """HBM-resident variant of :func:`_hop_kernel`.
+
+    The five table refs live in ANY/HBM memory and are never read as
+    whole-array values. Per tile the kernel stages (1) the tombstone
+    column once, (2) the beam rows' adjacency lists (one row-DMA per
+    live beam lane), then (3) runs the chunked scoring loop with each
+    chunk's surviving lanes' fingerprint+cardinality rows DMA'd into a
+    rotating ``n_buffers``-deep VMEM scratch buffer — chunk c+1's
+    copies are in flight while chunk c scores. Every DMA start/wait is
+    guarded by the *same* predicate as the suppression mask, so
+    suppressed lanes move zero bytes; the per-row fetched-lane counter
+    rides the loop carry under that predicate, making the emitted
+    ``dma_bytes`` accounting exact by construction.
+    """
+    beam_ids = bi_ref[...]                              # [bq, B] i32
+    beam_sims = bs_ref[...]                             # [bq, B] f32
+    bq, B = beam_ids.shape
+    kg = graph_hbm.shape[1]
+    kr = rev_hbm.shape[1]
+    W = words_hbm.shape[1]
+    row_bytes = W * 4                                   # fingerprint row
+
+    # (t) stage the tombstone column — one contiguous copy per tile.
+    cp = pltpu.make_async_copy(tomb_hbm, tomb_s, sem_t)
+    cp.start()
+    cp.wait()
+    tomb = tomb_s[...][:, 0]                            # [n] i32 (0|1)
+
+    beam_ids, beam_sims = _mask_dead_beam(beam_ids, beam_sims, tomb)
+
+    # (a) adjacency rows by per-lane DMA — PAD/dead beam lanes skipped.
+    # Ids go through scratch so the loop bodies read scalars from a ref.
+    bidx_s[...] = beam_ids.reshape(-1, 1)
+    n_lanes = bq * B
+
+    def _adj_copies(t):
+        v = bidx_s[t, 0]
+        ok = v != PAD_ID
+        row = jnp.where(ok, v, 0)
+        return ok, (pltpu.make_async_copy(graph_hbm.at[row], adj_f.at[t],
+                                          sem_a),
+                    pltpu.make_async_copy(rev_hbm.at[row], adj_r.at[t],
+                                          sem_a))
+
+    def _adj_start(t, _):
+        ok, (cf, cr) = _adj_copies(t)
+
+        @pl.when(ok)
+        def _():
+            cf.start()
+            cr.start()
+        return 0
+
+    def _adj_wait(t, _):
+        ok, (cf, cr) = _adj_copies(t)
+
+        @pl.when(ok)
+        def _():
+            cf.wait()
+            cr.wait()
+        return 0
+
+    jax.lax.fori_loop(0, n_lanes, _adj_start, 0)
+    jax.lax.fori_loop(0, n_lanes, _adj_wait, 0)
+
+    dead = beam_ids[:, :, None] == PAD_ID               # [bq, B, 1]
+    fwd = jnp.where(dead, PAD_ID,
+                    adj_f[...].reshape(bq, B, kg)).reshape(bq, B * kg)
+    rev = jnp.where(dead, PAD_ID,
+                    adj_r[...].reshape(bq, B, kr)).reshape(bq, B * kr)
+    cand = jnp.concatenate([fwd, rev], axis=1)          # [bq, C]
+    C = cand.shape[1]
+
+    cand, need = _suppress(cand, beam_ids, tomb)
+    nsc_ref[...] = jnp.sum(need, axis=1, dtype=jnp.int32).reshape(bq, 1)
+    cand_s[...] = cand
+    need_s[...] = need.astype(jnp.int32)
+
+    # (c) chunked scoring with double-buffered candidate-row DMA. The
+    # start/wait bodies rebuild identical copy descriptors under the
+    # identical `ok` guard, so every started copy is waited exactly once;
+    # per-slot semaphores keep chunk c+1's signals from satisfying chunk
+    # c's waits. Skipped buffer lanes keep whatever bytes a previous
+    # chunk left there — harmless, `score_gathered_chunk` masks by need.
+    qw = qw_ref[...]                                    # [bq, W] u32
+    qcf = qc_ref[...].astype(jnp.float32)               # [bq, 1]
+    q_bits = unpack_bits_int8(qw) if mxu else None
+    n_chunks = -(-C // chunk)
+
+    def _lane_copies(t, s, ch, slot):
+        i = t // ch
+        j = t % ch
+        ok = need_s[i, s + j] > 0
+        row = jnp.where(ok, cand_s[i, s + j], 0)
+        return i, ok, (
+            pltpu.make_async_copy(words_hbm.at[row],
+                                  cw_buf.at[slot, i, j], sem_c.at[slot]),
+            pltpu.make_async_copy(card_hbm.at[row],
+                                  cc_buf.at[slot, i, j], sem_c.at[slot]))
+
+    def start_chunk(ci, slot, cnt):
+        s = ci * chunk
+        ch = min(chunk, C - s)
+
+        def body(t, acc):
+            i, ok, (cw, cc) = _lane_copies(t, s, ch, slot)
+
+            @pl.when(ok)
+            def _():
+                cw.start()
+                cc.start()
+            return acc.at[i].add(ok.astype(jnp.int32))
+
+        return jax.lax.fori_loop(0, bq * ch, body, cnt)
+
+    def wait_chunk(ci, slot):
+        s = ci * chunk
+        ch = min(chunk, C - s)
+
+        def body(t, _):
+            _, ok, (cw, cc) = _lane_copies(t, s, ch, slot)
+
+            @pl.when(ok)
+            def _():
+                cw.wait()
+                cc.wait()
+            return 0
+
+        jax.lax.fori_loop(0, bq * ch, body, 0)
+
+    def score_chunk(ci, slot):
+        s = ci * chunk
+        ch = min(chunk, C - s)
+        need_c = need[:, s:s + ch]
+        cw = cw_buf[slot, :, :ch].reshape(bq * ch, W)
+        cc = jnp.where(need_c, cc_buf[slot, :, :ch, 0],
+                       0).astype(jnp.float32)
+        return score_gathered_chunk(qw, qcf, q_bits, cw, cc, need_c,
+                                    mxu=mxu)
+
+    fetched = jnp.zeros((bq,), jnp.int32)
+    sims_chunks = []
+    if n_buffers > 1:
+        fetched = start_chunk(0, 0, fetched)
+        for ci in range(n_chunks):
+            if ci + 1 < n_chunks:
+                fetched = start_chunk(ci + 1, (ci + 1) % n_buffers, fetched)
+            wait_chunk(ci, ci % n_buffers)
+            sims_chunks.append(score_chunk(ci, ci % n_buffers))
+    else:
+        # n_buffers == 1: no overlap — a degenerate tuning point kept
+        # for the autotuner's smallest-VMEM configurations.
+        for ci in range(n_chunks):
+            fetched = start_chunk(ci, 0, fetched)
+            wait_chunk(ci, 0)
+            sims_chunks.append(score_chunk(ci, 0))
+    cand_sims = jnp.concatenate(sims_chunks, axis=1)
+
+    # Byte accounting: fingerprint bytes only (the cardinality scalar
+    # rides the same guard but is excluded — W·4 per row is the traffic
+    # the memory hierarchy cares about). `fetched == n_scored` holds by
+    # construction; tests assert dma_bytes == n_scored·W·4.
+    dmab_ref[...] = (fetched * row_bytes).reshape(bq, 1)
+    save_ref[...] = ((C - fetched) * row_bytes).reshape(bq, 1)
+
+    _merge(beam_ids, beam_sims, cand, cand_sims, out_ids_ref, out_sims_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "chunk", "mxu", "n_buffers", "interpret"),
+)
+def hop_pallas_dma(graph_ids, rev_ids, words, card, tomb, q_words, q_card,
+                   beam_ids, beam_sims, *,
+                   block_q: int = 16, chunk: int = 64,
+                   mxu: bool = False, n_buffers: int = 2,
+                   interpret: bool = True):
+    """Memory-hierarchy-aware fused hop: HBM tables, per-chunk DMA.
+
+    Same contract as :func:`hop_pallas` (and bitwise-identical to it and
+    to ``ref.descent_hop_ref``), plus two extra outputs:
+    ``dma_bytes i32[q, 1]`` — fingerprint bytes actually DMA'd for this
+    hop per query — and ``bytes_saved i32[q, 1]`` — bytes the
+    suppressed lanes did *not* move vs the unfused ``beam·(kg+kr)``
+    gather. ``(block_q, chunk, n_buffers)`` come from
+    ``tune.hop_params`` via ops.py; VMEM scratch is
+    ``n_buffers·block_q·chunk·(W+1)·4`` bytes for the rotating row
+    buffers plus the adjacency/id staging (see README "Kernels").
+    """
+    q, B = beam_ids.shape
+    n, W = words.shape
+    kg, kr = graph_ids.shape[1], rev_ids.shape[1]
+    C = B * (kg + kr)
+    bq = min(block_q, q)
+    assert q % bq == 0, (q, bq)
+    nb = max(1, min(n_buffers, -(-C // chunk)))
+    grid = (q // bq,)
+
+    outs = pl.pallas_call(
+        functools.partial(_hop_kernel_dma, chunk=chunk, mxu=mxu,
+                          n_buffers=nb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),       # graph_ids
+            pl.BlockSpec(memory_space=pltpu.ANY),       # rev_ids
+            pl.BlockSpec(memory_space=pltpu.ANY),       # words
+            pl.BlockSpec(memory_space=pltpu.ANY),       # card
+            pl.BlockSpec(memory_space=pltpu.ANY),       # tomb
+            pl.BlockSpec((bq, W), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bq, B), lambda i: (i, 0)),
+            pl.BlockSpec((bq, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, B), lambda i: (i, 0)),
+            pl.BlockSpec((bq, B), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, B), jnp.int32),
+            jax.ShapeDtypeStruct((q, B), jnp.float32),
+            jax.ShapeDtypeStruct((q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((q, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.int32),              # tomb_s
+            pltpu.VMEM((bq * B, 1), jnp.int32),         # bidx_s
+            pltpu.VMEM((bq * B, kg), jnp.int32),        # adj_f
+            pltpu.VMEM((bq * B, kr), jnp.int32),        # adj_r
+            pltpu.VMEM((bq, C), jnp.int32),             # cand_s
+            pltpu.VMEM((bq, C), jnp.int32),             # need_s
+            pltpu.VMEM((nb, bq, min(chunk, C), W), jnp.uint32),  # cw_buf
+            pltpu.VMEM((nb, bq, min(chunk, C), 1), jnp.int32),   # cc_buf
+            pltpu.SemaphoreType.DMA,                    # sem_t
+            pltpu.SemaphoreType.DMA,                    # sem_a
+            pltpu.SemaphoreType.DMA((nb,)),             # sem_c
+        ],
+        interpret=interpret,
+    )(graph_ids, rev_ids, words, card, tomb, q_words, q_card,
+      beam_ids, beam_sims)
+    return outs

@@ -1,13 +1,16 @@
-"""jit'd public wrapper for the frh_minhash kernel."""
+"""jit'd public wrapper for the frh_minhash kernel.
+
+Interpret-vs-compiled resolves per call through
+``repro.kernels.config`` (``$REPRO_PALLAS_INTERPRET``).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import config
 from repro.kernels.frh_minhash.frh_minhash import minhash_pallas
 from repro.types import PAD_ID, Dataset
-
-INTERPRET = True  # flipped to False on real TPU deployments
 
 
 def minhash(padded_items, seeds, b: int, block_n: int = 256):
@@ -21,7 +24,7 @@ def minhash(padded_items, seeds, b: int, block_n: int = 256):
              jnp.full((pad, P), PAD_ID, jnp.int32)], axis=0)
     out = minhash_pallas(jnp.asarray(padded_items),
                          tuple(int(s) for s in seeds), b,
-                         block_n=bn, interpret=INTERPRET)
+                         block_n=bn, interpret=config.interpret_mode())
     return out[:n]
 
 

@@ -17,9 +17,12 @@ matrix in HBM:
   no sort, so everything lowers to plain VPU reduce/eltwise ops).
 
 VMEM working set per step (bq=128, bd=512, B=1024, k≤64):
-q bits 128·1024 + d bits 512·1024 int8 ≈ 0.66 MB, sims 128·512 f32 = 0.25 MB,
-running top-k 2·128·64 ≈ 64 KB — comfortably inside 16 MB VMEM with double
-buffering; matmul dims (128, 1024, 512) are MXU-aligned.
+q bits 128·1024 + d bits 512·1024 int8 ≈ 0.66 MB; the interaction is
+scored in bounded [bq, score_chunk] tiles (128·128 f32 = 64 KB — shared
+shape with the descent hop's scoring loop, so the [bq, bd] similarity
+tile never materializes at once), running top-k 2·128·64 ≈ 64 KB —
+comfortably inside 16 MB VMEM with double buffering; matmul dims
+(128, 1024, score_chunk) stay MXU-aligned for the default chunk.
 """
 from __future__ import annotations
 
@@ -29,13 +32,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.scoring import jaccard_bitplane_tile
 from repro.knn.topk import select_topk
 from repro.types import NEG_INF, PAD_ID
 
 
 def _knn_kernel(q_bits_ref, q_card_ref, q_ids_ref,
                 d_bits_ref, d_card_ref, d_ids_ref,
-                out_ids_ref, out_sims_ref, *, k: int):
+                out_ids_ref, out_sims_ref, *, k: int, chunk: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -43,42 +47,61 @@ def _knn_kernel(q_bits_ref, q_card_ref, q_ids_ref,
         out_sims_ref[...] = jnp.full_like(out_sims_ref, NEG_INF)
         out_ids_ref[...] = jnp.full_like(out_ids_ref, PAD_ID)
 
-    # |A∩B| as an int8 bit-plane matmul (MXU), f32 epilogue on VPU.
-    inter = jax.lax.dot_general(
-        q_bits_ref[...], d_bits_ref[...],
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    ).astype(jnp.float32)                                   # [bq, bd]
+    q_bits = q_bits_ref[...]                                # [bq, B] i8
     q_card = q_card_ref[...].astype(jnp.float32)            # [bq, 1]
-    d_card = d_card_ref[...].astype(jnp.float32)            # [bd, 1]
-    union = q_card + d_card.T - inter
-    sims = jnp.where(union > 0, inter / jnp.maximum(union, 1.0), 0.0)
-
     q_ids = q_ids_ref[...]                                  # [bq, 1] i32
+    d_bits = d_bits_ref[...]                                # [bd, B] i8
+    d_card = d_card_ref[...]                                # [bd, 1]
     d_ids = d_ids_ref[...]                                  # [bd, 1] i32
-    valid = ((d_ids.T != PAD_ID) & (q_ids != PAD_ID) & (q_ids != d_ids.T))
-    sims = jnp.where(valid, sims, NEG_INF)
+    bd = d_bits.shape[0]
 
-    # Merge the block into the running top-k carried by the output block.
-    cand_sims = jnp.concatenate([out_sims_ref[...], sims], axis=1)
-    cand_ids = jnp.concatenate(
-        [out_ids_ref[...], jnp.broadcast_to(d_ids.T, sims.shape)], axis=1)
-    new_sims, new_ids = select_topk(cand_sims, cand_ids, k)
-    out_sims_ref[...] = new_sims
-    out_ids_ref[...] = new_ids
+    # Score the database block in bounded [bq, chunk] tiles (the same
+    # bounded-VMEM scoring-loop shape as the descent hop — the [bq, bd]
+    # interaction never materializes at once) and stream each tile into
+    # the running top-k carried by the output block. Chunk-wise merges
+    # are bitwise-equal to one block-wide merge: the running set is
+    # concatenated first, so equal-sim ties keep resolving to the
+    # earliest database column, exactly as the single merge would.
+    for s in range(0, bd, chunk):
+        e = min(s + chunk, bd)
+        d_bits_c = d_bits[s:e]                              # [ch, B] i8
+        d_card_c = d_card[s:e].astype(jnp.float32)
+        d_ids_c = d_ids[s:e]                                # [ch, 1] i32
+        sims = jaccard_bitplane_tile(q_bits, q_card,
+                                     d_bits_c, d_card_c.T)  # [bq, ch]
+        valid = ((d_ids_c.T != PAD_ID) & (q_ids != PAD_ID)
+                 & (q_ids != d_ids_c.T))
+        sims = jnp.where(valid, sims, NEG_INF)
+        cand_sims = jnp.concatenate([out_sims_ref[...], sims], axis=1)
+        cand_ids = jnp.concatenate(
+            [out_ids_ref[...],
+             jnp.broadcast_to(d_ids_c.T, sims.shape)], axis=1)
+        new_sims, new_ids = select_topk(cand_sims, cand_ids, k)
+        # Normalize filler slots to PAD before the next re-merge: in a
+        # round where every remaining lane is −inf, select_topk falls
+        # back to column 0 — which in a RE-merge is the running set's
+        # (already-selected, killed) top entry, so without this a row
+        # with fewer than k valid neighbors would duplicate its best id
+        # into the filler slots instead of PAD-padding them the way the
+        # one-shot merge (whose column 0 is an init PAD) and ref do.
+        out_sims_ref[...] = new_sims
+        out_ids_ref[...] = jnp.where(new_sims == NEG_INF, PAD_ID, new_ids)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "block_q", "block_d", "interpret"),
+    static_argnames=("k", "block_q", "block_d", "score_chunk",
+                     "interpret"),
 )
 def knn_pallas(q_bits, q_card, q_ids, d_bits, d_card, d_ids, k: int,
                block_q: int = 128, block_d: int = 512,
-               interpret: bool = True):
+               score_chunk: int = 128, interpret: bool = True):
     """Top-k database neighbors per query row (see ref.knn_ref).
 
     q_bits int8[nq, B] {0,1} bit-planes; q_card/q_ids int32[nq, 1];
     d_* likewise. nq % block_q == nd % block_d == 0 (ops.py pads).
+    ``score_chunk`` bounds the per-round interaction tile (bitwise
+    invisible; need not divide ``block_d``).
     """
     nq, B = q_bits.shape
     nd = d_bits.shape[0]
@@ -88,7 +111,7 @@ def knn_pallas(q_bits, q_card, q_ids, d_bits, d_card, d_ids, k: int,
     grid = (nq // bq, nd // bd)
 
     out_ids, out_sims = pl.pallas_call(
-        functools.partial(_knn_kernel, k=k),
+        functools.partial(_knn_kernel, k=k, chunk=min(score_chunk, bd)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bq, B), lambda i, j: (i, 0)),

@@ -19,7 +19,12 @@ and invalid values fail loudly instead of silently dropping a flag):
   shard slot arrays, cross-shard merge at slot release);
 * ``--kernel`` — scorer: the fused Pallas descent-scoring hop
   (``repro/kernels/descent_score``; identical results, candidates
-  deduped before the estimator runs).
+  deduped before the estimator runs). Add ``--dma`` for the
+  HBM-resident placement: tables stay in HBM and only surviving
+  candidate lanes' fingerprint rows are DMA'd into VMEM per scoring
+  chunk (double-buffered; identical results again) — the per-query
+  byte traffic and the traffic the suppressed-lane skip avoided are
+  reported on a ``[serve] descent:`` line.
 
 Lifecycle flags (``repro/lifecycle/``): ``--churn M`` deletes M users
 and profile-updates M more online before the query wave (both picked
@@ -90,6 +95,11 @@ def main(argv=None):
     ap.add_argument("--kernel", action="store_true",
                     help="fused Pallas descent-scoring hop "
                          "(kernels/descent_score; identical results)")
+    ap.add_argument("--dma", action="store_true",
+                    help="with --kernel: HBM-resident tables + per-"
+                         "chunk candidate-row DMA (suppressed lanes "
+                         "skipped at the DMA level; identical results, "
+                         "reports bytes moved/saved)")
     ap.add_argument("--insert", type=int, default=0,
                     help="insert this many users online before querying")
     ap.add_argument("--churn", type=int, default=0,
@@ -165,7 +175,8 @@ def main(argv=None):
     qc = QueryConfig(
         k=args.k, beam=args.beam, hops=args.hops, max_wave=args.max_wave,
         shards=args.shards, continuous=args.continuous, slots=args.slots,
-        kernel=args.kernel, ttl=args.ttl, repair_every=args.repair_every,
+        kernel=args.kernel, dma=args.dma,
+        ttl=args.ttl, repair_every=args.repair_every,
         admission=args.admission, max_pending=args.max_pending,
         adaptive=args.adaptive, cache=args.cache,
         resident_configs=args.resident_configs,
@@ -282,6 +293,18 @@ def _serve(args, engine, index):
           f"p50 {stats['p50_latency_s'] * 1e3:.1f}ms | "
           f"p95 {stats['p95_latency_s'] * 1e3:.1f}ms | "
           f"recall@{args.k} vs brute force {recall:.3f}")
+    if "descent" in stats:
+        d = stats["descent"]
+        n_served = max(stats["served"], 1)
+        line = (f"[serve] descent: {d['scored_lanes']} lanes scored "
+                f"({d['scored_lanes'] / n_served:.0f}/query)")
+        if d["dma_bytes"]:
+            moved, saved = d["dma_bytes"], d["bytes_saved"]
+            line += (f" | dma {moved / 1e6:.2f} MB moved "
+                     f"({moved / n_served / 1e3:.1f} KB/query), "
+                     f"{saved / 1e6:.2f} MB skipped "
+                     f"({saved / (moved + saved):.0%} of gather traffic)")
+        print(line)
     if args.admission == "slo":
         print(f"[serve] slo: served {stats['served']}, "
               f"shed {stats['shed']} "

@@ -101,7 +101,12 @@ class QueryConfig:
     slots: int = 32            # in-flight capacity in continuous mode
     kernel: bool = False       # fused Pallas descent-scoring hop
                                # (kernels/descent_score; bitwise-identical
-                               # results, interpret mode off-TPU)
+                               # results, interpret mode per
+                               # kernels/config.py)
+    dma: bool = False          # with kernel: HBM-resident tables +
+                               # per-chunk candidate-row DMA (the
+                               # "pallas_dma" scorer; bitwise-identical,
+                               # reports dma_bytes/bytes_saved)
     ttl: int = 0               # lifecycle: ticks before an untouched row
                                # expires (0 = never)
     repair_every: int = 0      # lifecycle: churn-repair cadence in ticks
@@ -124,10 +129,16 @@ class QueryConfig:
 
     def spec(self) -> PlanSpec:
         """Map the flag pile onto a validated plan on the three axes."""
+        if self.dma and not self.kernel:
+            raise ValueError(
+                "dma selects the HBM-resident placement OF the fused "
+                "kernel hop; it needs kernel=True")
+        scorer = ("pallas_dma" if self.dma
+                  else "pallas" if self.kernel else "jnp")
         return PlanSpec(
             placement=self.shards,
             batching="continuous" if self.continuous else "wave",
-            scorer="pallas" if self.kernel else "jnp",
+            scorer=scorer,
             k=self.k, beam=self.beam, hops=self.hops,
             max_wave=self.max_wave, slots=self.slots,
             seeds_per_config=self.seeds_per_config,
@@ -289,6 +300,11 @@ class QueryEngine:
             "shards": self.qc.shards,
             "refreshes": self.n_refreshes,
         }
+        if self.plan.spec.kernel:
+            # Memory-hierarchy accounting from the fused hop (cumulative
+            # over the plan's lifetime; the DMA scorer fills the byte
+            # counters, the VMEM scorer only scored_lanes).
+            stats["descent"] = dict(self.plan.descent_stats)
         if self.plan.cache is not None:
             stats["cache"] = self.plan.cache.stats()
         if self.rebalance.active:

@@ -11,8 +11,10 @@ sharded wave) a plan is the CROSS-PRODUCT of three independent axes:
 * **batching** — ``"wave"`` (closed batches, one jitted program per
   wave capacity) or ``"continuous"`` (slot scheduler from ``sched/``,
   streaming admission, per-slot hop budgets);
-* **scorer** — ``"jnp"`` (unfused reference hop) or ``"pallas"`` (the
-  fused ``kernels/descent_score`` hop; bitwise-identical results).
+* **scorer** — ``"jnp"`` (unfused reference hop), ``"pallas"`` (the
+  fused ``kernels/descent_score`` hop, tables staged through blocked
+  VMEM), or ``"pallas_dma"`` (same fused hop with HBM-resident tables
+  and per-chunk candidate-row DMA); all three bitwise-identical.
 
 Any combination is a valid plan; every axis composes with every other
 because the hop itself is row-independent (``query/search.py``) — the
@@ -59,7 +61,7 @@ from repro.sched import trace
 from repro.types import NEG_INF, PAD_ID
 
 BATCHINGS = ("wave", "continuous")
-SCORERS = ("jnp", "pallas")
+SCORERS = ("jnp", "pallas", "pallas_dma")
 
 
 def _csr_subset(items: np.ndarray, offsets: np.ndarray,
@@ -84,7 +86,7 @@ class PlanSpec:
 
     placement: int = 1          # shards (1 = single device)
     batching: str = "wave"      # "wave" | "continuous"
-    scorer: str = "jnp"         # "jnp" | "pallas"
+    scorer: str = "jnp"         # "jnp" | "pallas" | "pallas_dma"
     k: int = 10
     beam: int = 32
     hops: int = 3
@@ -155,7 +157,13 @@ class PlanSpec:
 
     @property
     def kernel(self) -> bool:
-        return self.scorer == "pallas"
+        return self.scorer in ("pallas", "pallas_dma")
+
+    @property
+    def dma(self) -> bool:
+        """HBM-resident table placement with per-chunk candidate DMA
+        (``kernels/descent_score/ops.descent_hop(dma=True)``)."""
+        return self.scorer == "pallas_dma"
 
     @property
     def key(self) -> tuple:
@@ -252,6 +260,16 @@ class DescentPlan:
         self._sharded = None    # ShardedDescent (delta-synced)
         self._slots: Optional[_SlotState] = None
         self.n_ticks = 0
+        # Memory-hierarchy accounting for kernel scorers, accumulated
+        # over every hop this plan ran (real query rows only — pad rows
+        # and inactive slots are masked out before they land here).
+        # ``scored_lanes`` counts candidate lanes that survived
+        # suppression; for the DMA scorer ``dma_bytes`` is the
+        # fingerprint traffic actually moved HBM→VMEM and
+        # ``bytes_saved`` the traffic the suppressed-lane skip avoided.
+        # The jnp scorer contributes zeros (it moves no explicit DMA).
+        self.descent_stats = {"scored_lanes": 0, "dma_bytes": 0,
+                              "bytes_saved": 0, "hop_queries": 0}
         # Fingerprint-keyed result cache (query/cache.py), flushed on
         # journal-visible index mutations — exact hits serve without a
         # descent, bitwise-identically to one.
@@ -259,6 +277,18 @@ class DescentPlan:
 
     def describe(self) -> str:
         return self.spec.describe()
+
+    def _note_stats(self, stats) -> None:
+        """Fold one program's hop accounting (i32[rows, 3] of
+        ``(n_scored, dma_bytes, bytes_saved)``, already masked to real
+        rows) into :attr:`descent_stats`."""
+        s = np.asarray(stats, dtype=np.int64)
+        if s.size == 0:
+            return
+        self.descent_stats["scored_lanes"] += int(s[:, 0].sum())
+        self.descent_stats["dma_bytes"] += int(s[:, 1].sum())
+        self.descent_stats["bytes_saved"] += int(s[:, 2].sum())
+        self.descent_stats["hop_queries"] += int(s.shape[0])
 
     # -- device state ------------------------------------------------------
 
@@ -454,16 +484,19 @@ class DescentPlan:
         qseeds = np.full((qcap, seeds.shape[1]), PAD_ID, dtype=np.int32)
         qseeds[:qn] = seeds
         if spec.placement > 1:
-            ids, sims = self._sync_sharded().descend(
+            sd = self._sync_sharded()
+            ids, sims = sd.descend(
                 qw, qcard, qseeds, k=k, beam=beam, hops=hops,
-                kernel=spec.kernel, tag=self.key)
+                kernel=spec.kernel, dma=spec.dma, tag=self.key)
+            self._note_stats(sd.last_hop_stats[:qn])
         else:
             graph_ids, rev_ids, words, card, tomb = self._sync_single()
-            ids, sims = batched_descent(
+            ids, sims, stats = batched_descent(
                 graph_ids, rev_ids, words, card,
                 jnp.asarray(qw), jnp.asarray(qcard), jnp.asarray(qseeds),
                 k=k, beam=beam, hops=hops, kernel=spec.kernel,
-                tag=self.key, tomb=tomb)
+                dma=spec.dma, tag=self.key, tomb=tomb)
+            self._note_stats(np.asarray(stats)[:qn])
         return np.asarray(ids)[:qn], np.asarray(sims)[:qn]
 
     def query_batch(self, profiles, k: int | None = None,
@@ -743,19 +776,24 @@ class DescentPlan:
         if hop_active.any():
             if spec.placement > 1:
                 sd = self._sharded
-                st.beam_ids, st.beam_sims, changed = shard_slot_hop(
-                    *sd._dev[:4], st.q_words, st.q_card,
-                    st.beam_ids, st.beam_sims, jnp.asarray(hop_active),
-                    kernel=spec.kernel, tag=self.key, l_tomb=sd._dev[5])
+                st.beam_ids, st.beam_sims, changed, hop_stats = \
+                    shard_slot_hop(
+                        *sd._dev[:4], st.q_words, st.q_card,
+                        st.beam_ids, st.beam_sims,
+                        jnp.asarray(hop_active), kernel=spec.kernel,
+                        dma=spec.dma, tag=self.key, l_tomb=sd._dev[5])
             else:
                 graph_ids, rev_ids, words, card, tomb = \
                     self._sync_single()
-                st.beam_ids, st.beam_sims, changed = slot_hop(
+                st.beam_ids, st.beam_sims, changed, hop_stats = slot_hop(
                     graph_ids, rev_ids, words, card, st.q_words,
                     st.q_card, st.beam_ids, st.beam_sims,
                     jnp.asarray(hop_active), kernel=spec.kernel,
-                    tag=self.key, tomb=tomb)
+                    dma=spec.dma, tag=self.key, tomb=tomb)
             changed = np.asarray(changed)
+            # The compiled tick hops EVERY slot row (static shapes);
+            # only count the rows the host actually considers active.
+            self._note_stats(np.asarray(hop_stats)[hop_active])
             st.hops_done[hop_active] += 1
             self.n_ticks += 1
             if spec.adaptive > 0:

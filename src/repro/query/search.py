@@ -56,7 +56,7 @@ def descent_init(words, card, q_words, q_card, seed_ids, *, beam: int,
 
 def descent_step(graph_ids, rev_ids, words, card,
                  q_words, q_card, beam_ids, beam_sims, *,
-                 kernel: bool = False, tomb=None):
+                 kernel: bool = False, dma: bool = False, tomb=None):
     """One descent hop: expand every query's beam by its friends-of-friends.
 
     Gathers forward + reverse neighbors of the current beam, scores them
@@ -67,31 +67,44 @@ def descent_step(graph_ids, rev_ids, words, card,
     hop while fresh admissions re-init other rows (``slot_hop``), with
     results identical to running the whole wave in lockstep.
 
-    ``kernel`` is static: False runs the unfused jnp reference, True the
-    fused Pallas hop — bitwise-identical (ids and sims) either way.
+    ``kernel``/``dma`` are static: kernel=False runs the unfused jnp
+    reference, kernel=True the fused Pallas hop, and dma=True on top
+    selects the HBM-resident placement with per-chunk candidate-row
+    DMA — bitwise-identical (ids and sims) all three ways.
     ``tomb`` (bool[n] or None) suppresses tombstoned beam/candidate
-    lanes before scoring, identically in both implementations.
+    lanes before scoring, identically in every implementation.
+
+    Returns ``(beam_ids, beam_sims, hop_stats)`` where ``hop_stats`` is
+    i32[q, 3] — per-query ``(n_scored, dma_bytes, bytes_saved)`` for
+    this hop. The jnp reference always scores every lane and moves no
+    DMA, so its stats are identically zero; the VMEM kernel fills only
+    ``n_scored``; the DMA kernel fills all three.
     """
     if kernel:
-        return ds_ops.descent_hop(graph_ids, rev_ids, words, card,
-                                  q_words, q_card, beam_ids, beam_sims,
-                                  tomb=tomb)
-    return ds_ref.descent_hop_ref(graph_ids, rev_ids, words, card,
-                                  q_words, q_card, beam_ids, beam_sims,
-                                  tomb=tomb)
+        ids, sims, nsc, dmab, saved = ds_ops.descent_hop(
+            graph_ids, rev_ids, words, card, q_words, q_card,
+            beam_ids, beam_sims, tomb=tomb, dma=dma, with_counts=True)
+        return ids, sims, jnp.stack([nsc, dmab, saved], axis=1)
+    ids, sims = ds_ref.descent_hop_ref(graph_ids, rev_ids, words, card,
+                                       q_words, q_card, beam_ids,
+                                       beam_sims, tomb=tomb)
+    return ids, sims, jnp.zeros((beam_ids.shape[0], 3), jnp.int32)
 
 
 def descent_kernel(graph_ids, rev_ids, words, card,
                    q_words, q_card, seed_ids, *,
                    k: int, beam: int, hops: int, kernel: bool = False,
-                   tag=None, tomb=None):
+                   dma: bool = False, tag=None, tomb=None):
     """Beam search over the index graph for a wave of queries.
 
     graph_ids int32[n, kg], rev_ids int32[n, r]: forward/reverse adjacency.
     words uint32[n, W], card int32[n]: index fingerprints.
     q_words uint32[q, W], q_card int32[q]: query fingerprints.
     seed_ids int32[q, S]: routed seed candidates (PAD_ID padded).
-    Returns (ids int32[q, k], sims float32[q, k]), sim-descending.
+    Returns (ids int32[q, k], sims float32[q, k], stats int32[q, 3]),
+    sims sim-descending; ``stats`` accumulates per-hop
+    ``(n_scored, dma_bytes, bytes_saved)`` over all ``hops`` (zeros for
+    the jnp path — see :func:`descent_step`).
 
     Composed from :func:`descent_init` + ``hops`` × :func:`descent_step`
     (the continuous path runs the same pieces tick-by-tick). Unjitted so
@@ -103,23 +116,28 @@ def descent_kernel(graph_ids, rev_ids, words, card,
     """
     if tag is not None:
         trace.bump(("query_wave", tag, q_words.shape[0],
-                    graph_ids.shape[0], k, beam, hops, kernel))
+                    graph_ids.shape[0], k, beam, hops, kernel, dma))
     beam_ids, beam_sims = descent_init(
         words, card, q_words, q_card, seed_ids, beam=beam, tomb=tomb)
+    acc = jnp.zeros((beam_ids.shape[0], 3), jnp.int32)
 
     def hop(state, _):
-        return descent_step(graph_ids, rev_ids, words, card,
-                            q_words, q_card, *state, kernel=kernel,
-                            tomb=tomb), None
+        bi, bs, acc = state
+        nids, nsims, st = descent_step(graph_ids, rev_ids, words, card,
+                                       q_words, q_card, bi, bs,
+                                       kernel=kernel, dma=dma, tomb=tomb)
+        return (nids, nsims, acc + st), None
 
-    (beam_ids, beam_sims), _ = jax.lax.scan(
-        hop, (beam_ids, beam_sims), None, length=hops)
-    return merge_topk(beam_ids, beam_sims, k)
+    (beam_ids, beam_sims, acc), _ = jax.lax.scan(
+        hop, (beam_ids, beam_sims, acc), None, length=hops)
+    ids, sims = merge_topk(beam_ids, beam_sims, k)
+    return ids, sims, acc
 
 
 batched_descent = functools.partial(
     jax.jit,
-    static_argnames=("k", "beam", "hops", "kernel", "tag"))(descent_kernel)
+    static_argnames=("k", "beam", "hops", "kernel", "dma",
+                     "tag"))(descent_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("beam", "tag"),
@@ -150,36 +168,42 @@ def slot_admit(words, card, new_words, new_card, new_seeds, slot_idx,
             beam_sims.at[slot_idx].set(init_sims, mode="drop"))
 
 
-@functools.partial(jax.jit, static_argnames=("kernel", "tag"),
+@functools.partial(jax.jit, static_argnames=("kernel", "dma", "tag"),
                    donate_argnames=("beam_ids", "beam_sims"))
 def slot_hop(graph_ids, rev_ids, words, card,
              q_words, q_card, beam_ids, beam_sims, active, *,
-             kernel: bool = False, tag=None, tomb=None):
+             kernel: bool = False, dma: bool = False, tag=None,
+             tomb=None):
     """One continuous-batching tick over the fixed slot array.
 
     All slot-axis inputs have the static capacity ``n_slots`` so one
-    program compiles per (n_slots, beam, index capacity, kernel) and is
-    reused for every tick regardless of how requests stream in (asserted
-    by the compile-count regression via ``sched.trace``). ``active``
-    rows take one :func:`descent_step` hop (fused Pallas hop when
-    ``kernel``); inactive rows pass through untouched (their state is
-    garbage the host ignores).
+    program compiles per (n_slots, beam, index capacity, kernel, dma)
+    and is reused for every tick regardless of how requests stream in
+    (asserted by the compile-count regression via ``sched.trace``).
+    ``active`` rows take one :func:`descent_step` hop (fused Pallas hop
+    when ``kernel``, HBM/DMA placement when also ``dma``); inactive
+    rows pass through untouched (their state is garbage the host
+    ignores).
 
-    Returns (beam_ids, beam_sims, changed) where ``changed[i]`` is False
-    when row i's beam reached a fixed point this hop — since the hop is
-    a deterministic function of the beam, an unchanged beam can never
-    change again, so the host may complete the request early without
-    affecting its result (exact wave equivalence).
+    Returns (beam_ids, beam_sims, changed, stats) where ``changed[i]``
+    is False when row i's beam reached a fixed point this hop — since
+    the hop is a deterministic function of the beam, an unchanged beam
+    can never change again, so the host may complete the request early
+    without affecting its result (exact wave equivalence). ``stats`` is
+    the hop's raw i32[n_slots, 3] ``(n_scored, dma_bytes, bytes_saved)``
+    — the kernel runs every slot row, so the HOST must mask rows by its
+    own active set before accumulating (inactive rows still score).
     """
     trace.bump(("query_slot_hop", tag, beam_ids.shape[0],
-                beam_ids.shape[1], graph_ids.shape[0], kernel))
-    nids, nsims = descent_step(graph_ids, rev_ids, words, card,
-                               q_words, q_card, beam_ids, beam_sims,
-                               kernel=kernel, tomb=tomb)
+                beam_ids.shape[1], graph_ids.shape[0], kernel, dma))
+    nids, nsims, stats = descent_step(graph_ids, rev_ids, words, card,
+                                      q_words, q_card, beam_ids,
+                                      beam_sims, kernel=kernel, dma=dma,
+                                      tomb=tomb)
     changed = jnp.any(nids != beam_ids, axis=1) & active
     out_ids = jnp.where(active[:, None], nids, beam_ids)
     out_sims = jnp.where(active[:, None], nsims, beam_sims)
-    return out_ids, out_sims, changed
+    return out_ids, out_sims, changed, stats
 
 
 @functools.partial(jax.jit, static_argnames=("k", "tag"),
@@ -255,11 +279,12 @@ def shard_slot_admit(l_words, l_card, new_words, new_card, new_seeds,
             beam_ids, beam_sims)
 
 
-@functools.partial(jax.jit, static_argnames=("kernel", "tag"),
+@functools.partial(jax.jit, static_argnames=("kernel", "dma", "tag"),
                    donate_argnames=("beam_ids", "beam_sims"))
 def shard_slot_hop(l_graph, l_rev, l_words, l_card, q_words, q_card,
                    beam_ids, beam_sims, active, *,
-                   kernel: bool = False, tag=None, l_tomb=None):
+                   kernel: bool = False, dma: bool = False, tag=None,
+                   l_tomb=None):
     """One continuous tick over every shard's fixed slot array.
 
     The per-shard hop is :func:`descent_step` vmapped over the shard
@@ -268,24 +293,30 @@ def shard_slot_hop(l_graph, l_rev, l_words, l_card, q_words, q_card,
     when slot i's beam reached a fixed point on EVERY shard — each
     shard's hop is a deterministic function of its own beam, so a slot
     whose beams are all unchanged can never change again and the host
-    may release it early with wave-identical results.
+    may release it early with wave-identical results. ``stats`` is the
+    raw per-slot hop accounting summed over shards (i32[n_slots, 3] of
+    ``(n_scored, dma_bytes, bytes_saved)``); the host masks rows by its
+    own active set before accumulating, as in :func:`slot_hop`.
     """
     trace.bump(("query_shard_slot_hop", tag, l_graph.shape[0],
                 beam_ids.shape[1], beam_ids.shape[2], l_graph.shape[1],
-                kernel))
+                kernel, dma))
     if l_tomb is None:
         l_tomb = jnp.zeros(l_words.shape[:2], bool)
 
     def per_shard(g, r, w, c, t, bids, bsims):
-        nids, nsims = descent_step(g, r, w, c, q_words, q_card,
-                                   bids, bsims, kernel=kernel, tomb=t)
+        nids, nsims, stats = descent_step(g, r, w, c, q_words, q_card,
+                                          bids, bsims, kernel=kernel,
+                                          dma=dma, tomb=t)
         changed = jnp.any(nids != bids, axis=1)
         return (jnp.where(active[:, None], nids, bids),
-                jnp.where(active[:, None], nsims, bsims), changed)
+                jnp.where(active[:, None], nsims, bsims), changed,
+                stats)
 
-    beam_ids, beam_sims, changed = jax.vmap(per_shard)(
+    beam_ids, beam_sims, changed, stats = jax.vmap(per_shard)(
         l_graph, l_rev, l_words, l_card, l_tomb, beam_ids, beam_sims)
-    return beam_ids, beam_sims, jnp.any(changed, axis=0) & active
+    return (beam_ids, beam_sims, jnp.any(changed, axis=0) & active,
+            jnp.sum(stats, axis=0))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "tag"))
@@ -313,14 +344,33 @@ def shard_slot_topk(l2g, beam_ids, beam_sims, *, k: int, tag=None):
     return merge_topk(flat_ids, flat_sims, k)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _exact_block(words, card, tomb, q_words, q_card, k: int):
-    trace.bump(("exact_block", words.shape[0], q_words.shape[0], k))
-    sims = jaccard_pairwise_auto(q_words, q_card, words, card)
-    sims = jnp.where(tomb[None, :], NEG_INF, sims)
-    top_sims, top_ids = jax.lax.top_k(sims, k)
-    top_ids = jnp.where(top_sims == NEG_INF, PAD_ID, top_ids.astype(jnp.int32))
-    return top_ids, top_sims
+@functools.partial(jax.jit, static_argnames=("k", "dchunk"))
+def _exact_block(words, card, tomb, q_words, q_card, k: int,
+                 dchunk: int = 512):
+    # Database axis is streamed in dchunk-column tiles so the pairwise
+    # interaction is bounded at [block, dchunk] instead of the implicit
+    # [block, n] the one-shot top_k needed — the same chunked-scoring
+    # shape as the kernels. Streaming merge_topk is bitwise-equal to the
+    # global top_k: the running set is concatenated first, so equal-sim
+    # ties keep resolving to the earliest database id, and filler slots
+    # come out PAD either way.
+    trace.bump(("exact_block", words.shape[0], q_words.shape[0], k,
+                dchunk))
+    n = words.shape[0]
+    q = q_words.shape[0]
+    ids = jnp.full((q, k), PAD_ID, jnp.int32)
+    sims = jnp.full((q, k), NEG_INF, jnp.float32)
+    for s in range(0, n, dchunk):
+        e = min(s + dchunk, n)
+        c_sims = jaccard_pairwise_auto(q_words, q_card,
+                                       words[s:e], card[s:e])
+        c_sims = jnp.where(tomb[s:e][None, :], NEG_INF, c_sims)
+        c_ids = jnp.broadcast_to(
+            jnp.arange(s, e, dtype=jnp.int32)[None, :], c_sims.shape)
+        ids, sims = merge_topk(
+            jnp.concatenate([ids, c_ids], axis=1),
+            jnp.concatenate([sims, c_sims], axis=1), k)
+    return ids, sims
 
 
 def exact_knn(words, card, q_words, q_card, k: int, block: int = 256,

@@ -590,16 +590,21 @@ class ShardedDescent:
 
     def descend(self, q_words, q_card, seeds: np.ndarray, *,
                 k: int, beam: int, hops: int, kernel: bool = False,
-                tag=None):
+                dma: bool = False, tag=None):
         """Route-seeded descent on every shard + cross-shard top-k merge.
 
         ``seeds`` are global ids (router output, PAD padded); ``beam`` is
         the single-device frontier width, divided among shards (with
         ``self.oversample`` slack, floored at k). ``kernel`` selects the
-        fused Pallas hop (bitwise-identical results). ``tag`` (a
+        fused Pallas hop, ``dma`` its HBM-resident placement
+        (bitwise-identical results either way). ``tag`` (a
         hashable plan key) lands in the jit-trace counter so
         ``sched.trace.compile_count`` can assert compile-once per plan.
         Returns (ids int32[q, k], sims float32[q, k]) in global ids.
+        As a side effect, ``self.last_hop_stats`` holds this call's
+        per-query ``(n_scored, dma_bytes, bytes_saved)`` i32[q, 3],
+        summed over ALIVE shards (the plan reads it right after the
+        call to feed serving stats).
         """
         l_seeds = jnp.asarray(self.shard_seeds(seeds))
         shard_beam = self.shard_beam(beam, k)
@@ -607,11 +612,13 @@ class ShardedDescent:
                 l_seeds)
         if self.mesh is not None:
             program = _mesh_program(self.mesh, k=k, beam=shard_beam,
-                                    hops=hops, kernel=kernel, tag=tag)
-            ids, sims = program(*args)
+                                    hops=hops, kernel=kernel, dma=dma,
+                                    tag=tag)
+            ids, sims, stats = program(*args)
         else:
-            ids, sims = _vmapped_descent(*args, k=k, beam=shard_beam,
-                                         hops=hops, kernel=kernel, tag=tag)
+            ids, sims, stats = _vmapped_descent(
+                *args, k=k, beam=shard_beam, hops=hops, kernel=kernel,
+                dma=dma, tag=tag)
         if self.dead.any():
             # Belt and braces on top of the seed drop: a dead shard
             # contributes nothing to the merge even if a stale seed
@@ -619,6 +626,8 @@ class ShardedDescent:
             alive = jnp.asarray(~self.dead)[:, None, None]
             ids = jnp.where(alive, ids, PAD_ID)
             sims = jnp.where(alive, sims, NEG_INF)
+            stats = jnp.where(alive, stats, 0)
+        self.last_hop_stats = np.asarray(jnp.sum(stats, axis=0))
         return _merge_shard_topk(ids, sims, k)
 
     def shard_beam(self, beam: int, k: int) -> int:
@@ -640,34 +649,36 @@ def g2l_local(g2l_row: np.ndarray, r: int) -> bool:
 
 
 def _per_shard(graph, rev, words, card, l2g, tomb, q_words, q_card, seeds,
-               *, k, beam, hops, kernel=False):
+               *, k, beam, hops, kernel=False, dma=False):
     """One shard's descent; results mapped back to global ids."""
-    ids, sims = descent_kernel(graph, rev, words, card,
-                               q_words, q_card, seeds,
-                               k=k, beam=beam, hops=hops, kernel=kernel,
-                               tomb=tomb)
+    ids, sims, stats = descent_kernel(graph, rev, words, card,
+                                      q_words, q_card, seeds,
+                                      k=k, beam=beam, hops=hops,
+                                      kernel=kernel, dma=dma, tomb=tomb)
     safe = jnp.where(ids == PAD_ID, 0, ids)
-    return jnp.where(ids == PAD_ID, PAD_ID, l2g[safe]), sims
+    return jnp.where(ids == PAD_ID, PAD_ID, l2g[safe]), sims, stats
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "beam", "hops", "kernel", "tag"))
+                   static_argnames=("k", "beam", "hops", "kernel", "dma",
+                                    "tag"))
 def _vmapped_descent(l_graph, l_rev, l_words, l_card, l2g, l_tomb,
                      q_words, q_card, l_seeds, *, k, beam, hops,
-                     kernel=False, tag=None):
+                     kernel=False, dma=False, tag=None):
     """Single-device fallback: the shard axis is a vmap axis (the fused
     Pallas hop batches through its pallas_call batching rule)."""
     trace.bump(("query_wave_sharded", tag, l_graph.shape[0],
-                q_words.shape[0], k, beam, hops, kernel))
+                q_words.shape[0], k, beam, hops, kernel, dma))
     return jax.vmap(
         lambda g, r, w, c, m, t, s: _per_shard(
             g, r, w, c, m, t, q_words, q_card, s, k=k, beam=beam,
-            hops=hops, kernel=kernel)
+            hops=hops, kernel=kernel, dma=dma)
     )(l_graph, l_rev, l_words, l_card, l2g, l_tomb, l_seeds)
 
 
 @functools.lru_cache(maxsize=64)
-def _mesh_program(mesh, *, k, beam, hops, kernel=False, tag=None):
+def _mesh_program(mesh, *, k, beam, hops, kernel=False, dma=False,
+                  tag=None):
     """SPMD path: one shard per device, no collectives inside (the merge
     happens after the shard-parallel top-k, mirroring
     distributed_local_knn's reduce phase). Returns a jitted callable.
@@ -681,17 +692,19 @@ def _mesh_program(mesh, *, k, beam, hops, kernel=False, tag=None):
 
     def device_fn(g, r, w, c, m, t, qw, qc, s):
         trace.bump(("query_wave_sharded", tag, len(mesh.devices),
-                    qw.shape[0], k, beam, hops, kernel))
-        ids, sims = _per_shard(g[0], r[0], w[0], c[0], m[0], t[0],
-                               qw, qc, s[0],
-                               k=k, beam=beam, hops=hops, kernel=kernel)
-        return ids[None], sims[None]
+                    qw.shape[0], k, beam, hops, kernel, dma))
+        ids, sims, stats = _per_shard(g[0], r[0], w[0], c[0], m[0], t[0],
+                                      qw, qc, s[0],
+                                      k=k, beam=beam, hops=hops,
+                                      kernel=kernel, dma=dma)
+        return ids[None], sims[None], stats[None]
 
     in_specs = (P("shards", None, None), P("shards", None, None),
                 P("shards", None, None), P("shards", None),
                 P("shards", None), P("shards", None),
                 P(), P(), P("shards", None, None))
-    out_specs = (P("shards", None, None), P("shards", None, None))
+    out_specs = (P("shards", None, None), P("shards", None, None),
+                 P("shards", None, None))
     return jax.jit(shard_map(device_fn, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_rep=False))
 

@@ -106,7 +106,7 @@ def test_hop_counts_bounded_and_reduced():
     bi = np.stack([np.arange(i, i + B) % n for i in range(9)]).astype(np.int32)
     bs = -np.sort(-rng.random((9, B))).astype(np.float32)
     args = tuple(jnp.asarray(x) for x in (g, r, w, c, qw, qc, bi, bs))
-    ki, ks, nsc = ds_ops.descent_hop(*args, with_counts=True)
+    ki, ks, nsc, _, _ = ds_ops.descent_hop(*args, with_counts=True)
     nsc = np.asarray(nsc)
     total = B * (kg + kr)
     # Host-side truth: lanes not PAD and not already in the beam.

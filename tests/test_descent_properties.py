@@ -54,7 +54,7 @@ def test_hop_parity_on_arbitrary_inputs(data):
 
     args = tuple(jnp.asarray(x) for x in (g, r, w, c, qw, qc, bi, bs))
     ri, rs = ds_ref.descent_hop_ref(*args)
-    ki, ks, nsc = ds_ops.descent_hop(*args, with_counts=True)
+    ki, ks, nsc, _, _ = ds_ops.descent_hop(*args, with_counts=True)
     np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
     np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
     # The count never exceeds the unfused path's fixed scoring work, and

@@ -127,3 +127,52 @@ def test_minhash_kernel_matches_host_csr(small_ds):
         hashing.item_hashes(small_ds.items, seeds, 1024), small_ds.offsets)
     dev = mh_ops.dataset_minhash(small_ds, seeds, 1024)
     np.testing.assert_array_equal(dev, host)
+
+
+# -- interpret-mode configuration (kernels/config.py) -----------------------
+
+
+def test_interpret_flag_shared_by_all_kernel_packages():
+    """One switch, three packages: every kernel wrapper resolves its
+    ``interpret=`` through ``kernels.config.interpret_mode()`` — none
+    carries a private INTERPRET constant that could drift."""
+    import inspect
+
+    from repro.kernels import config
+    from repro.kernels.descent_score import ops as ds_ops
+
+    for mod in (ds_ops, gk_ops, mh_ops):
+        assert not hasattr(mod, "INTERPRET"), mod.__name__
+        assert getattr(mod, "config") is config, mod.__name__
+        assert "config.interpret_mode()" in inspect.getsource(mod), \
+            mod.__name__
+    # All three agree by construction: the shared resolver is the only
+    # source of the flag.
+    assert config.interpret_mode() in (True, False)
+
+
+def test_interpret_env_parsing(monkeypatch):
+    from repro.kernels import config
+
+    monkeypatch.setattr(config, "_override", None)
+    for raw, expect in [(None, True), ("1", True), ("yes", True),
+                        ("weird", True), ("0", False), ("false", False),
+                        ("No", False), (" OFF ", False)]:
+        if raw is None:
+            monkeypatch.delenv(config.ENV_VAR, raising=False)
+        else:
+            monkeypatch.setenv(config.ENV_VAR, raw)
+        assert config.interpret_mode() is expect, raw
+
+
+def test_interpret_override_beats_env(monkeypatch):
+    from repro.kernels import config
+
+    monkeypatch.setenv(config.ENV_VAR, "0")
+    config.set_interpret(True)
+    try:
+        assert config.interpret_mode() is True
+        config.set_interpret(None)  # back to env-driven
+        assert config.interpret_mode() is False
+    finally:
+        config.set_interpret(None)

@@ -124,15 +124,15 @@ def test_kernel_tomb_parity_and_suppression(index):
     bi, bs = descent_init(w, c, qw, qc, seeds, beam=12, tomb=tomb)
     assert not np.isin(np.asarray(bi), DEAD).any()
     ri, rs = ds_ref.descent_hop_ref(g, r, w, c, qw, qc, bi, bs, tomb=tomb)
-    ki, ks, nsc = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
-                                     tomb=tomb, with_counts=True)
+    ki, ks, nsc, _, _ = ds_ops.descent_hop(
+        g, r, w, c, qw, qc, bi, bs, tomb=tomb, with_counts=True)
     np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
     np.testing.assert_array_equal(np.asarray(rs), np.asarray(ks))
     assert not np.isin(np.asarray(ki), DEAD).any()
     # Dead candidate lanes retire BEFORE the estimator: the masked run
     # scores no more lanes than the unmasked one on the same beams.
-    _, _, nsc0 = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
-                                    with_counts=True)
+    _, _, nsc0, _, _ = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
+                                          with_counts=True)
     assert int(np.asarray(nsc).sum()) < int(np.asarray(nsc0).sum())
     # An all-live mask is bitwise a no-op (None synthesizes it).
     zi, zs = ds_ops.descent_hop(g, r, w, c, qw, qc, bi, bs,
